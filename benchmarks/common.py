@@ -1,0 +1,78 @@
+"""Shared benchmark substrate mirroring the paper's experimental setup (§4):
+
+  * corpora: synthetic FC / DB / CS clones (Figure 3 statistics), scaled by
+    BENCH_SCALE so the full suite runs in CI time;
+  * warm model: 12k SGD examples (paper: "the experiment begins with a
+    partially trained (warm) model (after 12k training examples)");
+  * SGD: Bottou-style decaying rate, hinge loss (linear SVM — §4 setup);
+  * norms: (p,q) = (2,2) for dense/l2 corpora, (inf,1) for text/l1 (§3.2).
+"""
+from __future__ import annotations
+
+import os
+import time
+from typing import Callable, Tuple
+
+import numpy as np
+
+from repro.core import HazyEngine, NaiveEngine, LinearModel, zero_model
+from repro.data import (citeseer_like, dblife_like, example_stream,
+                        forest_like, Corpus)
+
+BENCH_SCALE = float(os.environ.get("BENCH_SCALE", "0.1"))
+WARM_EXAMPLES = int(os.environ.get("BENCH_WARM", "12000"))
+
+_CORPORA = {}
+
+
+def corpus(name: str) -> Tuple[Corpus, Tuple[float, float]]:
+    """Returns (corpus, (p, q)). Cached across benchmarks."""
+    if name not in _CORPORA:
+        if name == "FC":
+            _CORPORA[name] = (forest_like(scale=BENCH_SCALE), (2.0, 2.0))
+        elif name == "DB":
+            _CORPORA[name] = (dblife_like(scale=BENCH_SCALE), (np.inf, 1.0))
+        elif name == "CS":
+            _CORPORA[name] = (citeseer_like(scale=BENCH_SCALE), (np.inf, 1.0))
+        else:
+            raise KeyError(name)
+    return _CORPORA[name]
+
+
+class BottouSGD:
+    """lr_t = lr0 / (1 + lr0 * lam * t) — the schedule of Bottou's svmsgd."""
+
+    def __init__(self, lr0: float = 0.02, lam: float = 1e-3):
+        self.lr0, self.lam, self.t = lr0, lam, 0
+
+    def step(self, model: LinearModel, f: np.ndarray, y: float) -> LinearModel:
+        self.t += 1
+        lr = self.lr0 / (1 + self.lr0 * self.lam * self.t)
+        z = float(f @ model.w - model.b)
+        g = -y if y * z < 1 else 0.0
+        w = model.w * (1 - lr * self.lam)
+        if g:
+            w = w - lr * g * f
+        return LinearModel(w.astype(np.float32), float(model.b - lr * (-g)))
+
+
+def warm_model(c: Corpus, sgd: BottouSGD, n: int = None, seed: int = 3):
+    n = n or WARM_EXAMPLES
+    stream = example_stream(c, seed=seed, label_noise=0.0)
+    model = zero_model(c.features.shape[1])
+    for _, f, y in (next(stream) for _ in range(n)):
+        model = sgd.step(model, f, y)
+    return model, stream
+
+
+def rate(fn: Callable[[], int], min_seconds: float = 0.5) -> Tuple[float, int]:
+    """Run fn (returns #ops) until min_seconds elapsed; return (ops/s, n)."""
+    t0 = time.perf_counter()
+    total = 0
+    while time.perf_counter() - t0 < min_seconds:
+        total += fn()
+    return total / (time.perf_counter() - t0), total
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    print(f"{name},{us_per_call:.2f},{derived}")

@@ -1,0 +1,99 @@
+"""Framework table: Pallas kernel tile-level accounting. On CPU we can't
+time TPU kernels; we report (a) interpret-mode correctness deltas vs ref
+and (b) the analytic bytes/FLOPs per tile that the BlockSpecs commit to —
+the quantities the §Roofline compute/memory terms are built from."""
+from __future__ import annotations
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+
+
+def main():
+    r = np.random.default_rng(0)
+
+    # eps_affine: bytes/row = 2*d (bf16 features) + 4 (eps) + 1 (label)
+    from repro.kernels.eps_affine.ops import eps_affine
+    from repro.kernels.eps_affine.ref import eps_affine_ref
+    n, d = 4096, 512
+    F = jnp.asarray(r.normal(size=(n, d)), jnp.bfloat16)
+    w = jnp.asarray(r.normal(size=d), jnp.float32)
+    b = jnp.float32(0.1)
+    t0 = time.perf_counter()
+    eps, lab, cnt = eps_affine(F, w, b, block_n=512, interpret=True)
+    dt = time.perf_counter() - t0
+    e_r, l_r, c_r = eps_affine_ref(F, w, b)
+    err = float(jnp.max(jnp.abs(eps - e_r)))
+    emit("kernel_eps_affine", dt * 1e6,
+         f"max_err={err:.2e};bytes_per_row={2*d+5};flops_per_row={2*d}")
+
+    # band_reclassify: HBM traffic ∝ cap rows, not n
+    from repro.kernels.band_reclassify.ops import band_reclassify
+    n, d, cap = 16384, 512, 2048
+    F = jnp.asarray(np.sort(r.normal(size=(n, d)), axis=0), jnp.bfloat16)
+    labels = jnp.asarray(r.integers(0, 2, n) * 2 - 1, jnp.int8)
+    t0 = time.perf_counter()
+    out = band_reclassify(F, labels, w, 0.0, 7000, 8500, cap=cap, block_n=512,
+                          interpret=True)
+    dt = time.perf_counter() - t0
+    emit("kernel_band_reclassify", dt * 1e6,
+         f"touched_rows={cap};total_rows={n};traffic_ratio={cap/n:.3f}")
+
+    # flash attention: causal block-skip => ~N^2/2 of full rectangle
+    from repro.kernels.flash_attention.ops import flash_attention
+    from repro.kernels.flash_attention.ref import flash_attention_ref
+    b_, s, nq, nkv, hd = 1, 512, 4, 2, 64
+    q = jnp.asarray(r.normal(size=(b_, s, nq, hd)), jnp.float32)
+    k = jnp.asarray(r.normal(size=(b_, s, nkv, hd)), jnp.float32)
+    v = jnp.asarray(r.normal(size=(b_, s, nkv, hd)), jnp.float32)
+    t0 = time.perf_counter()
+    o = flash_attention(q, k, v, block_q=128, block_k=128, interpret=True)
+    dt = time.perf_counter() - t0
+    ref = flash_attention_ref(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                              v.transpose(0, 2, 1, 3)).transpose(0, 2, 1, 3)
+    err = float(jnp.max(jnp.abs(o - ref)))
+    nb = s // 128
+    visited = nb * (nb + 1) // 2
+    emit("kernel_flash_attention", dt * 1e6,
+         f"max_err={err:.2e};blocks_visited={visited};blocks_full={nb*nb};"
+         f"flop_frac={visited/(nb*nb):.2f}")
+
+    # decode attention
+    from repro.kernels.decode_attention.ops import decode_attention
+    from repro.kernels.decode_attention.ref import decode_attention_ref
+    S = 4096
+    q1 = jnp.asarray(r.normal(size=(1, 1, 8, 64)), jnp.float32)
+    K = jnp.asarray(r.normal(size=(1, S, 2, 64)), jnp.float32)
+    V = jnp.asarray(r.normal(size=(1, S, 2, 64)), jnp.float32)
+    t0 = time.perf_counter()
+    o = decode_attention(q1, K, V, S - 1, block_s=512, interpret=True)
+    dt = time.perf_counter() - t0
+    ref = decode_attention_ref(q1[:, 0].reshape(1, 2, 4, 64), K, V, S - 1)
+    err = float(jnp.max(jnp.abs(o.reshape(1, 2, 4, 64) - ref)))
+    emit("kernel_decode_attention", dt * 1e6,
+         f"max_err={err:.2e};kv_bytes={S*2*64*2*K.dtype.itemsize}")
+
+    # wkv6: state stays VMEM-resident across the chunk grid
+    from repro.kernels.wkv6.ops import wkv6
+    from repro.kernels.wkv6.ref import wkv6_ref
+    b2, s2, H2, K2 = 1, 256, 2, 32
+    rr = jnp.asarray(r.normal(size=(b2, s2, H2, K2)), jnp.float32)
+    kk = jnp.asarray(r.normal(size=(b2, s2, H2, K2)), jnp.float32)
+    vv = jnp.asarray(r.normal(size=(b2, s2, H2, K2)), jnp.float32)
+    la = -jnp.exp(jnp.asarray(r.normal(size=(b2, s2, H2, K2)) * 0.5 - 2.0, jnp.float32))
+    u2 = jnp.asarray(r.normal(size=(H2, K2)), jnp.float32)
+    t0 = time.perf_counter()
+    o = wkv6(rr, kk, vv, la, u2, chunk=64, interpret=True)
+    dt = time.perf_counter() - t0
+    tr = lambda t: t.transpose(0, 2, 1, 3)
+    ref = wkv6_ref(tr(rr), tr(kk), tr(vv), tr(la), u2).transpose(0, 2, 1, 3)
+    err = float(jnp.max(jnp.abs(o - ref)))
+    emit("kernel_wkv6", dt * 1e6,
+         f"max_err={err:.2e};state_bytes_hbm=0;per_token_bytes={4*K2*4}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""Paper Fig. 4(B): lazy All Members throughput (scans/s) — naive vs hazy.
+Pattern: one update then one All-Members read, repeatedly (the lazy
+bottleneck is the read, which must catch the view up)."""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import BottouSGD, corpus, emit, warm_model
+from repro.core import HazyEngine, NaiveEngine
+
+
+def run_one(name: str, engine_kind: str, n_reads: int = 200):
+    c, (p, q) = corpus(name)
+    sgd = BottouSGD()
+    model, stream = warm_model(c, sgd)
+    if engine_kind == "naive":
+        eng = NaiveEngine(c.features, policy="lazy")
+    else:
+        eng = HazyEngine(c.features, p=p, q=q, policy="lazy")
+    eng.apply_model(model)
+    if isinstance(eng, HazyEngine):
+        eng.reorganize()
+    updates = [next(stream) for _ in range(n_reads)]
+    t0 = time.perf_counter()
+    count = 0
+    for _, f, y in updates:
+        model = sgd.step(model, f, y)
+        eng.apply_model(model)
+        count = eng.all_members()
+    dt = time.perf_counter() - t0
+    emit(f"fig4b_lazy_allmembers_{engine_kind}_{name}", dt / n_reads * 1e6,
+         f"scans/s={n_reads/dt:.1f};members={count}")
+    return n_reads / dt
+
+
+def main():
+    for name in ("FC", "DB", "CS"):
+        naive = run_one(name, "naive", n_reads=60)
+        hazy = run_one(name, "hazy")
+        emit(f"fig4b_speedup_{name}", 0.0, f"hazy/naive={hazy/naive:.1f}x")
+
+
+if __name__ == "__main__":
+    main()

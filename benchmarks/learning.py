@@ -1,0 +1,42 @@
+"""Paper Fig. 10: learning overhead + quality. SGD (incremental, ours) vs a
+full-batch subgradient solver (SVMLight stand-in), on FC/DB/CS clones:
+train-time and precision/recall on a held-out 10%."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import BottouSGD, corpus, emit
+from repro.core import (full_gradient_train, precision_recall, train_batch,
+                        zero_model)
+
+
+def main():
+    for name in ("FC", "DB", "CS"):
+        c, _ = corpus(name)
+        n = c.features.shape[0]
+        split = int(n * 0.9)
+        Ftr, Ytr = c.features[:split], c.labels[:split]
+        Fte, Yte = c.features[split:], c.labels[split:]
+
+        t0 = time.perf_counter()
+        m_sgd = train_batch(zero_model(c.features.shape[1]), Ftr[:20000],
+                            Ytr[:20000], lr=0.02, l2=1e-3, epochs=1)
+        dt_sgd = time.perf_counter() - t0
+        p1, r1 = precision_recall(m_sgd, Fte, Yte)
+
+        t0 = time.perf_counter()
+        m_fb = full_gradient_train(zero_model(c.features.shape[1]), Ftr[:20000],
+                                   Ytr[:20000], lr=0.5, l2=1e-3, iters=100)
+        dt_fb = time.perf_counter() - t0
+        p2, r2 = precision_recall(m_fb, Fte, Yte)
+
+        emit(f"fig10_sgd_{name}", dt_sgd * 1e6,
+             f"P={p1:.3f};R={r1:.3f};seconds={dt_sgd:.2f}")
+        emit(f"fig10_fullbatch_{name}", dt_fb * 1e6,
+             f"P={p2:.3f};R={r2:.3f};seconds={dt_fb:.2f};sgd_speedup={dt_fb/dt_sgd:.1f}x")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""Benchmark driver — one module per paper table/figure (DESIGN.md §7).
+Prints ``name,us_per_call,derived`` CSV. Scale with BENCH_SCALE (default
+0.1 of the paper's corpus sizes, so the suite finishes on one CPU core).
+"""
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+
+MODULES = [
+    "benchmarks.eager_update",      # Fig. 4(A)
+    "benchmarks.lazy_all_members",  # Fig. 4(B)
+    "benchmarks.single_entity",     # Fig. 5
+    "benchmarks.hybrid_buffer",     # Fig. 6(B)
+    "benchmarks.learning",          # Fig. 10
+    "benchmarks.scalability",       # Fig. 11(A)
+    "benchmarks.sensitivity",       # Fig. 12
+    "benchmarks.waters",            # Fig. 13
+    "benchmarks.kernel_bench",      # framework kernels
+]
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    for mod_name in MODULES:
+        if only and only not in mod_name:
+            continue
+        t0 = time.time()
+        try:
+            mod = __import__(mod_name, fromlist=["main"])
+            mod.main()
+            print(f"# {mod_name} done in {time.time()-t0:.1f}s", file=sys.stderr)
+        except Exception:
+            print(f"# {mod_name} FAILED", file=sys.stderr)
+            traceback.print_exc()
+            print(f"{mod_name}_FAILED,0,error")
+
+
+if __name__ == "__main__":
+    main()

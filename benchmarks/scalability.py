@@ -1,0 +1,40 @@
+"""Paper Fig. 11(A): eager-update throughput vs corpus size (scalability).
+Sizes scale the FC clone 1x/2x/4x (the paper's 1/2/4 GB synthetic sweep)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import BottouSGD, emit, warm_model
+from repro.core import HazyEngine, NaiveEngine
+from repro.data import forest_like
+
+
+def main():
+    base = 0.05
+    for mult in (1, 2, 4):
+        c = forest_like(scale=base * mult, seed=7)
+        sgd = BottouSGD()
+        model, stream = warm_model(c, sgd, n=6000)
+        for kind in ("hazy", "naive"):
+            eng = (HazyEngine(c.features, p=2.0, q=2.0, policy="eager")
+                   if kind == "hazy" else NaiveEngine(c.features, policy="eager"))
+            m = model.copy()
+            loc = BottouSGD()
+            loc.t = sgd.t
+            eng.apply_model(m)
+            if kind == "hazy":
+                eng.reorganize()
+            ups = [next(stream) for _ in range(200)]
+            t0 = time.perf_counter()
+            for _, f, y in ups:
+                m = loc.step(m, f, y)
+                eng.apply_model(m)
+            dt = time.perf_counter() - t0
+            emit(f"fig11a_scalability_{kind}_n{c.features.shape[0]}",
+                 dt / len(ups) * 1e6, f"updates/s={len(ups)/dt:.0f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,73 @@
+"""Paper Fig. 12: (A) feature-dimension sensitivity of lazy All Members
+(random features of App. B.5.3 scale d up); (B) multiclass eager updates
+vs number of classes (one-vs-all, App. C.3)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import BottouSGD, emit, warm_model
+from repro.core import HazyEngine, MulticlassView, NaiveEngine, RandomFeatures
+from repro.data import forest_like
+
+
+def feature_sensitivity():
+    c = forest_like(scale=0.02, seed=9)
+    for D in (64, 256, 1024):
+        rf = RandomFeatures(54, D, sigma=1.0, seed=0)
+        F = rf(c.features)
+        F /= np.maximum(np.linalg.norm(F, axis=1, keepdims=True), 1e-9)
+        for kind in ("hazy", "naive"):
+            sgd = BottouSGD()
+            from repro.core import zero_model
+            from repro.data import example_stream
+            stream = example_stream(c, seed=3, label_noise=0.0)
+            model = zero_model(D)
+            for _, f, y in (next(stream) for _ in range(3000)):
+                model = sgd.step(model, rf(f[None])[0] /
+                                 max(np.linalg.norm(rf(f[None])[0]), 1e-9), y)
+            eng = (HazyEngine(F, p=2.0, q=2.0, policy="lazy")
+                   if kind == "hazy" else NaiveEngine(F, policy="lazy"))
+            eng.apply_model(model)
+            if kind == "hazy":
+                eng.reorganize()
+            n_reads = 30
+            t0 = time.perf_counter()
+            for _ in range(n_reads):
+                eng.all_members()
+            dt = time.perf_counter() - t0
+            emit(f"fig12a_features_{kind}_d{D}", dt / n_reads * 1e6,
+                 f"scans/s={n_reads/dt:.1f}")
+
+
+def multiclass():
+    r = np.random.default_rng(0)
+    n, d = 20_000, 54
+    for k in (2, 4, 8):
+        centers = r.normal(size=(k, d)).astype(np.float32) * 3
+        cls = r.integers(0, k, n)
+        F = centers[cls] + r.normal(size=(n, d)).astype(np.float32)
+        F /= np.maximum(np.linalg.norm(F, axis=1, keepdims=True), 1e-9)
+        for engine in ("hazy", "naive"):
+            mv = MulticlassView(F, k, engine=engine, policy="eager", lr=0.05,
+                                p=2.0, q=2.0)
+            # warm
+            for i in r.integers(0, n, 500):
+                mv.insert_example(int(i), int(cls[i]))
+            updates = r.integers(0, n, 100)
+            t0 = time.perf_counter()
+            for i in updates:
+                mv.insert_example(int(i), int(cls[i]))
+            dt = time.perf_counter() - t0
+            emit(f"fig12b_multiclass_{engine}_k{k}", dt / len(updates) * 1e6,
+                 f"updates/s={len(updates)/dt:.0f}")
+
+
+def main():
+    feature_sensitivity()
+    multiclass()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Paper Fig. 5: Single Entity read rate (reads/s) for eager+lazy x
+{full-recompute ("od"), hybrid eps-map, materialized ("mm")}.
+15k uniformly random entity reads against a warm model (paper §4.2)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import BottouSGD, corpus, emit, warm_model
+from repro.core import HazyEngine
+
+
+def main():
+    n_reads = 15_000
+    for name in ("FC", "DB", "CS"):
+        c, (p, q) = corpus(name)
+        sgd = BottouSGD()
+        model, stream = warm_model(c, sgd)
+        eng = HazyEngine(c.features, p=p, q=q, policy="eager", buffer_frac=0.01)
+        eng.apply_model(model)
+        eng.reorganize()
+        for _, f, y in (next(stream) for _ in range(50)):  # drift the band open
+            model = sgd.step(model, f, y)
+            eng.apply_model(model)
+        r = np.random.default_rng(0)
+        ids = r.integers(0, c.features.shape[0], n_reads)
+
+        t0 = time.perf_counter()
+        for i in ids:  # "od": recompute from the feature vector every read
+            z = c.features[i] @ model.w - model.b
+        dt_od = time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        hows = {"water": 0, "buffer": 0, "disk": 0}
+        for i in ids:
+            _, how = eng.hybrid_label(int(i))
+            hows[how] += 1
+        dt_hy = time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        for i in ids:  # "mm": materialized label lookup
+            _ = eng.labels_sorted[eng.inv_perm[i]]
+        dt_mm = time.perf_counter() - t0
+
+        emit(f"fig5_single_entity_od_{name}", dt_od / n_reads * 1e6,
+             f"reads/s={n_reads/dt_od:.0f}")
+        emit(f"fig5_single_entity_hybrid_{name}", dt_hy / n_reads * 1e6,
+             f"reads/s={n_reads/dt_hy:.0f};water={hows['water']};buffer={hows['buffer']};disk={hows['disk']}")
+        emit(f"fig5_single_entity_mm_{name}", dt_mm / n_reads * 1e6,
+             f"reads/s={n_reads/dt_mm:.0f};hybrid/mm={dt_mm/dt_hy:.2f}")
+
+
+if __name__ == "__main__":
+    main()

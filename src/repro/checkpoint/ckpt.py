@@ -1,0 +1,153 @@
+"""Sharded checkpointing with atomic commits and resharding restore.
+
+Layout:  <dir>/step_<n>.tmp/  -> fsync'd leaves + manifest.json -> rename to
+<dir>/step_<n>/ (atomic commit: a crash mid-write never corrupts the latest
+complete checkpoint — the fault-tolerance contract the train loop relies on).
+
+Restore takes an *abstract* state (ShapeDtypeStructs with shardings) and
+`device_put`s each leaf with its target sharding — so a checkpoint written
+on one mesh restores onto any other mesh (elastic scaling path).
+
+At real multi-host scale each host writes only its addressable shards; this
+single-process container writes full arrays but keeps the same manifest
+format (`shard_id` field) so the layout is forward-compatible.
+"""
+from __future__ import annotations
+
+import json
+import os
+import queue
+import shutil
+import threading
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+_BF16 = "bfloat16"
+
+
+def _leafname(i: int) -> str:
+    return f"leaf_{i:05d}.npy"
+
+
+def save_checkpoint(directory: str, state, step: int) -> str:
+    """Synchronous atomic save. Returns the committed path."""
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(state)
+    manifest = {"step": step, "shard_id": 0, "leaves": []}
+    for i, (path, leaf) in enumerate(flat):
+        arr = np.asarray(jax.device_get(leaf))
+        dtype = str(leaf.dtype)
+        if dtype == _BF16:
+            arr = arr.view(np.uint16)
+        np.save(os.path.join(tmp, _leafname(i)), arr)
+        manifest["leaves"].append({
+            "path": jax.tree_util.keystr(path),
+            "dtype": dtype,
+            "shape": list(np.shape(arr)),
+            "file": _leafname(i),
+        })
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return final
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(directory)
+             if d.startswith("step_") and not d.endswith(".tmp")]
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(directory: str, abstract_state, step: Optional[int] = None):
+    """Restore onto the shardings carried by `abstract_state` (reshards as
+    needed — the elastic-scaling path)."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint under {directory}")
+    path = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(abstract_state)
+    by_path = {l["path"]: l for l in manifest["leaves"]}
+    leaves = []
+    for kpath, ab in flat:
+        key = jax.tree_util.keystr(kpath)
+        meta = by_path[key]
+        arr = np.load(os.path.join(path, meta["file"]))
+        if meta["dtype"] == _BF16:
+            import ml_dtypes
+            arr = arr.view(ml_dtypes.bfloat16)
+        sharding = getattr(ab, "sharding", None)
+        if sharding is not None:
+            leaves.append(jax.device_put(arr, sharding))
+        else:
+            leaves.append(jax.device_put(arr))
+    return jax.tree_util.tree_unflatten(treedef, leaves), manifest["step"]
+
+
+class AsyncCheckpointer:
+    """Background-thread checkpointing: the train loop hands off host copies
+    and keeps stepping while the previous save commits (compute/IO overlap)."""
+
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        self._q: "queue.Queue" = queue.Queue(maxsize=1)
+        self._err: Optional[BaseException] = None
+        self._t = threading.Thread(target=self._worker, daemon=True)
+        self._t.start()
+
+    def _worker(self):
+        while True:
+            item = self._q.get()
+            if item is None:
+                self._q.task_done()
+                return
+            state_host, step = item
+            try:
+                save_checkpoint(self.directory, state_host, step)
+                self._gc()
+            except BaseException as e:  # surfaced on next save()/close()
+                self._err = e
+            finally:
+                self._q.task_done()
+
+    def _gc(self):
+        steps = sorted(
+            int(d.split("_")[1]) for d in os.listdir(self.directory)
+            if d.startswith("step_") and not d.endswith(".tmp"))
+        for s in steps[: -self.keep]:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s:08d}"),
+                          ignore_errors=True)
+
+    def save(self, state, step: int):
+        if self._err:
+            raise self._err
+        # snapshot to host memory before releasing the device buffers
+        host = jax.tree_util.tree_map(lambda x: np.asarray(jax.device_get(x)), state)
+        self._q.put((host, step))  # blocks only if a save is already queued
+
+    def wait(self):
+        self._q.join()
+        if self._err:
+            raise self._err
+
+    def close(self):
+        self._q.put(None)
+        self._t.join(timeout=60)
+        if self._err:
+            raise self._err

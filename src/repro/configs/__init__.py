@@ -1,0 +1,2 @@
+from repro.configs.base import HazyConfig, ModelConfig, ShapeConfig, SHAPES, SMOKE_SHAPES
+from repro.configs.registry import ARCHS, cells, get_config, smoke_config, LONG_CTX_ARCHS

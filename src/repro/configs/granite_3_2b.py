@@ -1,0 +1,5 @@
+"""Exact assigned config for granite-3-2b (see registry for provenance)."""
+from repro.configs.registry import get_config, smoke_config
+
+CONFIG = get_config("granite-3-2b")
+SMOKE = smoke_config("granite-3-2b")

@@ -1,0 +1,5 @@
+"""Exact assigned config for qwen1.5-32b (see registry for provenance)."""
+from repro.configs.registry import get_config, smoke_config
+
+CONFIG = get_config("qwen1.5-32b")
+SMOKE = smoke_config("qwen1.5-32b")

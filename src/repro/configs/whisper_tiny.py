@@ -1,0 +1,5 @@
+"""Exact assigned config for whisper-tiny (see registry for provenance)."""
+from repro.configs.registry import get_config, smoke_config
+
+CONFIG = get_config("whisper-tiny")
+SMOKE = smoke_config("whisper-tiny")

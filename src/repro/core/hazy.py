@@ -1,0 +1,262 @@
+"""HAZY incremental classification-view maintenance (paper §3.2–3.5).
+
+Host-driven engine (NumPy): exact dynamic band sizes, measured costs — the
+faithful reproduction of the paper's single-node algorithm, used by the
+benchmarks (Fig. 4/5/6/11/12/13). The TPU-sharded twin lives in
+`core/sharded.py` (static band capacities, pjit/shard_map).
+
+Engine state (mirrors §3.2.2):
+  * F_sorted / eps_sorted / labels_sorted — the eps-clustered scratch table H
+  * perm / inv_perm — clustering permutation (B+-tree analogue) and the
+    hybrid eps-map (id → eps is `eps_sorted[inv_perm[id]]`, O(1))
+  * stored vs current model, Waters (lw/hw), Skiing accumulator
+
+Cost accounting: `cost_mode="measured"` uses wall time (paper's choice);
+"modeled" uses S·(band/n) for deterministic tests. `touch_ns` adds a
+per-tuple-touched penalty to emulate a slower storage tier (the paper's
+on-disk architecture) — 0 for main-memory mode.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.linear_model import LinearModel, zero_model
+from repro.core.skiing import Skiing, alpha_star
+from repro.core.waters import Waters, holder_M
+
+
+@dataclasses.dataclass
+class Stats:
+    rounds: int = 0
+    reorgs: int = 0
+    tuples_reclassified: int = 0
+    tuples_total_possible: int = 0
+    band_fraction_last: float = 0.0
+    incremental_seconds: float = 0.0
+    reorg_seconds: float = 0.0
+
+
+class HazyEngine:
+    """Eager/lazy incremental maintenance of one binary classification view."""
+
+    def __init__(self, features: np.ndarray, *, p: float = float("inf"),
+                 q: float = 1.0, alpha: float = 1.0, policy: str = "eager",
+                 cost_mode: str = "measured", touch_ns: float = 0.0,
+                 buffer_frac: float = 0.0):
+        assert policy in ("eager", "lazy")
+        self.F = np.ascontiguousarray(features, np.float32)
+        self.n, self.d = self.F.shape
+        self.policy = policy
+        self.cost_mode = cost_mode
+        self.touch_ns = touch_ns
+        self.M = holder_M(self.F, q)
+        self.waters = Waters(p=p, M=self.M)
+        self.model = zero_model(self.d)
+        self.stored = self.model.copy()
+        self.stats = Stats()
+        self.buffer_frac = buffer_frac
+        self._buffer_lo = 0
+        self._buffer_hi = 0
+        # initial organization (free S estimate)
+        t0 = time.perf_counter()
+        self._do_reorganize()
+        S0 = max(time.perf_counter() - t0, 1e-9)
+        # sigma = scan/S; estimate scan as a single pass over eps
+        t0 = time.perf_counter()
+        float(np.sum(self.eps_sorted))
+        scan = max(time.perf_counter() - t0, 1e-12)
+        self.sigma = min(1.0, scan / S0)
+        self.skiing = Skiing(S=S0, alpha=(alpha if alpha else alpha_star(self.sigma)))
+        self._pending: Optional[LinearModel] = None  # lazy: latest unapplied model
+
+    # ------------------------------------------------------------------
+    # Organization
+    # ------------------------------------------------------------------
+
+    def _do_reorganize(self):
+        eps = self.F @ self.model.w - self.model.b
+        self.perm = np.argsort(eps, kind="stable")
+        self.inv_perm = np.empty_like(self.perm)
+        self.inv_perm[self.perm] = np.arange(self.n)
+        self.eps_sorted = eps[self.perm]
+        self.F_sorted = self.F[self.perm]          # the clustering gather (dominant cost)
+        self.labels_sorted = np.where(self.eps_sorted >= 0, 1, -1).astype(np.int8)
+        self.pos_count = int(np.count_nonzero(self.labels_sorted == 1))
+        self.stored = self.model.copy()
+        self.waters.reset()
+        if self.buffer_frac:
+            B = max(1, int(self.buffer_frac * self.n))
+            boundary = int(np.searchsorted(self.eps_sorted, 0.0))
+            self._buffer_lo = max(0, boundary - B // 2)
+            self._buffer_hi = min(self.n, self._buffer_lo + B)
+
+    def reorganize(self):
+        t0 = time.perf_counter()
+        self._do_reorganize()
+        S = time.perf_counter() - t0 + self.touch_ns * 1e-9 * self.n
+        self.skiing.record_reorg(S)
+        self.stats.reorgs += 1
+        self.stats.reorg_seconds += S
+
+    # ------------------------------------------------------------------
+    # Incremental step (paper Fig. 2): reclassify only the water band
+    # ------------------------------------------------------------------
+
+    def _band(self) -> Tuple[int, int]:
+        lo = int(np.searchsorted(self.eps_sorted, self.waters.lw, side="left"))
+        hi = int(np.searchsorted(self.eps_sorted, self.waters.hw, side="right"))
+        return lo, hi
+
+    def _incremental_step(self) -> float:
+        """Reclassify the band under the *current* model. Returns cost."""
+        t0 = time.perf_counter()
+        lo, hi = self._band()
+        width = hi - lo
+        if width > 0:
+            z = self.F_sorted[lo:hi] @ self.model.w - self.model.b
+            new_lab = np.where(z >= 0, 1, -1).astype(np.int8)
+            old = self.labels_sorted[lo:hi]
+            self.pos_count += int(np.count_nonzero(new_lab == 1)) - int(np.count_nonzero(old == 1))
+            self.labels_sorted[lo:hi] = new_lab
+        wall = time.perf_counter() - t0 + self.touch_ns * 1e-9 * width
+        self.stats.tuples_reclassified += width
+        self.stats.tuples_total_possible += self.n
+        self.stats.band_fraction_last = width / max(1, self.n)
+        if self.cost_mode == "modeled":
+            return self.skiing.S * (width / max(1, self.n))
+        return wall
+
+    def apply_model(self, model: LinearModel):
+        """One round: the view must reflect `model` (eager) or remember it
+        (lazy). SKIING decides reorg-vs-incremental (Fig. 7: check first)."""
+        self.model = model.copy()
+        self.stats.rounds += 1
+        if self.policy == "lazy":
+            self._pending = self.model
+            return
+        if self.skiing.should_reorganize():
+            self.reorganize()
+        else:
+            self.waters.update(self.model, self.stored)
+            c = self._incremental_step()
+            self.skiing.record_incremental(c)
+            self.stats.incremental_seconds += c
+
+    def _lazy_catch_up(self):
+        if self._pending is None:
+            return
+        self.waters.update(self.model, self.stored)
+        lo, hi = self._band()
+        width = hi - lo
+        t0 = time.perf_counter()
+        if width:
+            z = self.F_sorted[lo:hi] @ self.model.w - self.model.b
+            new_lab = np.where(z >= 0, 1, -1).astype(np.int8)
+            old = self.labels_sorted[lo:hi]
+            self.pos_count += int(np.count_nonzero(new_lab == 1)) - int(np.count_nonzero(old == 1))
+            self.labels_sorted[lo:hi] = new_lab
+        self._pending = None
+        # lazy cost accounting (paper §3.4): waste = (N_R − N_+)/N_R · S
+        n_read = self.n - lo
+        waste = (n_read - self.pos_count) / max(1, n_read)
+        c = (time.perf_counter() - t0 + self.touch_ns * 1e-9 * width
+             if self.cost_mode == "measured" else self.skiing.S * max(0.0, waste))
+        self.stats.tuples_reclassified += width
+        self.stats.tuples_total_possible += self.n
+        if self.skiing.record_incremental(max(0.0, c)):
+            self.reorganize()
+
+    # ------------------------------------------------------------------
+    # Reads
+    # ------------------------------------------------------------------
+
+    def all_members(self) -> int:
+        """'How many entities with label 1?' (paper's All Members probe)."""
+        if self.policy == "lazy":
+            self._lazy_catch_up()
+        return self.pos_count
+
+    def members(self) -> np.ndarray:
+        if self.policy == "lazy":
+            self._lazy_catch_up()
+        return self.perm[self.labels_sorted == 1]
+
+    def label(self, entity_id: int) -> int:
+        if self.policy == "lazy":
+            self._lazy_catch_up()
+        return int(self.labels_sorted[self.inv_perm[entity_id]])
+
+    # ------------------------------------------------------------------
+    # Hybrid single-entity read (paper §3.5.2, Fig. 8)
+    # ------------------------------------------------------------------
+
+    def hybrid_label(self, entity_id: int) -> Tuple[int, str]:
+        """eps-map + waters + buffer; returns (label, how) where how ∈
+        {water, buffer, disk} for instrumentation."""
+        pos = self.inv_perm[entity_id]
+        e = self.eps_sorted[pos]
+        if e <= self.waters.lw:
+            return -1, "water"
+        if e >= self.waters.hw:
+            return 1, "water"
+        if self._buffer_lo <= pos < self._buffer_hi:
+            z = self.F_sorted[pos] @ self.model.w - self.model.b
+            return (1 if z >= 0 else -1), "buffer"
+        z = self.F[entity_id] @ self.model.w - self.model.b   # "go to disk"
+        if self.touch_ns:
+            time.sleep(self.touch_ns * 1e-9)
+        return (1 if z >= 0 else -1), "disk"
+
+    # ------------------------------------------------------------------
+
+    def band_fraction(self) -> float:
+        lo, hi = self._band()
+        return (hi - lo) / max(1, self.n)
+
+    def check_consistent(self) -> bool:
+        """Golden invariant: view == naive relabel under the current model
+        (after lazy catch-up)."""
+        if self.policy == "lazy":
+            self._lazy_catch_up()
+        truth = np.where(self.F_sorted @ self.model.w - self.model.b >= 0, 1, -1)
+        return bool(np.array_equal(truth.astype(np.int8), self.labels_sorted))
+
+
+class NaiveEngine:
+    """Naïve eager/lazy baselines (paper §2.2)."""
+
+    def __init__(self, features: np.ndarray, *, policy: str = "eager",
+                 touch_ns: float = 0.0):
+        self.F = np.ascontiguousarray(features, np.float32)
+        self.n, self.d = self.F.shape
+        self.policy = policy
+        self.touch_ns = touch_ns
+        self.model = zero_model(self.d)
+        self.labels = np.where(-self.model.b >= 0, 1, -1) * np.ones(self.n, np.int8)
+        self._relabel()
+
+    def _relabel(self):
+        z = self.F @ self.model.w - self.model.b
+        self.labels = np.where(z >= 0, 1, -1).astype(np.int8)
+        if self.touch_ns:
+            time.sleep(self.touch_ns * 1e-9 * self.n)
+
+    def apply_model(self, model: LinearModel):
+        self.model = model.copy()
+        if self.policy == "eager":
+            self._relabel()  # full scan + rewrite every update
+
+    def all_members(self) -> int:
+        if self.policy == "lazy":
+            self._relabel()  # scan and classify every tuple per read
+        return int(np.count_nonzero(self.labels == 1))
+
+    def label(self, entity_id: int) -> int:
+        if self.policy == "lazy":
+            z = self.F[entity_id] @ self.model.w - self.model.b
+            return 1 if z >= 0 else -1
+        return int(self.labels[entity_id])

@@ -1,0 +1,47 @@
+"""Multiclass classification via sequential one-versus-all binary views
+(paper App. B.5.4 / C.3). Each class keeps its own HAZY-maintained view;
+an update touches only the views whose model changed."""
+from __future__ import annotations
+
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.hazy import HazyEngine, NaiveEngine
+from repro.core.linear_model import LinearModel, sgd_step, zero_model
+
+
+class MulticlassView:
+    def __init__(self, features: np.ndarray, num_classes: int, *,
+                 engine: str = "hazy", policy: str = "eager", lr: float = 0.1,
+                 l2: float = 1e-4, alpha: float = 1.0,
+                 p: float = float("inf"), q: float = 1.0,
+                 cost_mode: str = "measured"):
+        self.F = np.asarray(features, np.float32)
+        self.k = num_classes
+        self.lr, self.l2 = lr, l2
+        self.models = [zero_model(self.F.shape[1]) for _ in range(num_classes)]
+        if engine == "hazy":
+            self.engines = [HazyEngine(self.F, p=p, q=q, alpha=alpha,
+                                       policy=policy, cost_mode=cost_mode)
+                            for _ in range(num_classes)]
+        else:
+            self.engines = [NaiveEngine(self.F, policy=policy)
+                            for _ in range(num_classes)]
+
+    def insert_example(self, entity_id: int, cls: int):
+        f = self.F[entity_id]
+        for c in range(self.k):
+            y = 1.0 if c == cls else -1.0
+            self.models[c] = sgd_step(self.models[c], f, y, lr=self.lr,
+                                      l2=self.l2, method="svm")
+            self.engines[c].apply_model(self.models[c])
+
+    def predict(self, entity_id: int) -> int:
+        """argmax over per-class margins (ties to one-vs-all labels)."""
+        f = self.F[entity_id]
+        scores = [f @ m.w - m.b for m in self.models]
+        return int(np.argmax(scores))
+
+    def class_counts(self) -> List[int]:
+        return [e.all_members() for e in self.engines]

@@ -1,0 +1,261 @@
+"""Pod-scale sharded HAZY view maintenance (jit/shard_map twin of hazy.py).
+
+Layout (DESIGN.md §2): entity rows sharded over ("pod","data"), feature dim
+over ("model",). All three maintenance steps are expressible with *zero
+cross-shard data movement* except a psum of per-shard eps partials over the
+model axis and scalar metric reductions:
+
+  * naive_update_step  — full eps recompute + relabel (the paper's naive
+                         eager baseline; memory-bound roofline anchor)
+  * hazy_update_step   — banded reclassify with a static capacity window
+                         (the paper's incremental step; bytes ∝ band)
+  * reorganize_step    — per-shard argsort + row gather (paper's re-sort;
+                         embarrassingly parallel — see DESIGN.md on why
+                         shard-local clustering preserves correctness)
+
+Static band capacity: jit needs static shapes, so the band is processed
+through a `cap`-row window per shard (cap = n_shard * cap_frac). The host
+wrapper checks the true width and triggers reorganization if the window
+overflows — SKIING would usually have reorganized long before that.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+class ShardedHazyState(NamedTuple):
+    F: jax.Array            # (n, d) bf16 — rows in shard-local eps-sorted order
+    eps: jax.Array          # (n,) f32  — stored-model eps (the eps-map)
+    labels: jax.Array       # (n,) int8
+    perm: jax.Array         # (n,) int32 — shard-local positions -> entity ids
+    w_stored: jax.Array     # (d,) f32
+    b_stored: jax.Array     # () f32
+    lw: jax.Array           # () f32
+    hw: jax.Array           # () f32
+
+
+def state_specs(n: int, d: int, mesh: Mesh, dtype=jnp.bfloat16):
+    """Abstract ShardedHazyState with shardings (dry-run inputs)."""
+    row_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    rows = P(row_axes)
+    rows_feat = P(row_axes, "model" if "model" in mesh.axis_names else None)
+    feat = P("model" if "model" in mesh.axis_names else None)
+
+    def sds(shape, dt, spec):
+        return jax.ShapeDtypeStruct(shape, dt, sharding=NamedSharding(mesh, spec))
+
+    return ShardedHazyState(
+        F=sds((n, d), dtype, rows_feat),
+        eps=sds((n,), jnp.float32, rows),
+        labels=sds((n,), jnp.int8, rows),
+        perm=sds((n,), jnp.int32, rows),
+        w_stored=sds((d,), jnp.float32, feat),
+        b_stored=sds((), jnp.float32, P()),
+        lw=sds((), jnp.float32, P()),
+        hw=sds((), jnp.float32, P()),
+    )
+
+
+def _row_axes(mesh: Mesh):
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _specs(mesh: Mesh):
+    rows = _row_axes(mesh)
+    model = "model" if "model" in mesh.axis_names else None
+    return P(rows, model), P(rows), P(model)
+
+
+# ---------------------------------------------------------------------------
+# Steps (built per mesh; call under `with mesh:` or pass to jit/lower)
+# ---------------------------------------------------------------------------
+
+def make_naive_update_step(mesh: Mesh):
+    pf, pr, pw = _specs(mesh)
+    model_ax = "model" if "model" in mesh.axis_names else None
+
+    def local(F, eps, labels, perm, w_s, b_s, lw, hw, w, b):
+        z = jnp.einsum("nd,d->n", F.astype(jnp.float32), w)
+        if model_ax:
+            z = jax.lax.psum(z, model_ax)
+        z = z - b
+        labels = jnp.where(z >= 0, 1, -1).astype(jnp.int8)
+        return labels
+
+    fn = jax.shard_map(
+        local, mesh=mesh,
+        in_specs=(pf, pr, pr, pr, pw, P(), P(), P(), pw, P()),
+        out_specs=pr)
+
+    def step(state: ShardedHazyState, w, b):
+        labels = fn(*state, w, b)
+        return state._replace(labels=labels)
+
+    return step
+
+
+def make_hazy_update_step(mesh: Mesh, n: int, cap_frac: float = 1 / 64):
+    """Banded incremental step. Returns (state', width_total)."""
+    pf, pr, pw = _specs(mesh)
+    model_ax = "model" if "model" in mesh.axis_names else None
+    rows = _row_axes(mesh)
+    n_shards = int(np.prod([mesh.shape[a] for a in rows])) if rows else 1
+    n_local = n // n_shards
+    cap = max(64, int(n_local * cap_frac))
+
+    def local(F, eps, labels, perm, w_s, b_s, lw, hw, w, b):
+        # Hölder waters were updated on the host (scalars); locate the band.
+        lo = jnp.searchsorted(eps, lw, side="left").astype(jnp.int32)
+        hi = jnp.searchsorted(eps, hw, side="right").astype(jnp.int32)
+        width = hi - lo
+        start = jnp.clip(lo, 0, jnp.maximum(0, eps.shape[0] - cap))
+        Fb = jax.lax.dynamic_slice(F, (start, 0), (cap, F.shape[1]))
+        z = jnp.einsum("nd,d->n", Fb.astype(jnp.float32), w)
+        if model_ax:
+            z = jax.lax.psum(z, model_ax)
+        z = z - b
+        new = jnp.where(z >= 0, 1, -1).astype(jnp.int8)
+        old = jax.lax.dynamic_slice(labels, (start,), (cap,))
+        idx = jnp.arange(cap) + start
+        in_band = (idx >= lo) & (idx < hi)
+        merged = jnp.where(in_band, new, old)
+        labels = jax.lax.dynamic_update_slice(labels, merged, (start,))
+        wsum, wmax = width, width
+        for ax in rows:
+            wsum = jax.lax.psum(wsum, ax)
+            wmax = jax.lax.pmax(wmax, ax)
+        return labels, wsum, wmax
+
+    fn = jax.shard_map(
+        local, mesh=mesh,
+        in_specs=(pf, pr, pr, pr, pw, P(), P(), P(), pw, P()),
+        out_specs=(pr, P(), P()))
+
+    def step(state: ShardedHazyState, w, b):
+        labels, wsum, wmax = fn(*state, w, b)
+        return state._replace(labels=labels), wsum, wmax
+
+    return step, cap
+
+
+def make_reorganize_step(mesh: Mesh):
+    """Per-shard sort by fresh eps + row gather; resets the stored model.
+
+    No collectives beyond the model-axis psum of eps partials: the
+    clustering is shard-local by design (DESIGN.md §2)."""
+    pf, pr, pw = _specs(mesh)
+    model_ax = "model" if "model" in mesh.axis_names else None
+
+    def local(F, eps, labels, perm, w_s, b_s, lw, hw, w, b):
+        z = jnp.einsum("nd,d->n", F.astype(jnp.float32), w)
+        if model_ax:
+            z = jax.lax.psum(z, model_ax)
+        z = z - b
+        order = jnp.argsort(z)
+        eps_new = z[order]
+        F_new = jnp.take(F, order, axis=0)
+        perm_new = jnp.take(perm, order)
+        labels_new = jnp.where(eps_new >= 0, 1, -1).astype(jnp.int8)
+        return F_new, eps_new, labels_new, perm_new
+
+    fn = jax.shard_map(
+        local, mesh=mesh,
+        in_specs=(pf, pr, pr, pr, pw, P(), P(), P(), pw, P()),
+        out_specs=(pf, pr, pr, pr))
+
+    def step(state: ShardedHazyState, w, b):
+        F, eps, labels, perm = fn(*state, w, b)
+        return ShardedHazyState(F, eps, labels, perm, w, b,
+                                jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32))
+
+    return step
+
+
+def make_all_members_step(mesh: Mesh):
+    pf, pr, pw = _specs(mesh)
+    rows = _row_axes(mesh)
+
+    def local(labels):
+        c = jnp.sum((labels == 1).astype(jnp.int32))
+        for ax in rows:
+            c = jax.lax.psum(c, ax)
+        return c
+
+    fn = jax.shard_map(local, mesh=mesh, in_specs=(pr,), out_specs=P())
+    return lambda state: fn(state.labels)
+
+
+# ---------------------------------------------------------------------------
+# Host-side driver (real runs; the Waters/Skiing control loop stays host-side
+# exactly as the paper's strategy is driven outside the storage engine)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ShardedHazy:
+    mesh: Mesh
+    n: int
+    d: int
+    M: float
+    p: float = 2.0
+    alpha: float = 1.0
+    cap_frac: float = 1 / 64
+
+    def __post_init__(self):
+        self._naive = jax.jit(make_naive_update_step(self.mesh))
+        hz, self.cap = make_hazy_update_step(self.mesh, self.n, self.cap_frac)
+        self._hazy = jax.jit(hz)
+        self._reorg = jax.jit(make_reorganize_step(self.mesh))
+        self._count = jax.jit(make_all_members_step(self.mesh))
+        from repro.core.skiing import Skiing
+        self.skiing = Skiing(S=1.0, alpha=self.alpha)
+        self.lw = 0.0
+        self.hw = 0.0
+
+    def init_state(self, F: np.ndarray) -> ShardedHazyState:
+        specs = state_specs(self.n, self.d, self.mesh, dtype=jnp.bfloat16)
+        put = lambda x, s: jax.device_put(x, s.sharding)
+        state = ShardedHazyState(
+            F=put(F.astype(np.float32), specs.F),
+            eps=put(np.zeros(self.n, np.float32), specs.eps),
+            labels=put(np.ones(self.n, np.int8), specs.labels),
+            perm=put(np.arange(self.n, dtype=np.int32), specs.perm),
+            w_stored=put(np.zeros(self.d, np.float32), specs.w_stored),
+            b_stored=put(np.zeros((), np.float32), specs.b_stored),
+            lw=put(np.zeros((), np.float32), specs.lw),
+            hw=put(np.zeros((), np.float32), specs.hw),
+        )
+        return self._reorg(state, jnp.zeros(self.d, jnp.float32), jnp.zeros((), jnp.float32))
+
+    def apply_model(self, state: ShardedHazyState, w, b) -> ShardedHazyState:
+        """One eager round under SKIING (modeled costs: bytes ∝ rows touched)."""
+        from repro.core.waters import vector_norm
+        if self.skiing.should_reorganize():
+            state = self._reorg(state, w, b)
+            self.skiing.record_reorg()
+            self.lw = self.hw = 0.0
+            return state
+        dw = vector_norm(np.asarray(w) - np.asarray(state.w_stored), self.p)
+        db = float(b) - float(state.b_stored)
+        self.lw = min(self.lw, -self.M * dw + db)
+        self.hw = max(self.hw, self.M * dw + db)
+        state, wsum, wmax = self._hazy(
+            state._replace(lw=jnp.float32(self.lw), hw=jnp.float32(self.hw)), w, b)
+        if int(wmax) > self.cap:
+            # capacity window overflowed on some shard: fall back to reorg
+            # (correctness preserved; SKIING would reorganize soon anyway)
+            state = self._reorg(state, w, b)
+            self.skiing.record_reorg()
+            self.lw = self.hw = 0.0
+            return state
+        self.skiing.record_incremental(int(wsum) / self.n)  # modeled cost
+        return state
+
+    def all_members(self, state) -> int:
+        return int(self._count(state))

@@ -1,0 +1,103 @@
+"""`ClassificationView` — the `CREATE CLASSIFICATION VIEW` abstraction.
+
+Ties together: a corpus of entities (raw features or an encoder feature
+function = any assigned backbone), an incrementally-trained linear model,
+and a HazyEngine per §3. Reads are always exact w.r.t. the current model —
+policy only moves *when* maintenance work happens (eager/lazy/hybrid).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Iterable, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.hazy import HazyEngine, NaiveEngine
+from repro.core.linear_model import LinearModel, sgd_step, zero_model
+
+
+class ClassificationView:
+    def __init__(self, entities: np.ndarray, *,
+                 feature_fn: Optional[Callable[[np.ndarray], np.ndarray]] = None,
+                 method: str = "svm", policy: str = "eager",
+                 norm: Tuple[float, float] = (float("inf"), 1.0),
+                 lr: float = 0.1, l2: float = 1e-4, alpha: float = 1.0,
+                 buffer_frac: float = 0.01, engine: str = "hazy",
+                 cost_mode: str = "measured", touch_ns: float = 0.0):
+        self.feature_fn = feature_fn
+        F = feature_fn(entities) if feature_fn is not None else entities
+        self.F = np.asarray(F, np.float32)
+        self._entities = entities
+        self.method = method
+        self.lr, self.l2 = lr, l2
+        self.model = zero_model(self.F.shape[1])
+        p, q = norm
+        self.hybrid = policy == "hybrid"
+        eng_policy = "eager" if self.hybrid else policy
+        if engine == "hazy":
+            self.engine = HazyEngine(self.F, p=p, q=q, alpha=alpha,
+                                     policy=eng_policy, cost_mode=cost_mode,
+                                     touch_ns=touch_ns,
+                                     buffer_frac=buffer_frac if self.hybrid else 0.0)
+        else:
+            self.engine = NaiveEngine(self.F, policy=eng_policy, touch_ns=touch_ns)
+        self.examples: list = []
+
+    # ------------------------------------------------------------------
+    # Updates ("INSERT INTO Example_Papers ...")
+    # ------------------------------------------------------------------
+
+    def insert_example(self, entity_id: Optional[int], label: float,
+                       feature: Optional[np.ndarray] = None):
+        f = self.F[entity_id] if feature is None else np.asarray(feature, np.float32)
+        self.examples.append((f, float(label)))
+        self.model = sgd_step(self.model, f, float(label), lr=self.lr,
+                              l2=self.l2, method=self.method)
+        self.engine.apply_model(self.model)
+
+    def insert_examples(self, ids: Sequence[int], labels: Sequence[float]):
+        for i, y in zip(ids, labels):
+            self.insert_example(i, y)
+
+    def retrain_from_scratch(self):
+        """Paper footnote 2: deletions/label-changes retrain non-incrementally."""
+        self.model = zero_model(self.F.shape[1])
+        for f, y in self.examples:
+            self.model = sgd_step(self.model, f, y, lr=self.lr, l2=self.l2,
+                                  method=self.method)
+        self.engine.apply_model(self.model)
+        if isinstance(self.engine, HazyEngine):
+            self.engine.reorganize()
+
+    def refresh_features(self, entities: Optional[np.ndarray] = None):
+        """Feature function (backbone) changed: recompute F and recluster."""
+        if entities is not None:
+            self._entities = entities
+        F = self.feature_fn(self._entities) if self.feature_fn else self._entities
+        self.F = np.asarray(F, np.float32)
+        kw = {}
+        if isinstance(self.engine, HazyEngine):
+            eng = self.engine
+            self.engine = HazyEngine(self.F, p=eng.waters.p,
+                                     alpha=eng.skiing.alpha, policy=eng.policy,
+                                     cost_mode=eng.cost_mode, touch_ns=eng.touch_ns,
+                                     buffer_frac=eng.buffer_frac)
+        else:
+            self.engine = NaiveEngine(self.F, policy=self.engine.policy)
+        self.engine.apply_model(self.model)
+
+    # ------------------------------------------------------------------
+    # Reads
+    # ------------------------------------------------------------------
+
+    def label(self, entity_id: int) -> int:
+        if self.hybrid:
+            lab, _ = self.engine.hybrid_label(entity_id)
+            return lab
+        return self.engine.label(entity_id)
+
+    def all_members(self) -> int:
+        return self.engine.all_members()
+
+    def members(self) -> np.ndarray:
+        return self.engine.members()

@@ -1,0 +1,64 @@
+"""Hölder low/high water machinery (paper §3.2.2, Lemma 3.1, Eq. 2).
+
+For stored model (w_s, b_s) and current model (w_j, b_j):
+
+    eps_high = M ||w_j − w_s||_p + (b_j − b_s)
+    eps_low  = −M ||w_j − w_s||_p + (b_j − b_s)
+    hw = max over rounds since s of eps_high;  lw = min of eps_low
+
+with M = max_t ||f(t)||_q, 1/p + 1/q = 1. Any tuple with stored
+eps ≥ hw is certainly positive under the current model; eps ≤ lw certainly
+negative; only eps ∈ (lw, hw) needs reclassification.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import numpy as np
+
+from repro.core.linear_model import LinearModel
+
+
+def vector_norm(x: np.ndarray, p: float) -> float:
+    if np.isinf(p):
+        return float(np.max(np.abs(x))) if x.size else 0.0
+    if p == 1.0:
+        return float(np.sum(np.abs(x)))
+    return float(np.sum(np.abs(x) ** p) ** (1.0 / p))
+
+
+def holder_M(F: np.ndarray, q: float) -> float:
+    """M = max row q-norm of the entity features."""
+    if np.isinf(q):
+        return float(np.max(np.abs(F)))
+    if q == 1.0:
+        return float(np.max(np.sum(np.abs(F), axis=1)))
+    return float(np.max(np.sum(np.abs(F) ** q, axis=1) ** (1.0 / q)))
+
+
+def eps_bounds(current: LinearModel, stored: LinearModel, M: float,
+               p: float) -> Tuple[float, float]:
+    """(eps_low, eps_high) of Lemma 3.1 for this round."""
+    dw = vector_norm(current.w - stored.w, p)
+    db = current.b - stored.b
+    return (-M * dw + db, M * dw + db)
+
+
+@dataclasses.dataclass
+class Waters:
+    """Running (lw, hw) per Eq. 2 — monotone between reorganizations."""
+    p: float
+    M: float
+    lw: float = 0.0
+    hw: float = 0.0
+
+    def reset(self):
+        self.lw = 0.0
+        self.hw = 0.0
+
+    def update(self, current: LinearModel, stored: LinearModel) -> Tuple[float, float]:
+        lo, hi = eps_bounds(current, stored, self.M, self.p)
+        self.lw = min(self.lw, lo)
+        self.hw = max(self.hw, hi)
+        return self.lw, self.hw

@@ -1,0 +1,3 @@
+from repro.data.lm import TokenStream
+from repro.data.corpora import (forest_like, dblife_like, citeseer_like,
+                                synthetic_corpus, example_stream, Corpus)

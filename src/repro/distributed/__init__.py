@@ -1,0 +1,4 @@
+from repro.distributed.compression import (compress_int8, decompress_int8,
+                                           make_compressed_grad_allreduce,
+                                           error_feedback_init)
+from repro.distributed.straggler import StragglerDetector, ShardAssigner

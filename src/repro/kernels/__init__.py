@@ -1,0 +1,16 @@
+"""Pallas TPU kernels for the hot loops.
+
+Each kernel is a subpackage with:
+  kernel.py — pl.pallas_call + explicit BlockSpec VMEM tiling (TPU target)
+  ops.py    — jit'd public wrapper (padding, GQA reshapes, interpret flag)
+  ref.py    — pure-jnp oracle used by the allclose test sweeps
+
+Kernels:
+  eps_affine       — eps = F·w − b fused with labeling + per-tile positive
+                     counts (paper's full-relabel / reorg eps pass)
+  band_reclassify  — incremental step: stream only the water-band tiles
+                     HBM→VMEM and relabel in place (paper's core saving)
+  flash_attention  — causal GQA flash attention forward (backbone hot spot)
+  decode_attention — single-token GQA attention over a long KV cache
+  wkv6             — RWKV-6 chunked WKV recurrence (state resident in VMEM)
+"""

@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for band_reclassify (dynamic-slice formulation)."""
+import jax
+import jax.numpy as jnp
+
+
+def band_reclassify_ref(F_sorted, labels, w, b, start_block, width, *,
+                        cap: int, block_n: int):
+    n, d = F_sorted.shape
+    start = start_block * block_n
+    Fb = jax.lax.dynamic_slice(F_sorted, (start, 0), (cap, d))
+    eps = jnp.einsum("nd,d->n", Fb.astype(jnp.float32), w.astype(jnp.float32)) - b
+    new = jnp.where(eps >= 0, 1, -1).astype(jnp.int8)[:, None]
+    old = jax.lax.dynamic_slice(labels, (start, 0), (cap, 1))
+    in_band = (jnp.arange(cap) < width)[:, None]
+    merged = jnp.where(in_band, new, old)
+    return jax.lax.dynamic_update_slice(labels, merged, (start, 0))

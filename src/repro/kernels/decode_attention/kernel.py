@@ -1,0 +1,88 @@
+"""Single-token GQA decode attention over a long KV cache (Pallas TPU).
+
+Grid (b, nkv, s_blocks): each program block holds the q-head *group* for one
+kv head (GQA handled by layout, zero KV duplication) and one KV-sequence
+tile; the online-softmax state lives in VMEM scratch. The valid-length mask
+comes from a scalar-prefetch cache index, so one compiled kernel serves
+every decode position (flash-decoding on the sequence axis is the `model`-
+mesh sharding of the caller — inside a shard this kernel streams its local
+KV tile range).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(idx_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+                   *, scale: float, block_s: int):
+    isb = pl.program_id(2)
+    n_blocks = pl.num_programs(2)
+
+    @pl.when(isb == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)            # (group, hd)
+    k = k_ref[0, :, 0].astype(jnp.float32)         # (bs, hd)
+    v = v_ref[0, :, 0].astype(jnp.float32)         # (bs, hd)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale  # (group, bs)
+    pos = isb * block_s + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(pos <= idx_ref[0], s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + p @ v
+    m_ref[...] = m_new
+
+    @pl.when(isb == n_blocks - 1)
+    def _write():
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "interpret"))
+def decode_attention(q, k, v, cache_index, *, block_s: int = 512,
+                     interpret: bool = False):
+    """q: (b, nkv, group, hd); k/v: (b, S, nkv, hd); cache_index: () i32.
+
+    Returns (b, nkv, group, hd)."""
+    b, nkv, group, hd = q.shape
+    S = k.shape[1]
+    assert S % block_s == 0
+    scale = hd ** -0.5
+    grid = (b, nkv, S // block_s)
+    kernel = functools.partial(_decode_kernel, scale=scale, block_s=block_s)
+    idx = cache_index.reshape(1).astype(jnp.int32)
+
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 1, group, hd), lambda ib, ik, isb, s_: (ib, ik, 0, 0)),
+                pl.BlockSpec((1, block_s, 1, hd), lambda ib, ik, isb, s_: (ib, isb, ik, 0)),
+                pl.BlockSpec((1, block_s, 1, hd), lambda ib, ik, isb, s_: (ib, isb, ik, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, group, hd),
+                                   lambda ib, ik, isb, s_: (ib, ik, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((group, 1), jnp.float32),
+                pltpu.VMEM((group, 1), jnp.float32),
+                pltpu.VMEM((group, hd), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, nkv, group, hd), q.dtype),
+        interpret=interpret,
+    )(idx, q, k, v)

@@ -1,0 +1,22 @@
+"""Public wrapper for decode attention: (b, 1, nq, hd) model layout in/out."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention.kernel import decode_attention as _kernel
+from repro.kernels.decode_attention.ref import decode_attention_ref
+
+
+def decode_attention(q, k_cache, v_cache, cache_index, *, block_s: int = 512,
+                     interpret: bool = False):
+    """q: (b, 1, nq, hd); caches: (b, S, nkv, hd). Returns (b, 1, nq, hd)."""
+    b, one, nq, hd = q.shape
+    nkv = k_cache.shape[2]
+    group = nq // nkv
+    S = k_cache.shape[1]
+    bs = min(block_s, S)
+    qg = q[:, 0].reshape(b, nkv, group, hd)
+    out = _kernel(qg, k_cache, v_cache, jnp.asarray(cache_index, jnp.int32),
+                  block_s=bs, interpret=interpret)
+    return out.reshape(b, 1, nq, hd)

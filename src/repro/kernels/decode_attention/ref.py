@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for decode attention."""
+import jax
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q, k, v, cache_index):
+    """q: (b, nkv, group, hd); k/v: (b, S, nkv, hd)."""
+    b, nkv, group, hd = q.shape
+    S = k.shape[1]
+    logits = jnp.einsum("bngd,bsnd->bngs", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * hd ** -0.5
+    valid = (jnp.arange(S) <= cache_index)[None, None, None]
+    logits = jnp.where(valid, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bngs,bsnd->bngd", probs, v.astype(jnp.float32)).astype(q.dtype)

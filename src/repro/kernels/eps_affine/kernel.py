@@ -1,0 +1,58 @@
+"""eps_affine Pallas kernel: eps = F @ w − b, fused sign + positive count.
+
+This is the paper's relabel-everything pass (naive eager update / the eps
+recompute inside reorganization). It is purely memory-bound (2 flops per
+feature byte), so the kernel's job is to stream F through VMEM in
+MXU-aligned (block_n × d) tiles exactly once, producing all three outputs
+in one pass: eps (fp32), labels (int8), per-tile positive counts (int32 —
+reduced by the wrapper; keeping the reduction in-kernel avoids a second
+pass over eps for the paper's All-Members counter).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _eps_kernel(w_ref, b_ref, f_ref, eps_ref, lab_ref, cnt_ref):
+    f = f_ref[...].astype(jnp.float32)          # (bn, d)
+    w = w_ref[...].astype(jnp.float32)          # (1, d)
+    eps = jnp.sum(f * w, axis=1, keepdims=True) - b_ref[0, 0]   # (bn, 1)
+    eps_ref[...] = eps
+    lab = jnp.where(eps >= 0, 1, -1).astype(jnp.int8)
+    lab_ref[...] = lab
+    cnt_ref[0, 0] = jnp.sum((eps >= 0).astype(jnp.int32))
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def eps_affine(F, w, b, *, block_n: int = 512, interpret: bool = False):
+    """F: (n, d) [n % block_n == 0, d % 128 == 0 for TPU]; w: (d,); b: ().
+
+    Returns (eps (n,) f32, labels (n,) int8, pos_count () i32)."""
+    n, d = F.shape
+    assert n % block_n == 0, (n, block_n)
+    grid = (n // block_n,)
+    eps, lab, cnt = pl.pallas_call(
+        _eps_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, d), lambda i: (0, 0)),          # w broadcast
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),          # b broadcast
+            pl.BlockSpec((block_n, d), lambda i: (i, 0)),    # F tile
+        ],
+        out_specs=[
+            pl.BlockSpec((block_n, 1), lambda i: (i, 0)),
+            pl.BlockSpec((block_n, 1), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, 1), jnp.float32),
+            jax.ShapeDtypeStruct((n, 1), jnp.int8),
+            jax.ShapeDtypeStruct((grid[0], 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(w[None, :], b.reshape(1, 1), F)
+    return eps[:, 0], lab[:, 0], jnp.sum(cnt)

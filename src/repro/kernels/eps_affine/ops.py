@@ -1,0 +1,26 @@
+"""Public wrapper for eps_affine: pads n to the tile size, d to lanes."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.eps_affine.kernel import eps_affine as _kernel
+from repro.kernels.eps_affine.ref import eps_affine_ref
+
+
+def eps_affine(F, w, b, *, block_n: int = 512, interpret: bool = False):
+    n, d = F.shape
+    dp = -(-d // 128) * 128
+    npad = -(-n // block_n) * block_n
+    if dp != d:
+        F = jnp.pad(F, ((0, 0), (0, dp - d)))
+        w = jnp.pad(w, (0, dp - d))
+    if npad != n:
+        F = jnp.pad(F, ((0, npad - n), (0, 0)))
+    b = jnp.asarray(b, jnp.float32)
+    eps, lab, cnt = _kernel(F, w, b, block_n=block_n, interpret=interpret)
+    eps, lab = eps[:n], lab[:n]
+    # padded rows contribute eps = −b; correct the fused count
+    if npad != n:
+        cnt = cnt - jnp.sum((jnp.zeros(npad - n) - b >= 0).astype(jnp.int32))
+    return eps, lab, cnt

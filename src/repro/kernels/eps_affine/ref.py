@@ -1,0 +1,8 @@
+"""Pure-jnp oracle for eps_affine."""
+import jax.numpy as jnp
+
+
+def eps_affine_ref(F, w, b):
+    eps = jnp.einsum("nd,d->n", F.astype(jnp.float32), w.astype(jnp.float32)) - b
+    labels = jnp.where(eps >= 0, 1, -1).astype(jnp.int8)
+    return eps, labels, jnp.sum((eps >= 0).astype(jnp.int32))

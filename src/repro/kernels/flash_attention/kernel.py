@@ -1,0 +1,88 @@
+"""Causal GQA flash-attention forward (Pallas TPU).
+
+Grid (b, h, q_blocks, kv_blocks), kv innermost → sequential online-softmax
+accumulation in VMEM scratch (m, l, acc). Causality is *block-skipped*:
+kv blocks strictly above the diagonal never touch VMEM or the MXU, so
+FLOPs/bytes ≈ N²/2, matching the roofline accounting used in §Perf.
+GQA is handled in the k/v index maps (kv head = q head // group) — no
+repeated-KV materialization anywhere.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  scale: float, block_q: int, block_k: int):
+    iq, ik = pl.program_id(2), pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(ik <= iq)  # causal block skip
+    def _accum():
+        q = q_ref[0, 0].astype(jnp.float32)         # (bq, hd)
+        k = k_ref[0, 0].astype(jnp.float32)         # (bk, hd)
+        v = v_ref[0, 0].astype(jnp.float32)         # (bk, hd)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale
+        # causal mask — only the diagonal block needs it
+        rows = jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+        cols = jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+        mask = (rows + iq * block_q) >= (cols + ik * block_k)
+        s = jnp.where(jnp.logical_or(ik < iq, mask), s, NEG_INF)
+
+        m_prev = m_ref[...]                          # (bq, 1)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + p @ v
+        m_ref[...] = m_new
+
+    @pl.when(ik == iq)  # last contributing block for this q block
+    def _write():
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_q", "block_k", "interpret"))
+def flash_attention(q, k, v, *, block_q: int = 256, block_k: int = 256,
+                    interpret: bool = False):
+    """q: (b, nq, s, hd); k/v: (b, nkv, s, hd); causal. Returns (b, nq, s, hd)."""
+    b, nq, s, hd = q.shape
+    nkv = k.shape[1]
+    assert nq % nkv == 0
+    group = nq // nkv
+    assert s % block_q == 0 and s % block_k == 0
+    scale = hd ** -0.5
+    grid = (b, nq, s // block_q, s // block_k)
+
+    kernel = functools.partial(_flash_kernel, scale=scale, block_q=block_q,
+                               block_k=block_k)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, hd), lambda ib, ih, iq, ik: (ib, ih, iq, 0)),
+            pl.BlockSpec((1, 1, block_k, hd), lambda ib, ih, iq, ik: (ib, ih // group, ik, 0)),
+            pl.BlockSpec((1, 1, block_k, hd), lambda ib, ih, iq, ik: (ib, ih // group, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, hd), lambda ib, ih, iq, ik: (ib, ih, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, nq, s, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,21 @@
+"""Public wrapper for the flash-attention kernel (layout + padding)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention as _kernel
+from repro.kernels.flash_attention.ref import flash_attention_ref
+
+
+def flash_attention(q, k, v, *, block_q: int = 256, block_k: int = 256,
+                    interpret: bool = False):
+    """q: (b, s, nq, hd) [model layout]; k/v: (b, s, nkv, hd). Causal."""
+    s = q.shape[1]
+    bq = min(block_q, s)
+    bk = min(block_k, s)
+    q_t = q.transpose(0, 2, 1, 3)
+    k_t = k.transpose(0, 2, 1, 3)
+    v_t = v.transpose(0, 2, 1, 3)
+    out = _kernel(q_t, k_t, v_t, block_q=bq, block_k=bk, interpret=interpret)
+    return out.transpose(0, 2, 1, 3)

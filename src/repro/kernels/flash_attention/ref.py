@@ -1,0 +1,17 @@
+"""Pure-jnp oracle: causal GQA attention."""
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v):
+    b, nq, s, hd = q.shape
+    nkv = k.shape[1]
+    group = nq // nkv
+    k = jnp.repeat(k, group, axis=1)
+    v = jnp.repeat(v, group, axis=1)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * hd ** -0.5
+    mask = jnp.tril(jnp.ones((s, s), bool))
+    logits = jnp.where(mask[None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs, v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,22 @@
+"""Public wrapper: model layout (b, s, H, K) in/out, seq padding."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.wkv6.kernel import wkv6 as _kernel
+from repro.kernels.wkv6.ref import wkv6_ref
+
+
+def wkv6(r, k, v, la, u, *, chunk: int = 64, interpret: bool = False):
+    """r/k/v/la: (b, s, H, K); u: (H, K). Returns (b, s, H, K) f32.
+
+    The recurrence runs in f32 regardless of input dtype (the decay cumsum
+    compounds bf16 rounding over the sequence — same policy as the model's
+    wkv_chunked path)."""
+    b, s, H, K = r.shape
+    c = min(chunk, s)
+    pad = (-s) % c
+    tr = lambda t: jnp.pad(t.astype(jnp.float32),
+                           ((0, 0), (0, pad), (0, 0), (0, 0))).transpose(0, 2, 1, 3)
+    out = _kernel(tr(r), tr(k), tr(v), tr(la), u, chunk=c, interpret=interpret)
+    return out.transpose(0, 2, 1, 3)[:, :s]

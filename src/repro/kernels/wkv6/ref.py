@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the WKV6 kernel: the exact sequential recurrence."""
+import jax
+import jax.numpy as jnp
+
+
+def wkv6_ref(r, k, v, la, u):
+    """r/k/v/la: (b, H, s, K); u: (H, K). Exact per-token recurrence."""
+    b, H, s, K = r.shape
+
+    def step(S, inp):
+        rr, kk, vv, ll = inp                     # (b, H, K)
+        wkv = S + jnp.einsum("bhk,bhv->bhkv", u[None] * kk, vv)
+        o = jnp.einsum("bhk,bhkv->bhv", rr, wkv)
+        S = S * jnp.exp(ll)[..., None] + jnp.einsum("bhk,bhv->bhkv", kk, vv)
+        return S, o
+
+    xs = tuple(t.transpose(2, 0, 1, 3) for t in (r, k, v, la))
+    S0 = jnp.zeros((b, H, K, K), jnp.float32)
+    _, outs = jax.lax.scan(step, S0, xs)
+    return outs.transpose(1, 2, 0, 3)            # (b, H, s, K)

@@ -1,0 +1,62 @@
+"""Collective-traffic extraction from compiled HLO text.
+
+`cost_analysis()` has no collective-bytes entry, so we parse the compiled
+module: every `all-reduce` / `all-gather` / `reduce-scatter` / `all-to-all`
+/ `collective-permute` op contributes its *output* operand bytes (a
+reasonable per-device wire proxy: ring all-reduce moves ~2x, all-gather
+ingests (k-1)/k of the output — we report raw output bytes and note the
+convention in EXPERIMENTS.md). `-start`/`-done` pairs are counted once.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*((?:\([^)]*\)|\S+))\s+"                      # output shape (or tuple)
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start|-done)?\(")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-device bytes by collective kind (output-operand convention)."""
+    out: Dict[str, int] = defaultdict(int)
+    counts: Dict[str, int] = defaultdict(int)
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        shape_txt, op, phase = m.groups()
+        if phase == "-done":
+            continue  # counted at -start
+        out[op] += _shape_bytes(shape_txt)
+        counts[op + "_count"] += 1
+    out.update(counts)
+    out["total"] = sum(v for k, v in out.items()
+                       if not k.endswith("_count") and k != "total")
+    return dict(out)

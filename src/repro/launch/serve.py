@@ -1,0 +1,61 @@
+"""Serving launcher: classification-view service over an LM-encoded corpus
+(the paper's workload) — thin CLI over examples/serve_view.py logic, plus a
+pure-LM decode mode for the decode-shape configs.
+
+  PYTHONPATH=src python -m repro.launch.serve --mode view --requests 2000
+  PYTHONPATH=src python -m repro.launch.serve --mode decode --arch tinyllama-1.1b
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def serve_decode(arch: str, steps: int, batch: int, cache_len: int):
+    from repro.configs import smoke_config
+    from repro.models import build
+    from repro.models.steps import init_cache, init_train_state, make_decode_step
+    cfg = smoke_config(arch)
+    mdl = build(cfg)
+    state = init_train_state(mdl)
+    cache = init_cache(mdl, batch, cache_len)
+    dec = jax.jit(make_decode_step(mdl), donate_argnums=(1,))
+    tok = jnp.zeros((batch, 1), jnp.int32)
+    t0 = time.perf_counter()
+    for i in range(steps):
+        tok, cache = dec(state["params"], cache, tok, jnp.asarray(i, jnp.int32))
+    jax.block_until_ready(tok)
+    dt = time.perf_counter() - t0
+    print(f"[serve] decode: {steps} steps x batch {batch} -> "
+          f"{steps*batch/dt:.0f} tok/s ({dt/steps*1e3:.1f} ms/step)")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", default="view", choices=["view", "decode"])
+    ap.add_argument("--arch", default="tinyllama-1.1b")
+    ap.add_argument("--requests", type=int, default=2000)
+    ap.add_argument("--steps", type=int, default=64)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--cache-len", type=int, default=256)
+    args = ap.parse_args()
+    if args.mode == "decode":
+        serve_decode(args.arch, args.steps, args.batch, args.cache_len)
+    else:
+        import sys
+        sys.argv = ["serve_view", "--requests", str(args.requests)]
+        import importlib.util, os
+        path = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                            "examples", "serve_view.py")
+        spec = importlib.util.spec_from_file_location("serve_view", path)
+        mod = importlib.util.module_from_spec(spec)
+        spec.loader.exec_module(mod)
+        mod.main()
+
+
+if __name__ == "__main__":
+    main()

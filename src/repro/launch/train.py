@@ -1,0 +1,121 @@
+"""Production training launcher.
+
+Wires together: config registry, production/elastic mesh, sharded train
+state, deterministic sharded data, async checkpointing, straggler
+detection, and signal-based preemption handling (SIGTERM → synchronous
+checkpoint → clean exit → relaunch resumes).
+
+On this CPU container you run reduced configs:
+  PYTHONPATH=src python -m repro.launch.train --arch tinyllama-1.1b \
+      --smoke --steps 50 --ckpt-dir /tmp/ckpt
+On a real pod, drop --smoke and point --mesh at the production topology.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import signal
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced same-family config (CPU)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--mesh", default="host", choices=["host", "pod", "multipod"])
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args()
+
+    from repro.configs import get_config, smoke_config
+    from repro.data import TokenStream
+    from repro.models import build
+    from repro.models.steps import init_train_state, make_train_step
+    from repro.checkpoint import (AsyncCheckpointer, latest_step,
+                                  restore_checkpoint, save_checkpoint)
+    from repro.distributed import StragglerDetector
+    from repro.launch.mesh import make_host_mesh, make_production_mesh
+
+    cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    mdl = build(cfg)
+    if args.mesh == "host":
+        mesh = make_host_mesh((1, 1))
+    else:
+        mesh = make_production_mesh(multi_pod=args.mesh == "multipod")
+
+    ds = TokenStream(vocab_size=cfg.vocab_size, batch=args.batch,
+                     seq_len=args.seq, seed=0,
+                     shard=jax.process_index(), num_shards=jax.process_count())
+    step_fn = jax.jit(make_train_step(mdl, lr=args.lr, warmup=20,
+                                      total_steps=args.steps),
+                      donate_argnums=(0,))
+
+    state, start = init_train_state(mdl), 0
+    ckpt = None
+    if args.ckpt_dir:
+        ckpt = AsyncCheckpointer(args.ckpt_dir, keep=3)
+        if latest_step(args.ckpt_dir) is not None:
+            abstract = jax.tree_util.tree_map(
+                lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state)
+            state, start = restore_checkpoint(args.ckpt_dir, abstract)
+            print(f"[train] resumed at step {start}")
+
+    # preemption: checkpoint synchronously and exit 0 so the scheduler
+    # relaunches and the run resumes exactly
+    stop = {"flag": False}
+
+    def _handler(signum, frame):
+        stop["flag"] = True
+
+    signal.signal(signal.SIGTERM, _handler)
+
+    detector = StragglerDetector(n_workers=max(1, jax.process_count()))
+    m = None
+    with mesh:
+        t_last = time.perf_counter()
+        for i in range(start, args.steps):
+            batch = {k: jnp.asarray(v) for k, v in ds.batch_at(i).items()}
+            state, m = step_fn(state, batch)
+            if (i + 1) % args.log_every == 0:
+                jax.block_until_ready(m["loss"])
+                dt = time.perf_counter() - t_last
+                t_last = time.perf_counter()
+                tput = args.batch * args.seq * args.log_every / dt
+                print(f"[train] step {i+1} loss {float(m['loss']):.4f} "
+                      f"gnorm {float(m['grad_norm']):.3f} {tput:.0f} tok/s")
+                detector.observe({jax.process_index(): dt / args.log_every})
+            if ckpt and (i + 1) % args.ckpt_every == 0:
+                ckpt.save(state, i + 1)
+            if stop["flag"]:
+                print("[train] preemption signal: checkpointing + exiting")
+                if args.ckpt_dir:
+                    if ckpt:
+                        ckpt.wait()
+                        ckpt.close()
+                        ckpt = None
+                    save_checkpoint(args.ckpt_dir, state, i + 1)
+                sys.exit(0)
+    if ckpt:
+        ckpt.save(state, args.steps)
+        ckpt.wait()
+        ckpt.close()
+    if m is not None:
+        print(f"[train] done at step {args.steps}, "
+              f"final loss {float(m['loss']):.4f}")
+    else:
+        print(f"[train] nothing to do (already at step {start})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,335 @@
+"""Shared transformer layers: norms, RoPE, attention (GQA/MHA/cross), MLP.
+
+Sharding strategy (see DESIGN.md §5):
+  * activations: batch over ("pod","data"); attention heads over "model"
+    (q heads zero-padded in-step to `cfg.padded_heads` when the real head
+    count does not divide the model axis — math-exact: padded head outputs
+    are contracted against zero-padded `wo` rows);
+  * kv projections: replicated head count (GQA kv rarely divides tp), the
+    per-head kv tensors are small and broadcast;
+  * mlp hidden over "model"; weights FSDP over "data" ("embed" rule).
+
+Causal attention over long sequences uses a *python-unrolled chunked* form:
+query chunk i attends to keys[: (i+1)*chunk] — static shapes per chunk, and
+HLO FLOPs stay ~N²/2 (near causal-optimal) instead of the N² a fully masked
+rectangle would burn. This matters for the roofline compute term.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.params import ParamSpec, logical_sharding
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, scale, eps: float = 1e-5):
+    """No x-shaped f32 materialization: the sum-of-squares comes from a
+    bf16×bf16 dot with f32 accumulation, and the (b, s, 1) rescale factor is
+    applied in the input dtype. Outputs are bf16 regardless, so this loses
+    no output precision — and it prevents XLA from hoisting an f32 convert
+    of the entire scan residual stack (2x memory) in the backward pass."""
+    if x.dtype == jnp.float32:
+        var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+        return x * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+    d = x.shape[-1]
+    ss = jnp.einsum("...d,...d->...", x, x,
+                    preferred_element_type=jnp.float32)
+    rs = jax.lax.rsqrt(ss / d + eps)[..., None]
+    return x * rs.astype(x.dtype) * scale.astype(x.dtype)
+
+
+def layer_norm(x, scale, bias, eps: float = 1e-5):
+    d = x.shape[-1]
+    ones = jnp.ones((d,), x.dtype)
+    mu = (jnp.einsum("...d,d->...", x, ones,
+                     preferred_element_type=jnp.float32) / d)[..., None]
+    ss = (jnp.einsum("...d,...d->...", x, x,
+                     preferred_element_type=jnp.float32) / d)[..., None]
+    var = jnp.maximum(ss - jnp.square(mu), 0.0)
+    rs = jax.lax.rsqrt(var + eps)
+    y = (x - mu.astype(x.dtype)) * rs.astype(x.dtype)
+    return y * scale.astype(x.dtype) + bias.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float):
+    exps = jnp.arange(0, head_dim // 2, dtype=jnp.float32) / (head_dim // 2)
+    return theta ** -exps  # (hd/2,)
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., seq, heads, head_dim); positions: broadcastable to (..., seq)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., seq, hd/2)
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    y = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+def attention_params(cfg: ModelConfig, cross: bool = False) -> Params:
+    d, nq, nkv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    # MHA-padded: kv projections partition by (padded) output heads like q —
+    # head_dim stays whole, so no kv all-gather is ever needed (§Perf H3).
+    kv_axes = (("embed", "kv_heads", "head_dim") if cfg.mha_padded
+               else ("embed", "kv_heads", "kv_head_dim"))
+    p: Params = {
+        "wq": ParamSpec((d, nq, hd), cfg.param_dtype, ("embed", "heads", "head_dim"), "fan_in"),
+        "wk": ParamSpec((d, nkv, hd), cfg.param_dtype, kv_axes, "fan_in"),
+        "wv": ParamSpec((d, nkv, hd), cfg.param_dtype, kv_axes, "fan_in"),
+        "wo": ParamSpec((nq, hd, d), cfg.param_dtype, ("heads", "head_dim", "embed"), "fan_in"),
+    }
+    if cfg.qkv_bias and not cross:
+        p["bq"] = ParamSpec((nq, hd), cfg.param_dtype, ("heads", "head_dim"), "zeros")
+        p["bk"] = ParamSpec((nkv, hd), cfg.param_dtype, ("kv_heads", "head_dim"), "zeros")
+        p["bv"] = ParamSpec((nkv, hd), cfg.param_dtype, ("kv_heads", "head_dim"), "zeros")
+    if cfg.qk_norm and not cross:
+        p["q_norm"] = ParamSpec((hd,), cfg.param_dtype, (None,), "ones")
+        p["k_norm"] = ParamSpec((hd,), cfg.param_dtype, (None,), "ones")
+    return p
+
+
+def _kv_repeat_idx(cfg: ModelConfig) -> np.ndarray:
+    """Index of the kv head used by each (padded) q head."""
+    nq, nkv, npad = cfg.num_heads, cfg.num_kv_heads, cfg.padded_heads
+    if cfg.mha_padded:
+        return np.arange(npad, dtype=np.int32)  # kv padded alongside q
+    qpk = nq // nkv
+    idx = [min(j // qpk, nkv - 1) if j < nq else 0 for j in range(npad)]
+    return np.asarray(idx, dtype=np.int32)
+
+
+def _pad_heads_act(x, npad: int):
+    """Zero-pad the head axis (axis=-2) of an activation to `npad`."""
+    n = x.shape[-2]
+    if n == npad:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[-2] = (0, npad - n)
+    return jnp.pad(x, pad)
+
+
+def _pad_wo(wo, npad: int):
+    n = wo.shape[0]
+    if n == npad:
+        return wo
+    return jnp.pad(wo, ((0, npad - n), (0, 0), (0, 0)))
+
+
+def project_qkv(p: Params, cfg: ModelConfig, x, positions, *, rope: bool = True):
+    """Returns q (padded heads, sharded), k, v (true kv heads, replicated)."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if "bq" in p:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    if "q_norm" in p:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    if rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    q = _pad_heads_act(q, cfg.padded_heads)
+    q = logical_sharding(q, ("batch", None, "act_heads", None), None)
+    if cfg.mha_padded:
+        k = _pad_heads_act(k, cfg.padded_heads)
+        v = _pad_heads_act(v, cfg.padded_heads)
+        k = logical_sharding(k, ("batch", None, "act_heads", None), None)
+        v = logical_sharding(v, ("batch", None, "act_heads", None), None)
+    else:
+        k = logical_sharding(k, ("batch", None, "act_kv", None), None)
+        v = logical_sharding(v, ("batch", None, "act_kv", None), None)
+    return q, k, v
+
+
+def _sdpa(q, k, v, mask, scale):
+    """q: (b, sq, h, hd); k/v: (b, sk, h, hd); mask broadcast (b, 1, sq, sk)."""
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    if mask is not None:
+        logits = jnp.where(mask, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs.astype(v.dtype), v)
+
+
+def causal_attention(p: Params, cfg: ModelConfig, x, positions,
+                     chunk: int = 1024, return_kv: bool = False):
+    """Full causal self-attention (train / prefill)."""
+    b, s, _ = x.shape
+    q, k, v = project_qkv(p, cfg, x, positions)
+    if cfg.mha_padded:
+        k_rep, v_rep = k, v  # already padded + head-sharded; no repeat needed
+    else:
+        idx = _kv_repeat_idx(cfg)
+        k_rep = jnp.take(k, idx, axis=2)
+        v_rep = jnp.take(v, idx, axis=2)
+        k_rep = logical_sharding(k_rep, ("batch", None, "act_heads", None), None)
+        v_rep = logical_sharding(v_rep, ("batch", None, "act_heads", None), None)
+    scale = cfg.head_dim ** -0.5
+
+    if s <= chunk:
+        mask = jnp.tril(jnp.ones((s, s), bool))[None, None]
+        out = _sdpa(q, k_rep, v_rep, mask, scale)
+    else:
+        assert s % chunk == 0, (s, chunk)
+        outs = []
+        for i in range(s // chunk):
+            qi = q[:, i * chunk:(i + 1) * chunk]
+            kl = k_rep[:, : (i + 1) * chunk]
+            vl = v_rep[:, : (i + 1) * chunk]
+            qpos = jnp.arange(i * chunk, (i + 1) * chunk)
+            kpos = jnp.arange((i + 1) * chunk)
+            mask = (kpos[None, :] <= qpos[:, None])[None, None]
+            outs.append(_sdpa(qi, kl, vl, mask, scale))
+        out = jnp.concatenate(outs, axis=1)
+
+    wo = _pad_wo(p["wo"], cfg.padded_heads)
+    y = jnp.einsum("bshk,hkd->bsd", out, wo)
+    y = logical_sharding(y, ("batch", None, None), None)
+    if return_kv:
+        return y, (k, v)
+    return y
+
+
+def cache_axes(cfg: ModelConfig, long_ctx: bool = False):
+    """Logical axes of the KV cache (b, S, heads, hd). MHA-padded archs
+    shard heads on `model` (no seq sharding needed); GQA archs shard the
+    seq dim flash-decoding style."""
+    if cfg.mha_padded:
+        return ("batch", None, "act_heads", None)
+    return ("batch", "long_kv_seq" if long_ctx else "kv_seq", "act_kv", None)
+
+
+def decode_attention(p: Params, cfg: ModelConfig, x, cache_k, cache_v,
+                     cache_index, *, long_ctx: bool = False):
+    """Single-token decode. cache_{k,v}: (b, S, n, hd) per `cache_axes`.
+
+    Writes the new k/v at `cache_index`, computes flash-decoding-style
+    attention (partial softmax over any sharded seq dim is handled by GSPMD
+    max/sum all-reduces).
+    """
+    b, one, _ = x.shape
+    S = cache_k.shape[1]
+    positions = jnp.full((b, 1), cache_index, dtype=jnp.int32)
+    q, k, v = project_qkv(p, cfg, x, positions)
+    # (sharding propagates from the cache operands through the update —
+    # the cache layout is pinned by cache_specs / the caller's in_shardings)
+    cache_k = jax.lax.dynamic_update_slice(cache_k, k.astype(cache_k.dtype), (0, cache_index, 0, 0))
+    cache_v = jax.lax.dynamic_update_slice(cache_v, v.astype(cache_v.dtype), (0, cache_index, 0, 0))
+
+    scale = cfg.head_dim ** -0.5
+    if cfg.mha_padded:
+        kg, vg = cache_k, cache_v  # cache already in padded-head layout
+    else:
+        # (b, 1, P, hd) x (b, S, nkv, hd): repeat kv along the head dim
+        idx = _kv_repeat_idx(cfg)
+        kg = jnp.take(cache_k, idx, axis=2)  # gather along replicated kv heads
+        vg = jnp.take(cache_v, idx, axis=2)
+    kg = kg.astype(q.dtype)  # dequant (f8 KV cache) / no-op otherwise
+    vg = vg.astype(q.dtype)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, kg).astype(jnp.float32) * scale
+    valid = (jnp.arange(S) <= cache_index)[None, None, None, :]
+    logits = jnp.where(valid, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs.astype(vg.dtype), vg)
+    wo = _pad_wo(p["wo"], cfg.padded_heads)
+    y = jnp.einsum("bshk,hkd->bsd", out, wo)
+    return y, cache_k, cache_v
+
+
+def cross_attention(p: Params, cfg: ModelConfig, x, enc_kv):
+    """Decoder cross-attention (whisper). enc_kv = (k, v) precomputed."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    q = _pad_heads_act(q, cfg.padded_heads)
+    q = logical_sharding(q, ("batch", None, "act_heads", None), None)
+    k, v = enc_kv
+    if cfg.mha_padded:
+        kg, vg = k, v
+    else:
+        idx = _kv_repeat_idx(cfg)
+        kg = jnp.take(k, idx, axis=2)
+        vg = jnp.take(v, idx, axis=2)
+    out = _sdpa(q, kg, vg, None, cfg.head_dim ** -0.5)
+    wo = _pad_wo(p["wo"], cfg.padded_heads)
+    return jnp.einsum("bshk,hkd->bsd", out, wo)
+
+
+def encode_kv(p: Params, cfg: ModelConfig, enc_out):
+    k = jnp.einsum("bsd,dhk->bshk", enc_out, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", enc_out, p["wv"])
+    if cfg.mha_padded:
+        k = _pad_heads_act(k, cfg.padded_heads)
+        v = _pad_heads_act(v, cfg.padded_heads)
+        k = logical_sharding(k, ("batch", None, "act_heads", None), None)
+        v = logical_sharding(v, ("batch", None, "act_heads", None), None)
+    return k, v
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+def mlp_params(cfg: ModelConfig, gated: bool = True, d_ff: Optional[int] = None) -> Params:
+    d, ff = cfg.d_model, d_ff or cfg.d_ff
+    p: Params = {
+        "w_in": ParamSpec((d, ff), cfg.param_dtype, ("embed", "mlp"), "fan_in"),
+        "w_out": ParamSpec((ff, d), cfg.param_dtype, ("mlp", "embed"), "fan_in"),
+    }
+    if gated:
+        p["w_gate"] = ParamSpec((d, ff), cfg.param_dtype, ("embed", "mlp"), "fan_in")
+    return p
+
+
+def mlp(p: Params, x, act=jax.nn.silu):
+    h = jnp.einsum("bsd,df->bsf", x, p["w_in"])
+    h = logical_sharding(h, ("batch", None, "mlp"), None)
+    if "w_gate" in p:
+        g = jnp.einsum("bsd,df->bsf", x, p["w_gate"])
+        h = act(g) * h
+    else:
+        h = act(h)
+    y = jnp.einsum("bsf,fd->bsd", h, p["w_out"])
+    return logical_sharding(y, ("batch", None, None), None)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / head
+# ---------------------------------------------------------------------------
+
+def embed_params(cfg: ModelConfig) -> Params:
+    vp, d = cfg.padded_vocab(), cfg.d_model
+    return {
+        "embedding": ParamSpec((vp, d), cfg.param_dtype, ("vocab", "embed"), "normal"),
+        "lm_head": ParamSpec((vp, d), cfg.param_dtype, ("vocab", "embed"), "fan_in"),
+    }
+
+
+def embed(p: Params, tokens):
+    x = jnp.take(p["embedding"], tokens, axis=0)
+    return logical_sharding(x, ("batch", None, None), None)
+
+
+def unembed(p: Params, x):
+    logits = jnp.einsum("bsd,vd->bsv", x, p["lm_head"])
+    return logical_sharding(logits, ("batch", None, "vocab"), None)

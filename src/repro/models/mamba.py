@@ -1,0 +1,143 @@
+"""Mamba (selective SSM) block — used by the jamba hybrid architecture.
+
+Training uses a chunked selective scan: an outer `lax.scan` over sequence
+chunks carrying the SSM state, with a `lax.associative_scan` inside each
+chunk. This bounds the materialized (b, chunk, d_inner, d_state) tensor so
+long sequences fit HBM. Decode is the single-step recurrence.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.params import ParamSpec, logical_sharding
+
+Params = Dict[str, Any]
+
+
+def mamba_params(cfg: ModelConfig) -> Params:
+    d, di, ds, k, dtr = (cfg.d_model, cfg.mamba_d_inner, cfg.mamba_d_state,
+                         cfg.mamba_d_conv, cfg.dt_rank)
+    return {
+        "in_proj": ParamSpec((d, 2 * di), cfg.param_dtype, ("embed", "mamba_inner"), "fan_in"),
+        "conv_w": ParamSpec((k, di), cfg.param_dtype, ("conv", "mamba_inner"), "fan_in"),
+        "conv_b": ParamSpec((di,), cfg.param_dtype, ("mamba_inner",), "zeros"),
+        "x_proj": ParamSpec((di, dtr + 2 * ds), cfg.param_dtype, ("mamba_inner", None), "fan_in"),
+        "dt_proj": ParamSpec((dtr, di), cfg.param_dtype, (None, "mamba_inner"), "fan_in"),
+        "dt_bias": ParamSpec((di,), "float32", ("mamba_inner",), "zeros"),
+        "A_log": ParamSpec((di, ds), "float32", ("mamba_inner", "state"), "ones"),
+        "D": ParamSpec((di,), "float32", ("mamba_inner",), "ones"),
+        "out_proj": ParamSpec((di, d), cfg.param_dtype, ("mamba_inner", "embed"), "fan_in"),
+    }
+
+
+def _ssm_inputs(p: Params, cfg: ModelConfig, u):
+    """u: (b, s, di) post-conv activations. Returns dA, dBx, Cmat."""
+    ds, dtr = cfg.mamba_d_state, cfg.dt_rank
+    xdbl = jnp.einsum("bsi,ir->bsr", u, p["x_proj"]).astype(jnp.float32)
+    dt, B, C = jnp.split(xdbl, [dtr, dtr + ds], axis=-1)
+    dt = jax.nn.softplus(jnp.einsum("bsr,ri->bsi", dt, p["dt_proj"].astype(jnp.float32))
+                         + p["dt_bias"])                       # (b, s, di)
+    A = -jnp.exp(p["A_log"])                                    # (di, ds)
+    dA = jnp.exp(dt[..., None] * A)                             # (b, s, di, ds)
+    dBx = dt[..., None] * B[:, :, None, :] * u.astype(jnp.float32)[..., None]
+    return dA, dBx, C
+
+
+def _conv(p: Params, u, conv_state=None):
+    """Causal depthwise conv1d. u: (b, s, di)."""
+    k = p["conv_w"].shape[0]
+    if conv_state is None:
+        pad = jnp.zeros_like(u[:, : k - 1])
+    else:
+        pad = conv_state
+    ext = jnp.concatenate([pad, u], axis=1)                     # (b, s+k-1, di)
+    out = sum(ext[:, i: i + u.shape[1]] * p["conv_w"][i] for i in range(k))
+    new_state = ext[:, -(k - 1):]
+    return jax.nn.silu(out + p["conv_b"]), new_state
+
+
+def mamba(p: Params, cfg: ModelConfig, x, chunk: int = 256):
+    """Training/prefill forward. x: (b, s, d) -> (b, s, d)."""
+    b, s, _ = x.shape
+    di, ds = cfg.mamba_d_inner, cfg.mamba_d_state
+    xz = jnp.einsum("bsd,di->bsi", x, p["in_proj"])
+    xz = logical_sharding(xz, ("batch", None, "mamba_inner"), None)
+    u, z = jnp.split(xz, 2, axis=-1)
+    u, _ = _conv(p, u)
+
+    dA, dBx, C = _ssm_inputs(p, cfg, u)
+
+    if cfg.unroll_inner_scans:
+        # analysis mode: chunk size is FLOP-irrelevant (the scan is
+        # elementwise, ~0.01% of block matmul flops) — keep the unrolled
+        # python loop short so the analysis lower compiles quickly
+        chunk = max(chunk, s // 8)
+    chunk = min(chunk, s)
+    assert s % chunk == 0, (s, chunk)
+    n_chunks = s // chunk
+
+    # checkpoint the chunk body: associative_scan's backward otherwise saves
+    # ~log2(chunk) tree levels of (b, c, di, ds) per chunk (§Perf H2)
+    @functools.partial(jax.checkpoint,
+                       policy=jax.checkpoint_policies.nothing_saveable)
+    def scan_chunk(h, inputs):
+        dA_c, dBx_c, C_c = inputs                               # (b, c, di, ds)
+        # associative scan within the chunk: pairs (a, v) compose as
+        # (a2*a1, a2*v1 + v2)
+        def combine(l, r):
+            al, vl = l
+            ar, vr = r
+            return al * ar, vl * ar + vr
+        a_cum, v_cum = jax.lax.associative_scan(combine, (dA_c, dBx_c), axis=1)
+        hs = v_cum + a_cum * h[:, None]                         # (b, c, di, ds)
+        hs = logical_sharding(hs, ("batch", None, "mamba_inner", None), None)
+        # contract the state dim per chunk: the (b, s, di, ds) state history
+        # never materializes (16x memory; §Perf H2)
+        y_c = jnp.einsum("bcin,bcn->bci", hs, C_c)
+        return hs[:, -1], y_c
+
+    dA_c = dA.reshape(b, n_chunks, chunk, di, ds).swapaxes(0, 1)
+    dBx_c = dBx.reshape(b, n_chunks, chunk, di, ds).swapaxes(0, 1)
+    C_c = C.reshape(b, n_chunks, chunk, ds).swapaxes(0, 1)
+    h0 = jnp.zeros((b, di, ds), jnp.float32)
+    if cfg.unroll_inner_scans:
+        h, outs = h0, []
+        for ci in range(n_chunks):
+            h, y_i = scan_chunk(h, (dA_c[ci], dBx_c[ci], C_c[ci]))
+            outs.append(y_i)
+        y = jnp.stack(outs)
+    else:
+        _, y = jax.lax.scan(scan_chunk, h0, (dA_c, dBx_c, C_c))
+    y = y.swapaxes(0, 1).reshape(b, s, di)
+    y = logical_sharding(y, ("batch", None, "mamba_inner"), None)
+    y = y + p["D"] * u.astype(jnp.float32)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = jnp.einsum("bsi,id->bsd", y, p["out_proj"])
+    return logical_sharding(out, ("batch", None, None), None)
+
+
+def mamba_decode(p: Params, cfg: ModelConfig, x, state) -> Tuple[jnp.ndarray, Dict]:
+    """Single-token step. x: (b, 1, d); state = {"h": (b, di, ds), "conv": (b, k-1, di)}."""
+    xz = jnp.einsum("bsd,di->bsi", x, p["in_proj"])
+    u, z = jnp.split(xz, 2, axis=-1)
+    u, conv_state = _conv(p, u, state["conv"])
+    dA, dBx, C = _ssm_inputs(p, cfg, u)
+    h = state["h"] * dA[:, 0] + dBx[:, 0]                       # (b, di, ds)
+    y = jnp.einsum("bin,bn->bi", h, C[:, 0])[:, None]
+    y = y + p["D"] * u.astype(jnp.float32)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = jnp.einsum("bsi,id->bsd", y, p["out_proj"])
+    return out, {"h": h, "conv": conv_state}
+
+
+def mamba_state_specs(cfg: ModelConfig, batch: int):
+    di, ds, k = cfg.mamba_d_inner, cfg.mamba_d_state, cfg.mamba_d_conv
+    return {
+        "h": ParamSpec((batch, di, ds), "float32", ("batch", "mamba_inner", "state"), "zeros"),
+        "conv": ParamSpec((batch, k - 1, di), cfg.param_dtype, ("batch", None, "mamba_inner"), "zeros"),
+    }

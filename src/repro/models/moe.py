@@ -1,0 +1,96 @@
+"""GShard-style capacity-based Mixture-of-Experts (top-k dispatch einsums).
+
+Experts are sharded over the `model` mesh axis (16 experts <-> 16-way model
+axis on the production mesh). The dispatch/combine one-hot einsums are the
+*paper-faithful-to-GShard* baseline; their FLOP overhead is visible in the
+roofline MODEL_FLOPS/HLO_FLOPs ratio and is one of the hillclimb subjects
+(EXPERIMENTS.md §Perf: gather-based dispatch).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.params import ParamSpec, logical_sharding
+from repro.models import layers
+
+Params = Dict[str, Any]
+
+
+def moe_params(cfg: ModelConfig) -> Params:
+    d, ff, E = cfg.d_model, cfg.d_ff, cfg.num_experts
+    p: Params = {
+        "router": ParamSpec((d, E), "float32", ("embed", None), "fan_in"),
+        "we_in": ParamSpec((E, d, ff), cfg.param_dtype, ("experts", "expert_in", None), "fan_in"),
+        "we_gate": ParamSpec((E, d, ff), cfg.param_dtype, ("experts", "expert_in", None), "fan_in"),
+        "we_out": ParamSpec((E, ff, d), cfg.param_dtype, ("experts", None, "expert_in"), "fan_in"),
+    }
+    for i in range(cfg.num_shared_experts):
+        p[f"shared_{i}"] = layers.mlp_params(cfg)
+    return p
+
+
+def _capacity(cfg: ModelConfig, s: int) -> int:
+    c = int(s * cfg.num_experts_per_tok * cfg.moe_capacity_factor / cfg.num_experts)
+    return max(1, -(-c // 4) * 4) if s > 4 else max(1, c)
+
+
+def moe(p: Params, cfg: ModelConfig, x) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (b, s, d). Groups = sequences (b). Returns (y, aux_loss)."""
+    b, s, d = x.shape
+    E, k = cfg.num_experts, cfg.num_experts_per_tok
+    C = _capacity(cfg, s)
+
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)  # (b, s, E)
+
+    # Sequential top-k dispatch with per-expert capacity (GShard).
+    remaining = probs
+    counts = jnp.zeros((b, E), jnp.int32)
+    combine = jnp.zeros((b, s, E, C), jnp.float32)
+    gates_sum = jnp.zeros((b, s), jnp.float32)
+    first_choice_mask = None
+    for j in range(k):
+        gate = jnp.max(remaining, axis=-1)            # (b, s)
+        choice = jnp.argmax(remaining, axis=-1)        # (b, s)
+        onehot = jax.nn.one_hot(choice, E, dtype=jnp.float32)  # (b, s, E)
+        if j == 0:
+            first_choice_mask = onehot
+        # position of this token within its chosen expert's buffer
+        pos = jnp.cumsum(onehot, axis=1) - onehot + counts[:, None, :]  # (b, s, E)
+        pos_tok = jnp.sum(pos * onehot, axis=-1)       # (b, s)
+        fits = pos_tok < C
+        gate = jnp.where(fits, gate, 0.0)
+        pos_oh = jax.nn.one_hot(jnp.where(fits, pos_tok, C).astype(jnp.int32), C,
+                                dtype=jnp.float32)     # (b, s, C); overflow -> dropped
+        combine = combine + gate[..., None, None] * (onehot[..., :, None] * pos_oh[..., None, :])
+        gates_sum = gates_sum + gate
+        counts = counts + jnp.sum(onehot * fits[..., None], axis=1).astype(jnp.int32)
+        remaining = remaining * (1.0 - onehot)
+
+    # Renormalize combine weights over the selected experts.
+    combine = combine / jnp.maximum(gates_sum[..., None, None], 1e-9)
+    combine = logical_sharding(combine, ("batch", None, "experts", None), None)
+    dispatch = (combine > 0.0).astype(x.dtype)
+
+    xe = jnp.einsum("bsec,bsd->becd", dispatch, x)    # (b, E, C, d)
+    xe = logical_sharding(xe, ("batch", "experts", None, None), None)
+    h = jnp.einsum("becd,edf->becf", xe, p["we_in"])
+    g = jnp.einsum("becd,edf->becf", xe, p["we_gate"])
+    h = jax.nn.silu(g) * h
+    ye = jnp.einsum("becf,efd->becd", h, p["we_out"])
+    ye = logical_sharding(ye, ("batch", "experts", None, None), None)
+    y = jnp.einsum("becd,bsec->bsd", ye, combine.astype(x.dtype))
+    y = logical_sharding(y, ("batch", None, None), None)
+
+    for i in range(cfg.num_shared_experts):
+        y = y + layers.mlp(p[f"shared_{i}"], x)
+
+    # Switch-style load-balancing auxiliary loss.
+    me = jnp.mean(first_choice_mask, axis=(0, 1))      # fraction routed per expert
+    pe = jnp.mean(probs, axis=(0, 1))                  # mean router prob per expert
+    aux = E * jnp.sum(me * pe)
+    return y, aux

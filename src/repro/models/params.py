@@ -1,0 +1,193 @@
+"""Parameter descriptor system.
+
+Models are declared as pytrees of `ParamSpec` (shape, dtype, logical axes,
+init). From the same declaration we derive:
+  * `abstract_params`  — ShapeDtypeStruct tree (dry-run: no allocation),
+  * `init_params`      — materialized arrays (smoke tests / real training),
+  * `partition_specs`  — PartitionSpec tree via logical→mesh rules with
+                         divisibility fallback (non-divisible dim → replicated).
+
+The divisibility fallback is what makes one rule set serve whisper-tiny
+(6 heads) and dbrx (48 heads) alike.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    dtype: Any = jnp.bfloat16
+    axes: Tuple[Optional[str], ...] = ()
+    init: str = "normal"  # normal | zeros | ones | fan_in
+    scale: float = 1.0
+
+    def __post_init__(self):
+        assert len(self.axes) == len(self.shape), (self.shape, self.axes)
+
+
+def _is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def tree_map_specs(fn: Callable, tree):
+    return jax.tree_util.tree_map(fn, tree, is_leaf=_is_spec)
+
+
+def abstract_params(tree):
+    return tree_map_specs(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), tree
+    )
+
+
+def _path_seed(path: str, base: int) -> int:
+    h = hashlib.md5(f"{base}:{path}".encode()).digest()
+    return int.from_bytes(h[:4], "little")
+
+
+def init_params(tree, seed: int = 0):
+    """Materialize parameters deterministically (per-path derived seeds)."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree, is_leaf=_is_spec)
+    leaves = []
+    for path, spec in flat:
+        pstr = jax.tree_util.keystr(path)
+        key = jax.random.PRNGKey(_path_seed(pstr, seed))
+        if spec.init == "zeros":
+            v = jnp.zeros(spec.shape, spec.dtype)
+        elif spec.init == "ones":
+            v = jnp.ones(spec.shape, spec.dtype)
+        elif spec.init == "fan_in":
+            fan_in = spec.shape[0] if len(spec.shape) <= 2 else int(np.prod(spec.shape[:-1]))
+            std = spec.scale / max(1.0, float(fan_in)) ** 0.5
+            v = (jax.random.normal(key, spec.shape, jnp.float32) * std).astype(spec.dtype)
+        else:  # normal
+            v = (jax.random.normal(key, spec.shape, jnp.float32) * 0.02 * spec.scale).astype(spec.dtype)
+        leaves.append(v)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+# ---------------------------------------------------------------------------
+# Logical axis -> mesh axis rules
+# ---------------------------------------------------------------------------
+
+# Default "tp" rules: TP on `model`, FSDP on `data`, DP over `pod`+`data`.
+LOGICAL_RULES_TP: Dict[str, Tuple[str, ...]] = {
+    "vocab": ("model",),
+    "embed": ("data",),            # d_model: FSDP-sharded on weights
+    "heads": ("model",),
+    "kv_heads": (),                # GQA kv head count rarely divides tp; see kv_hd
+    "head_dim": (),
+    "kv_head_dim": ("model",),     # kv projections shard the head_dim instead
+    "mlp": ("model",),
+    "experts": ("model",),
+    "expert_in": ("data",),
+    "mamba_inner": ("model",),
+    "rwkv_heads": ("model",),
+    "layers": (),
+    "conv": (),
+    "state": (),
+    "batch": ("pod", "data"),
+    "act_heads": ("model",),
+    "act_kv": (),
+    "seq": (),
+    # Megatron-style sequence parallelism: the residual stream (and therefore
+    # the scan's saved per-layer stack) lives seq-sharded over the model axis;
+    # mixers/FFNs gather on entry and reduce-scatter on exit. Falls back to
+    # replicated automatically when seq doesn't divide (e.g. decode, s=1).
+    "seq_sp": ("model",),
+    "kv_seq": ("model",),          # decode KV cache: flash-decoding style
+    "long_kv_seq": ("data", "model"),
+    "entity": ("pod", "data"),     # hazy view rows
+    "feature": ("model",),         # hazy view feature dim
+    None: (),
+}
+
+# "fsdp" rules for tiny models: no TP; params fully sharded over (data, model),
+# batch over everything.
+LOGICAL_RULES_FSDP: Dict[str, Tuple[str, ...]] = dict(
+    LOGICAL_RULES_TP,
+    **{
+        "vocab": ("model",),
+        "embed": ("data",),
+        "heads": ("model",),
+        "mlp": ("model",),
+    },
+)
+
+RULE_SETS = {"tp": LOGICAL_RULES_TP, "fsdp": LOGICAL_RULES_FSDP}
+
+
+def resolve_axes(
+    logical: Tuple[Optional[str], ...],
+    shape: Tuple[int, ...],
+    mesh: Mesh,
+    rules: Dict[str, Tuple[str, ...]],
+) -> P:
+    """Map logical axes to a PartitionSpec, dropping non-divisible shardings."""
+    mesh_axes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    used = set()
+    out = []
+    for dim, name in zip(shape, logical):
+        cand = rules.get(name, ())
+        picked = []
+        size = 1
+        for ax in cand:
+            if ax not in mesh_axes or ax in used:
+                continue
+            if dim % (size * mesh_axes[ax]) == 0:
+                picked.append(ax)
+                size *= mesh_axes[ax]
+        for ax in picked:
+            used.add(ax)
+        if not picked:
+            out.append(None)
+        elif len(picked) == 1:
+            out.append(picked[0])
+        else:
+            out.append(tuple(picked))
+    return P(*out)
+
+
+def partition_specs(tree, mesh: Mesh, rule_set: str = "tp"):
+    rules = RULE_SETS[rule_set]
+    return tree_map_specs(
+        lambda s: resolve_axes(s.axes, s.shape, mesh, rules), tree
+    )
+
+
+def named_shardings(tree, mesh: Mesh, rule_set: str = "tp"):
+    return tree_map_specs(
+        lambda s: NamedSharding(mesh, resolve_axes(s.axes, s.shape, mesh, rules=RULE_SETS[rule_set])),
+        tree,
+    )
+
+
+def logical_sharding(x, logical: Sequence[Optional[str]], mesh: Optional[Mesh] = None,
+                     rule_set: str = "tp"):
+    """with_sharding_constraint by logical axes. No-op outside a mesh."""
+    if mesh is None:
+        mesh = current_mesh()
+    if mesh is None or mesh.empty:
+        return x
+    spec = resolve_axes(tuple(logical), x.shape, mesh, RULE_SETS[rule_set])
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def current_mesh() -> Optional[Mesh]:
+    """The mesh from the innermost `with mesh:` context, if any."""
+    try:
+        from jax._src import mesh as mesh_lib
+        m = mesh_lib.thread_resources.env.physical_mesh
+        if m is not None and not m.empty:
+            return m
+    except Exception:
+        pass
+    return None

@@ -1,0 +1,227 @@
+"""RWKV-6 "Finch" block (attention-free, data-dependent decay).
+
+Time-mix uses the chunked-parallel WKV form: within a chunk the pairwise
+decay matrix `M[t,i] = exp(a[t-1] - a[i])` (a = cumulative log-decay, always
+<= 1) is factored into `(r ⊙ exp(a)) · (k ⊙ exp(-a))` with exponents
+clipped at ±40. The factorization is exact while the cumulative in-chunk
+log-decay stays within the clip (true for trained RWKV decay ranges at
+chunk=64: typical per-token log-decay is -0.01..-0.3); channels that decay
+faster than e^-40 within one chunk have their ancient-pair contributions
+approximated. The sequential form in tests/ref is the exact oracle; decode
+is the exact one-step recurrence.
+
+State per head: S ∈ R^{K×V} (K = V = head_size). Update:
+    out_t = r_t · (S + (u ⊙ k_t) v_t^T)
+    S    <- diag(w_t) S + k_t v_t^T,   w_t = exp(-exp(ww_t))  (per-channel!)
+
+Heads are zero-padded to `cfg.padded_heads`-equivalent via `rwkv_head_pad`
+so they shard over the model axis (40 -> 48 on the production mesh); padded
+channels carry exact zeros through the recurrence.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.params import ParamSpec, logical_sharding
+
+Params = Dict[str, Any]
+
+_LORA = 64          # rank of the data-dependent decay LoRA
+_CLIP = 40.0        # exponent clip for the factored intra-chunk form
+
+
+def rwkv_head_pad(cfg: ModelConfig) -> int:
+    h = cfg.rwkv_num_heads
+    return cfg.head_pad_to if cfg.head_pad_to else h
+
+
+def time_mix_params(cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    hd = cfg.rwkv_head_size
+    dp = rwkv_head_pad(cfg) * hd  # padded inner width
+    p: Params = {
+        # token-shift interpolation factors
+        "mu_r": ParamSpec((d,), cfg.param_dtype, (None,), "zeros"),
+        "mu_k": ParamSpec((d,), cfg.param_dtype, (None,), "zeros"),
+        "mu_v": ParamSpec((d,), cfg.param_dtype, (None,), "zeros"),
+        "mu_w": ParamSpec((d,), cfg.param_dtype, (None,), "zeros"),
+        "mu_g": ParamSpec((d,), cfg.param_dtype, (None,), "zeros"),
+        # projections (outputs in padded head layout)
+        "wr": ParamSpec((d, dp), cfg.param_dtype, ("embed", "rwkv_heads"), "fan_in"),
+        "wk": ParamSpec((d, dp), cfg.param_dtype, ("embed", "rwkv_heads"), "fan_in"),
+        "wv": ParamSpec((d, dp), cfg.param_dtype, ("embed", "rwkv_heads"), "fan_in"),
+        "wg": ParamSpec((d, dp), cfg.param_dtype, ("embed", "rwkv_heads"), "fan_in"),
+        "wo": ParamSpec((dp, d), cfg.param_dtype, ("rwkv_heads", "embed"), "fan_in"),
+        # data-dependent decay: ww = w0 + tanh(x @ w1) @ w2
+        "w0": ParamSpec((dp,), "float32", ("rwkv_heads",), "zeros"),
+        "w1": ParamSpec((d, _LORA), cfg.param_dtype, ("embed", None), "fan_in"),
+        "w2": ParamSpec((_LORA, dp), cfg.param_dtype, (None, "rwkv_heads"), "fan_in"),
+        # per-channel bonus
+        "u": ParamSpec((dp,), "float32", ("rwkv_heads",), "zeros"),
+        # per-head group norm
+        "ln_scale": ParamSpec((dp,), cfg.param_dtype, ("rwkv_heads",), "ones"),
+        "ln_bias": ParamSpec((dp,), cfg.param_dtype, ("rwkv_heads",), "zeros"),
+    }
+    return p
+
+
+def channel_mix_params(cfg: ModelConfig) -> Params:
+    d, ff = cfg.d_model, cfg.d_ff
+    return {
+        "mu_k": ParamSpec((d,), cfg.param_dtype, (None,), "zeros"),
+        "mu_r": ParamSpec((d,), cfg.param_dtype, (None,), "zeros"),
+        "wk": ParamSpec((d, ff), cfg.param_dtype, ("embed", "mlp"), "fan_in"),
+        "wr": ParamSpec((d, d), cfg.param_dtype, ("embed", None), "fan_in"),
+        "wv": ParamSpec((ff, d), cfg.param_dtype, ("mlp", "embed"), "fan_in"),
+    }
+
+
+def _token_shift(x, last=None):
+    """Previous-token x (zeros / `last` for the first position)."""
+    if last is None:
+        last = jnp.zeros_like(x[:, :1])
+    return jnp.concatenate([last, x[:, :-1]], axis=1)
+
+
+def _tm_inputs(p: Params, cfg: ModelConfig, x, xs):
+    """Project r, k, v, g, log-decay la. Shapes: (b, s, H, hd) fp32 for wkv."""
+    H = rwkv_head_pad(cfg)
+    hd = cfg.rwkv_head_size
+
+    def lerp(mu):
+        return x + (xs - x) * mu
+
+    r = jnp.einsum("bsd,dk->bsk", lerp(p["mu_r"]), p["wr"])
+    k = jnp.einsum("bsd,dk->bsk", lerp(p["mu_k"]), p["wk"])
+    v = jnp.einsum("bsd,dk->bsk", lerp(p["mu_v"]), p["wv"])
+    g = jnp.einsum("bsd,dk->bsk", lerp(p["mu_g"]), p["wg"])
+    ww = p["w0"] + jnp.einsum(
+        "bsr,rk->bsk", jnp.tanh(jnp.einsum("bsd,dr->bsr", lerp(p["mu_w"]), p["w1"])), p["w2"]
+    ).astype(jnp.float32)
+    la = -jnp.exp(jnp.clip(ww, -8.0, 6.0))  # log-decay, la <= 0
+    shp = x.shape[:2] + (H, hd)
+    r, k, v, g = (t.reshape(shp) for t in (r, k, v, g))
+    la = la.reshape(shp)
+    r = logical_sharding(r, ("batch", None, "act_heads", None), None)
+    k = logical_sharding(k, ("batch", None, "act_heads", None), None)
+    v = logical_sharding(v, ("batch", None, "act_heads", None), None)
+    u = p["u"].reshape(H, hd)
+    return (r.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32),
+            g, la, u)
+
+
+def _group_norm(p: Params, cfg: ModelConfig, o):
+    """Per-head layer norm over hd. o: (b, s, H, hd) fp32."""
+    mu = jnp.mean(o, axis=-1, keepdims=True)
+    var = jnp.var(o, axis=-1, keepdims=True)
+    H, hd = o.shape[-2], o.shape[-1]
+    scale = p["ln_scale"].astype(jnp.float32).reshape(H, hd)
+    bias = p["ln_bias"].astype(jnp.float32).reshape(H, hd)
+    return (o - mu) * jax.lax.rsqrt(var + 64e-5) * scale + bias
+
+
+def wkv_chunked(r, k, v, la, u, s_in, chunk: int = 64, unroll: bool = False):
+    """Chunked-parallel WKV6. All inputs fp32.
+
+    r/k/v/la: (b, s, H, K); u: (H, K); s_in: (b, H, K, V).
+    Returns out (b, s, H, V), s_out.
+    """
+    b, s, H, K = r.shape
+    chunk = min(chunk, s)
+    assert s % chunk == 0
+    n = s // chunk
+
+    rc = r.reshape(b, n, chunk, H, K).swapaxes(0, 1)
+    kc = k.reshape(b, n, chunk, H, K).swapaxes(0, 1)
+    vc = v.reshape(b, n, chunk, H, K).swapaxes(0, 1)
+    lc = la.reshape(b, n, chunk, H, K).swapaxes(0, 1)
+
+    def step(S, inp):
+        rr, kk, vv, ll = inp                      # (b, c, H, K)
+        a = jnp.cumsum(ll, axis=1)                # cumulative log decay (<=0, decreasing)
+        a_prev = a - ll                           # a[t-1] (0 for t=0)
+        # inter-chunk: r_t ⊙ exp(a_prev) applied to carried state
+        r_in = rr * jnp.exp(a_prev)
+        o_inter = jnp.einsum("bchk,bhkv->bchv", r_in, S)
+        # intra-chunk: factored pairwise decays, strictly-lower-triangular
+        r_f = rr * jnp.exp(jnp.clip(a_prev, -_CLIP, _CLIP))
+        k_f = kk * jnp.exp(jnp.clip(-a, -_CLIP, _CLIP))
+        att = jnp.einsum("bchk,bdhk->bhcd", r_f, k_f)
+        tri = jnp.tril(jnp.ones((chunk, chunk), jnp.float32), k=-1)
+        att = att * tri[None, None]
+        o_intra = jnp.einsum("bhcd,bdhv->bchv", att, vv)
+        # current-token bonus
+        o_bonus = jnp.einsum("bchk,bchk->bch", rr * u[None, None], kk)[..., None] * vv
+        # state update: S' = diag(exp(a_last)) S + Σ_i (k_i ⊙ exp(a_last - a_i)) v_i^T
+        a_last = a[:, -1:]
+        k_dec = kk * jnp.exp(a_last - a)
+        S_new = S * jnp.exp(a_last.squeeze(1))[..., None] + jnp.einsum(
+            "bchk,bchv->bhkv", k_dec, vv)
+        return S_new, o_inter + o_intra + o_bonus
+
+    if unroll:
+        S, outs = s_in, []
+        for ci in range(n):
+            S, oc_i = step(S, (rc[ci], kc[ci], vc[ci], lc[ci]))
+            outs.append(oc_i)
+        s_out, oc = S, jnp.stack(outs)
+    else:
+        s_out, oc = jax.lax.scan(step, s_in, (rc, kc, vc, lc))
+    out = oc.swapaxes(0, 1).reshape(b, s, H, K)
+    return out, s_out
+
+
+def time_mix(p: Params, cfg: ModelConfig, x, chunk: int = 64):
+    xs = _token_shift(x)
+    r, k, v, g, la, u = _tm_inputs(p, cfg, x, xs)
+    b, s, H, hd = r.shape
+    s0 = jnp.zeros((b, H, hd, hd), jnp.float32)
+    out, _ = wkv_chunked(r, k, v, la, u, s0, chunk=chunk,
+                         unroll=cfg.unroll_inner_scans)
+    out = _group_norm(p, cfg, out)
+    gate = jax.nn.silu(g.astype(jnp.float32)).reshape(b, s, H * hd)
+    out = (out.reshape(b, s, H * hd) * gate).astype(x.dtype)
+    y = jnp.einsum("bsk,kd->bsd", out, p["wo"])
+    return logical_sharding(y, ("batch", None, None), None)
+
+
+def time_mix_decode(p: Params, cfg: ModelConfig, x, state):
+    """state = {"S": (b,H,K,V) fp32, "last": (b,1,d)}. Exact one-step."""
+    xs = state["last"]
+    r, k, v, g, la, u = _tm_inputs(p, cfg, x, xs)
+    S = state["S"]
+    rr, kk, vv, ll = r[:, 0], k[:, 0], v[:, 0], la[:, 0]  # (b, H, K)
+    wkv = S + jnp.einsum("bhk,bhv->bhkv", u[None] * kk, vv)
+    o = jnp.einsum("bhk,bhkv->bhv", rr, wkv)[:, None]
+    S_new = S * jnp.exp(ll)[..., None] + jnp.einsum("bhk,bhv->bhkv", kk, vv)
+    o = _group_norm(p, cfg, o)
+    b = x.shape[0]
+    H, hd = rr.shape[-2], rr.shape[-1]
+    gate = jax.nn.silu(g.astype(jnp.float32)).reshape(b, 1, H * hd)
+    o = (o.reshape(b, 1, H * hd) * gate).astype(x.dtype)
+    y = jnp.einsum("bsk,kd->bsd", o, p["wo"])
+    return y, {"S": S_new, "last": x}
+
+
+def channel_mix(p: Params, x, last=None):
+    xs = _token_shift(x, last)
+    xk = x + (xs - x) * p["mu_k"]
+    xr = x + (xs - x) * p["mu_r"]
+    k = jnp.square(jax.nn.relu(jnp.einsum("bsd,df->bsf", xk, p["wk"])))
+    k = logical_sharding(k, ("batch", None, "mlp"), None)
+    r = jax.nn.sigmoid(jnp.einsum("bsd,dk->bsk", xr, p["wr"]))
+    y = r * jnp.einsum("bsf,fd->bsd", k, p["wv"])
+    return logical_sharding(y, ("batch", None, None), None)
+
+
+def rwkv_state_specs(cfg: ModelConfig, batch: int):
+    H, hd, d = rwkv_head_pad(cfg), cfg.rwkv_head_size, cfg.d_model
+    return {
+        "S": ParamSpec((batch, H, hd, hd), "float32", ("batch", "act_heads", None, None), "zeros"),
+        "last": ParamSpec((batch, 1, d), cfg.dtype, ("batch", None, None), "zeros"),
+        "cm_last": ParamSpec((batch, 1, d), cfg.dtype, ("batch", None, None), "zeros"),
+    }

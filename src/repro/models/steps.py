@@ -1,0 +1,196 @@
+"""Step functions (train / prefill / decode) and their abstract input specs.
+
+`input_specs(...)` returns ShapeDtypeStructs **with shardings attached** so
+`jax.jit(step).lower(*specs)` on the production mesh needs no separate
+in_shardings tree, and nothing is ever allocated (dry-run discipline).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import layers
+from repro.models.params import (ParamSpec, abstract_params, init_params,
+                                 partition_specs, resolve_axes, RULE_SETS,
+                                 tree_map_specs)
+from repro.models.transformer import ModelDef, build
+from repro.optim import adamw_update, adamw_init, clip_by_global_norm, warmup_cosine
+from repro.optim.optimizers import opt_specs
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+
+LOSS_CHUNK = 512  # seq positions per CE chunk (bounds the fp32 logits buffer)
+
+
+def lm_loss(mdl: ModelDef, params, batch) -> Tuple[jnp.ndarray, Dict[str, Any]]:
+    """Chunked + rematerialized cross-entropy: the (tokens × vocab) fp32
+    logits tensor never exists whole — each seq chunk's unembed+CE is
+    recomputed in the backward pass (cheap vs. the multi-GiB buffer)."""
+    cfg = mdl.cfg
+    hidden, aux = mdl.forward(params, batch, return_hidden=True)
+    if cfg.family == "vlm" and cfg.num_image_tokens:
+        hidden = hidden[:, cfg.num_image_tokens:]
+    targets = batch["targets"]
+    b, s, _ = hidden.shape
+    vp = cfg.padded_vocab()
+    pad_mask = (jnp.arange(vp) < cfg.vocab_size)
+
+    @functools.partial(jax.checkpoint, policy=jax.checkpoint_policies.nothing_saveable)
+    def chunk_nll(h_c, t_c):
+        logits = layers.unembed(params["tok"], h_c).astype(jnp.float32)
+        logits = jnp.where(pad_mask[None, None, :], logits, -1e30)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        return -jnp.take_along_axis(logp, t_c[..., None], axis=-1)[..., 0]
+
+    chunk = min(LOSS_CHUNK, s)
+    if s % chunk:
+        chunk = s
+    n_chunks = s // chunk
+    if n_chunks > 1:
+        h_c = hidden.reshape(b, n_chunks, chunk, -1).swapaxes(0, 1)
+        t_c = targets.reshape(b, n_chunks, chunk).swapaxes(0, 1)
+        if cfg.unroll_inner_scans:
+            nll = jnp.stack([chunk_nll(h_c[i], t_c[i]) for i in range(n_chunks)])
+        else:
+            _, nll = jax.lax.scan(lambda c, ht: (c, chunk_nll(*ht)), 0, (h_c, t_c))
+        nll_mean = jnp.mean(nll)
+    else:
+        nll_mean = jnp.mean(chunk_nll(hidden, targets))
+    loss = nll_mean + 0.01 * aux
+    return loss, {"nll": nll_mean, "aux": aux}
+
+
+def make_train_step(mdl: ModelDef, *, lr: float = 3e-4, warmup: int = 100,
+                    total_steps: int = 10_000, clip: float = 1.0,
+                    weight_decay: float = 0.1):
+    k = mdl.cfg.microbatches
+
+    def train_step(state, batch):
+        params, opt, step = state["params"], state["opt"], state["step"]
+
+        def lf(p, mb):
+            return lm_loss(mdl, p, mb)
+
+        if k == 1:
+            (loss, metrics), grads = jax.value_and_grad(lf, has_aux=True)(params, batch)
+        else:
+            # gradient accumulation over k microbatches (scan keeps HLO small
+            # and bounds the live activation set to one microbatch)
+            mb_batch = jax.tree_util.tree_map(
+                lambda x: x.reshape((k, x.shape[0] // k) + x.shape[1:]), batch)
+            g0 = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+            def micro(acc, mb):
+                (l, m), g = jax.value_and_grad(lf, has_aux=True)(params, mb)
+                acc = jax.tree_util.tree_map(
+                    lambda a, gi: a + gi.astype(jnp.float32), acc, g)
+                return acc, (l, m)
+
+            grads, (losses, metrics_k) = jax.lax.scan(micro, g0, mb_batch)
+            grads = jax.tree_util.tree_map(lambda g: g / k, grads)
+            loss = jnp.mean(losses)
+            metrics = jax.tree_util.tree_map(jnp.mean, metrics_k)
+
+        grads, gnorm = clip_by_global_norm(grads, clip)
+        lr_t = warmup_cosine(step, peak_lr=lr, warmup_steps=warmup,
+                             total_steps=total_steps)
+        params, opt = adamw_update(params, grads, opt, lr_t,
+                                   weight_decay=weight_decay)
+        new_state = {"params": params, "opt": opt, "step": step + 1}
+        out_metrics = {"loss": loss, "grad_norm": gnorm, "lr": lr_t, **metrics}
+        return new_state, out_metrics
+
+    return train_step
+
+
+def make_prefill_step(mdl: ModelDef):
+    """Forward over the prompt; returns last-position logits (cache write is
+    exercised in the decode step, which takes the cache as input)."""
+    def prefill_step(params, batch):
+        logits, _ = mdl.forward(params, batch)
+        return logits[:, -1]
+    return prefill_step
+
+
+def make_decode_step(mdl: ModelDef):
+    def decode_step(params, cache, token, index):
+        logits, cache = mdl.decode(params, cache, token, index)
+        next_token = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        return next_token, cache
+    return decode_step
+
+
+# ---------------------------------------------------------------------------
+# Abstract inputs
+# ---------------------------------------------------------------------------
+
+def _sds(shape, dtype, axes, mesh: Optional[Mesh], rules: str = "tp"):
+    if mesh is None:
+        return jax.ShapeDtypeStruct(shape, dtype)
+    spec = resolve_axes(tuple(axes), tuple(shape), mesh, RULE_SETS[rules])
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=NamedSharding(mesh, spec))
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig, mesh: Optional[Mesh] = None):
+    """Abstract batch for the given shape cell."""
+    b, s = shape.global_batch, shape.seq_len
+    kind = shape.kind
+    out: Dict[str, Any] = {}
+    if kind in ("train", "prefill"):
+        s_text = s - (cfg.num_image_tokens if cfg.family == "vlm" else 0)
+        out["tokens"] = _sds((b, s_text), jnp.int32, ("batch", None), mesh)
+        if cfg.family == "vlm":
+            out["img_embeds"] = _sds((b, cfg.num_image_tokens, cfg.d_model),
+                                     jnp.bfloat16, ("batch", None, None), mesh)
+        if cfg.family == "audio":
+            out["frames"] = _sds((b, cfg.encoder_seq_len, cfg.d_model),
+                                 jnp.bfloat16, ("batch", None, None), mesh)
+        if kind == "train":
+            out["targets"] = _sds((b, s_text if cfg.family != "vlm" else s_text),
+                                  jnp.int32, ("batch", None), mesh)
+    return out
+
+
+def abstract_tree(spec_tree, mesh: Optional[Mesh], rules: str = "tp"):
+    def conv(s: ParamSpec):
+        return _sds(s.shape, s.dtype, s.axes, mesh, rules)
+    return tree_map_specs(conv, spec_tree)
+
+
+def train_state_specs(mdl: ModelDef, mesh: Optional[Mesh] = None):
+    params = abstract_tree(mdl.param_tree, mesh)
+    opt = abstract_tree(opt_specs(mdl.param_tree), mesh)
+    step = _sds((), jnp.int32, (), mesh)
+    return {"params": params, "opt": opt, "step": step}
+
+
+def decode_input_specs(mdl: ModelDef, shape: ShapeConfig, mesh: Optional[Mesh] = None):
+    cfg = mdl.cfg
+    b = shape.global_batch
+    long_ctx = shape.seq_len >= (1 << 18)
+    cache = abstract_tree(mdl.cache_specs(b, shape.seq_len, long_ctx=long_ctx), mesh)
+    token = _sds((b, 1), jnp.int32, ("batch", None), mesh)
+    index = _sds((), jnp.int32, (), mesh)
+    return cache, token, index
+
+
+# ---------------------------------------------------------------------------
+# Concrete init (smoke tests / real runs)
+# ---------------------------------------------------------------------------
+
+def init_train_state(mdl: ModelDef, seed: int = 0):
+    params = init_params(mdl.param_tree, seed)
+    return {"params": params, "opt": adamw_init(params), "step": jnp.zeros((), jnp.int32)}
+
+
+def init_cache(mdl: ModelDef, batch: int, cache_len: int, long_ctx: bool = False):
+    return init_params(mdl.cache_specs(batch, cache_len, long_ctx=long_ctx), 0)

@@ -1,0 +1,519 @@
+"""Model assembly for all assigned architectures.
+
+One `ModelDef` per architecture family:
+  dense | moe | vlm  -> decoder-only stack (scan over identical layers)
+  hybrid (jamba)     -> scan over blocks of `attn_every` heterogeneous layers
+  ssm (rwkv6)        -> scan over rwkv blocks
+  audio (whisper)    -> encoder (bidirectional) + decoder (causal + cross)
+
+Layers are stacked along a leading "layers" axis and traversed with
+`jax.lax.scan` — this keeps HLO size (and compile time for the 512-device
+dry-run) independent of depth. Remat is applied per layer body.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers, mamba, moe, rwkv6
+from repro.models.params import ParamSpec, logical_sharding, tree_map_specs
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Norm helpers (rms for LM-family, ln for whisper/rwkv)
+# ---------------------------------------------------------------------------
+
+def norm_params(cfg: ModelConfig, norm_type: Optional[str] = None) -> Params:
+    nt = norm_type or ("ln" if cfg.family in ("audio", "ssm") else "rms")
+    p = {"scale": ParamSpec((cfg.d_model,), cfg.param_dtype, (None,), "ones")}
+    if nt == "ln":
+        p["bias"] = ParamSpec((cfg.d_model,), cfg.param_dtype, (None,), "zeros")
+    return p
+
+
+def apply_norm(cfg: ModelConfig, p: Params, x):
+    if "bias" in p:
+        return layers.layer_norm(x, p["scale"], p["bias"], cfg.norm_eps)
+    return layers.rms_norm(x, p["scale"], cfg.norm_eps)
+
+
+def _remat(cfg: ModelConfig, fn):
+    if cfg.remat_policy == "none":
+        return fn
+    if cfg.remat_policy == "full":
+        return jax.checkpoint(fn, policy=jax.checkpoint_policies.nothing_saveable)
+    return jax.checkpoint(
+        fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+
+
+def _stack(layer_tree, n: int, axis_name: str = "layers"):
+    """Prepend a stacked leading dim to every ParamSpec in a layer tree."""
+    return tree_map_specs(
+        lambda s: ParamSpec((n,) + s.shape, s.dtype, (axis_name,) + s.axes, s.init, s.scale),
+        layer_tree,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Per-layer param trees / apply
+# ---------------------------------------------------------------------------
+
+def _layer_params(cfg: ModelConfig, kind: str, ffn: str) -> Params:
+    p: Params = {"ln1": norm_params(cfg), "ln2": norm_params(cfg)}
+    if kind == "attn":
+        p["attn"] = layers.attention_params(cfg)
+    elif kind == "mamba":
+        p["mixer"] = mamba.mamba_params(cfg)
+    elif kind == "rwkv":
+        p["tm"] = rwkv6.time_mix_params(cfg)
+    if ffn == "dense":
+        p["mlp"] = layers.mlp_params(cfg, gated=cfg.family != "audio")
+    elif ffn == "moe":
+        p["moe"] = moe.moe_params(cfg)
+    elif ffn == "rwkv_cm":
+        p["cm"] = rwkv6.channel_mix_params(cfg)
+    return p
+
+
+_SP = ("batch", "seq_sp", None)     # residual stream: seq-sharded over model
+_FULL = ("batch", None, None)       # gathered for mixer/FFN compute
+
+
+def _layer_apply(cfg: ModelConfig, p: Params, x, positions, kind: str, ffn: str):
+    """x arrives (and leaves) seq-sharded (`_SP`); norms run sharded, the
+    mixer/FFN input is all-gathered and its output reduce-scattered back —
+    Megatron sequence parallelism, which also keeps the scan's saved
+    residual stack 1/TP-sized (the dominant train memory term)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = apply_norm(cfg, p["ln1"], x)
+    h = logical_sharding(h, _FULL)
+    if kind == "attn":
+        y = layers.causal_attention(p["attn"], cfg, h, positions)
+    elif kind == "mamba":
+        y = mamba.mamba(p["mixer"], cfg, h)
+    elif kind == "rwkv":
+        y = rwkv6.time_mix(p["tm"], cfg, h)
+    x = x + logical_sharding(y, _SP)
+    h = apply_norm(cfg, p["ln2"], x)
+    h = logical_sharding(h, _FULL)
+    if ffn == "dense":
+        act = jax.nn.gelu if cfg.family == "audio" else jax.nn.silu
+        y = layers.mlp(p["mlp"], h, act=act)
+    elif ffn == "moe":
+        y, aux = moe.moe(p["moe"], cfg, h)
+    elif ffn == "rwkv_cm":
+        y = rwkv6.channel_mix(p["cm"], h)
+    x = x + logical_sharding(y, _SP)
+    return x, aux
+
+
+def _layer_plan(cfg: ModelConfig):
+    """List of (kind, ffn) per scan position; scan length."""
+    if cfg.family == "hybrid":
+        period = cfg.attn_every
+        assert cfg.num_layers % period == 0
+        plan = []
+        for pos in range(period):
+            kind = "attn" if pos % cfg.attn_every == cfg.attn_offset else "mamba"
+            ffn = "moe" if cfg.is_moe_layer(pos) else "dense"
+            plan.append((kind, ffn))
+        return plan, cfg.num_layers // period
+    if cfg.family == "ssm":
+        return [("rwkv", "rwkv_cm")], cfg.num_layers
+    ffn = "moe" if (cfg.num_experts and cfg.moe_every == 1) else "dense"
+    return [("attn", ffn)], cfg.num_layers
+
+
+# ---------------------------------------------------------------------------
+# ModelDef
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ModelDef:
+    cfg: ModelConfig
+    param_tree: Any
+
+    # ---------------- forward (train / prefill) ----------------
+
+    def forward(self, params: Params, batch: Dict[str, Any],
+                return_hidden: bool = False):
+        """Returns (logits | final hidden, aux_loss). Handles all families."""
+        cfg = self.cfg
+        if cfg.family == "audio":
+            return self._forward_encdec(params, batch, return_hidden)
+        x = self._embed_inputs(params, batch)
+        positions = jnp.arange(x.shape[1])[None, :]
+        x = logical_sharding(x, _SP)
+        x, aux = self._run_stack(params, x, positions)
+        x = apply_norm(cfg, params["final_norm"], x)
+        x = logical_sharding(x, _FULL)
+        if return_hidden:
+            return x, aux
+        logits = layers.unembed(params["tok"], x)
+        return logits, aux
+
+    def _embed_inputs(self, params, batch):
+        cfg = self.cfg
+        x = layers.embed(params["tok"], batch["tokens"])
+        if cfg.family == "vlm" and "img_embeds" in batch:
+            img = batch["img_embeds"].astype(x.dtype)
+            img = logical_sharding(img, ("batch", None, None), None)
+            x = jnp.concatenate([img, x], axis=1)
+        if cfg.family == "ssm":
+            x = apply_norm(cfg, params["ln0"], x)
+        return x
+
+    def _run_stack(self, params, x, positions):
+        cfg = self.cfg
+        plan, n_scan = _layer_plan(cfg)
+
+        # remat at SUB-layer granularity for multi-sublayer blocks (hybrid):
+        # the backward then recomputes one sublayer at a time instead of
+        # keeping all 8 sublayers' internals live (§Perf H2).
+        def sub(i, kind, ffn):
+            def f(x, p_layer):
+                return _layer_apply(cfg, p_layer, x, positions, kind, ffn)
+            return _remat(cfg, f)
+
+        subs = [sub(i, kind, ffn) for i, (kind, ffn) in enumerate(plan)]
+
+        def block(x, block_params):
+            aux = jnp.zeros((), jnp.float32)
+            for i in range(len(plan)):
+                x, a = subs[i](x, block_params[f"pos{i}"])
+                aux = aux + a
+            return x, aux
+
+        if cfg.scan_layers:
+            def scan_body(carry, block_params):
+                x, aux = carry
+                x, a = block(x, block_params)
+                return (x, aux + a), None
+            (x, aux), _ = jax.lax.scan(
+                scan_body, (x, jnp.zeros((), jnp.float32)), params["blocks"])
+        else:
+            aux = jnp.zeros((), jnp.float32)
+            for l in range(n_scan):
+                bp = jax.tree_util.tree_map(lambda a: a[l], params["blocks"])
+                x, a = block(x, bp)
+                aux = aux + a
+        return x, aux
+
+    def _forward_encdec(self, params, batch, return_hidden: bool = False):
+        cfg = self.cfg
+        enc = batch["frames"].astype(cfg.dtype)  # stub frontend: precomputed embeddings
+        enc = logical_sharding(enc, ("batch", None, None), None)
+        enc_pos = jnp.arange(enc.shape[1])[None, :]
+        enc = enc + _sinusoidal(enc.shape[1], cfg.d_model, cfg.dtype)[None]
+
+        def enc_block(x, p):
+            h = logical_sharding(apply_norm(cfg, p["ln1"], x), _FULL)
+            x = x + logical_sharding(_bidir_attention(p["attn"], cfg, h), _SP)
+            h = logical_sharding(apply_norm(cfg, p["ln2"], x), _FULL)
+            x = x + logical_sharding(layers.mlp(p["mlp"], h, act=jax.nn.gelu), _SP)
+            return x, None
+
+        enc = logical_sharding(enc, _SP)
+        enc, _ = jax.lax.scan(lambda c, p: enc_block(c, p), enc, params["enc_blocks"])
+        enc = apply_norm(cfg, params["enc_norm"], enc)
+        enc = logical_sharding(enc, _FULL)
+
+        x = layers.embed(params["tok"], batch["tokens"])
+        x = x + _sinusoidal(x.shape[1], cfg.d_model, cfg.dtype)[None]
+        x = logical_sharding(x, _SP)
+        positions = jnp.arange(x.shape[1])[None, :]
+
+        def dec_block(x, p):
+            h = logical_sharding(apply_norm(cfg, p["ln1"], x), _FULL)
+            x = x + logical_sharding(
+                layers.causal_attention(p["attn"], cfg, h, positions), _SP)
+            h = logical_sharding(apply_norm(cfg, p["ln_x"], x), _FULL)
+            enc_kv = layers.encode_kv(p["xattn"], cfg, enc)
+            x = x + logical_sharding(
+                layers.cross_attention(p["xattn"], cfg, h, enc_kv), _SP)
+            h = logical_sharding(apply_norm(cfg, p["ln2"], x), _FULL)
+            x = x + logical_sharding(layers.mlp(p["mlp"], h, act=jax.nn.gelu), _SP)
+            return x, None
+
+        dec_block = _remat(cfg, dec_block)
+        x, _ = jax.lax.scan(lambda c, p: dec_block(c, p), x, params["dec_blocks"])
+        x = apply_norm(cfg, params["final_norm"], x)
+        x = logical_sharding(x, _FULL)
+        if return_hidden:
+            return x, jnp.zeros((), jnp.float32)
+        logits = layers.unembed(params["tok"], x)
+        return logits, jnp.zeros((), jnp.float32)
+
+    # ---------------- decode ----------------
+
+    def cache_specs(self, batch: int, cache_len: int, long_ctx: bool = False):
+        """ParamSpec tree for the decode cache."""
+        cfg = self.cfg
+        axes = layers.cache_axes(cfg, long_ctx)
+        nkv = cfg.padded_heads if cfg.mha_padded else cfg.num_kv_heads
+        hd = cfg.head_dim
+
+        def kv_spec():
+            return {
+                "k": ParamSpec((batch, cache_len, nkv, hd), cfg.cache_dtype, axes, "zeros"),
+                "v": ParamSpec((batch, cache_len, nkv, hd), cfg.cache_dtype, axes, "zeros"),
+            }
+
+        if cfg.family == "audio":
+            enc_len = cfg.encoder_seq_len
+            cross_axes = ("batch", None, axes[2], None)
+            cross = {
+                "k": ParamSpec((batch, enc_len, nkv, hd), cfg.dtype, cross_axes, "zeros"),
+                "v": ParamSpec((batch, enc_len, nkv, hd), cfg.dtype, cross_axes, "zeros"),
+            }
+            layer = {"self": kv_spec(), "cross": cross}
+            return {"dec": _stack(layer, cfg.num_layers)}
+
+        plan, n_scan = _layer_plan(cfg)
+        block = {}
+        for i, (kind, _ffn) in enumerate(plan):
+            if kind == "attn":
+                block[f"pos{i}"] = kv_spec()
+            elif kind == "mamba":
+                block[f"pos{i}"] = mamba.mamba_state_specs(cfg, batch)
+            elif kind == "rwkv":
+                block[f"pos{i}"] = rwkv6.rwkv_state_specs(cfg, batch)
+        return {"blocks": _stack(block, n_scan)}
+
+    def decode(self, params: Params, cache, token, index):
+        """One decode step. token: (b, 1) int32; index: scalar int32 position.
+
+        Returns (logits, new_cache)."""
+        cfg = self.cfg
+        x = layers.embed(params["tok"], token)
+        if cfg.family == "ssm":
+            x = apply_norm(cfg, params["ln0"], x)
+        if cfg.family == "audio":
+            return self._decode_encdec(params, cache, x, index)
+
+        plan, n_scan = _layer_plan(cfg)
+
+        # fori_loop with the FULL cache as carry: per-layer slices are
+        # updated in place (donated buffer), avoiding the 2x cache
+        # double-buffering a scan-with-stacked-ys would cost (§Perf H3).
+        def body(l, carry):
+            x, full_cache = carry
+            take = lambda a: jax.lax.dynamic_index_in_dim(a, l, 0, keepdims=False)
+            bp = jax.tree_util.tree_map(take, params["blocks"])
+            bc = jax.tree_util.tree_map(take, full_cache)
+            x, new_bc = _decode_block_apply(cfg, plan, index, x, bp, bc)
+            put = lambda full, new: jax.lax.dynamic_update_index_in_dim(
+                full, new.astype(full.dtype), l, 0)
+            full_cache = jax.tree_util.tree_map(put, full_cache, new_bc)
+            return x, full_cache
+
+        x, new_cache = jax.lax.fori_loop(0, n_scan, body,
+                                         (x, cache["blocks"]))
+        x = apply_norm(cfg, params["final_norm"], x)
+        logits = layers.unembed(params["tok"], x)
+        return logits, {"blocks": new_cache}
+
+    def _decode_encdec(self, params, cache, x, index):
+        cfg = self.cfg
+        pos_emb = _sinusoidal_at(index, cfg.d_model, cfg.dtype)
+        x = x + pos_emb
+
+        def body(l, carry):
+            x, full_cache = carry
+            take = lambda a: jax.lax.dynamic_index_in_dim(a, l, 0, keepdims=False)
+            p = jax.tree_util.tree_map(take, params["dec_blocks"])
+            c = jax.tree_util.tree_map(take, full_cache)
+            h = apply_norm(cfg, p["ln1"], x)
+            y, ck, cv = layers.decode_attention(p["attn"], cfg, h, c["self"]["k"],
+                                                c["self"]["v"], index)
+            x = x + y
+            h = apply_norm(cfg, p["ln_x"], x)
+            x = x + layers.cross_attention(p["xattn"], cfg, h,
+                                           (c["cross"]["k"], c["cross"]["v"]))
+            h = apply_norm(cfg, p["ln2"], x)
+            x = x + layers.mlp(p["mlp"], h, act=jax.nn.gelu)
+            new_c = {"self": {"k": ck, "v": cv}, "cross": c["cross"]}
+            put = lambda full, new: jax.lax.dynamic_update_index_in_dim(
+                full, new.astype(full.dtype), l, 0)
+            return x, jax.tree_util.tree_map(put, full_cache, new_c)
+
+        x, new_dec = jax.lax.fori_loop(0, cfg.num_layers, body,
+                                       (x, cache["dec"]))
+        x = apply_norm(cfg, params["final_norm"], x)
+        logits = layers.unembed(params["tok"], x)
+        return logits, {"dec": new_dec}
+
+
+def _decode_block_apply(cfg: ModelConfig, plan, index, x, block_params,
+                        block_cache):
+    """One decode scan-block: returns (x, new_cache)."""
+    new_cache = {}
+    for i, (kind, ffn) in enumerate(plan):
+        p = block_params[f"pos{i}"]
+        h = apply_norm(cfg, p["ln1"], x)
+        if kind == "attn":
+            c = block_cache[f"pos{i}"]
+            y, ck, cv = layers.decode_attention(
+                p["attn"], cfg, h, c["k"], c["v"], index)
+            x = x + y
+            new_cache[f"pos{i}"] = {"k": ck, "v": cv}
+        elif kind == "mamba":
+            y, st = mamba.mamba_decode(p["mixer"], cfg, h, block_cache[f"pos{i}"])
+            x = x + y
+            new_cache[f"pos{i}"] = st
+        elif kind == "rwkv":
+            st = dict(block_cache[f"pos{i}"])
+            cm_last = st.pop("cm_last")
+            y, st2 = rwkv6.time_mix_decode(p["tm"], cfg, h, st)
+            x = x + y
+            new_cache[f"pos{i}"] = st2
+        h = apply_norm(cfg, p["ln2"], x)
+        if ffn == "dense":
+            act = jax.nn.gelu if cfg.family == "audio" else jax.nn.silu
+            x = x + layers.mlp(p["mlp"], h, act=act)
+        elif ffn == "moe":
+            y, _ = moe.moe(p["moe"], cfg, h)
+            x = x + y
+        elif ffn == "rwkv_cm":
+            x = x + rwkv6.channel_mix(p["cm"], h, last=cm_last)
+            new_cache[f"pos{i}"]["cm_last"] = h
+    return x, new_cache
+
+
+def _scan_unit_list(mdl: "ModelDef"):
+    """Scan units for flop-correction analysis: list of dicts with
+    name, n_trips, param_tree (one block, unstacked), apply(bp, x, ctx)."""
+    cfg = mdl.cfg
+    if cfg.family == "audio":
+        enc_layer = {
+            "ln1": norm_params(cfg), "ln2": norm_params(cfg),
+            "attn": layers.attention_params(cfg),
+            "mlp": layers.mlp_params(cfg, gated=False),
+        }
+        dec_layer = {
+            "ln1": norm_params(cfg), "ln_x": norm_params(cfg), "ln2": norm_params(cfg),
+            "attn": layers.attention_params(cfg),
+            "xattn": layers.attention_params(cfg, cross=True),
+            "mlp": layers.mlp_params(cfg, gated=False),
+        }
+
+        def enc_apply(bp, x, ctx):
+            h = logical_sharding(apply_norm(cfg, bp["ln1"], x), _FULL)
+            x = x + logical_sharding(_bidir_attention(bp["attn"], cfg, h), _SP)
+            h = logical_sharding(apply_norm(cfg, bp["ln2"], x), _FULL)
+            return x + logical_sharding(layers.mlp(bp["mlp"], h, act=jax.nn.gelu), _SP)
+
+        def dec_apply(bp, x, ctx):
+            positions = jnp.arange(x.shape[1])[None, :]
+            h = logical_sharding(apply_norm(cfg, bp["ln1"], x), _FULL)
+            x = x + logical_sharding(
+                layers.causal_attention(bp["attn"], cfg, h, positions), _SP)
+            h = logical_sharding(apply_norm(cfg, bp["ln_x"], x), _FULL)
+            enc_kv = layers.encode_kv(bp["xattn"], cfg, ctx["enc"])
+            x = x + logical_sharding(
+                layers.cross_attention(bp["xattn"], cfg, h, enc_kv), _SP)
+            h = logical_sharding(apply_norm(cfg, bp["ln2"], x), _FULL)
+            return x + logical_sharding(layers.mlp(bp["mlp"], h, act=jax.nn.gelu), _SP)
+
+        return [
+            {"name": "enc_blocks", "n": cfg.num_encoder_layers,
+             "params": enc_layer, "apply": enc_apply, "needs_enc": False},
+            {"name": "dec_blocks", "n": cfg.num_layers,
+             "params": dec_layer, "apply": dec_apply, "needs_enc": True},
+        ]
+
+    plan, n_scan = _layer_plan(cfg)
+    block = {f"pos{i}": _layer_params(cfg, kind, ffn)
+             for i, (kind, ffn) in enumerate(plan)}
+
+    def apply(bp, x, ctx):
+        positions = jnp.arange(x.shape[1])[None, :]
+        # mirror _run_stack's per-sublayer remat so block-level analysis
+        # lowers count the same recompute flops as the deployed model
+        for i, (kind, ffn) in enumerate(plan):
+            def f(x_, p_layer, kind=kind, ffn=ffn):
+                return _layer_apply(cfg, p_layer, x_, positions, kind, ffn)
+            x, _ = _remat(cfg, f)(x, bp[f"pos{i}"])
+        return x
+
+    return [{"name": "blocks", "n": n_scan, "params": block, "apply": apply,
+             "needs_enc": False}]
+
+
+def _sinusoidal(length: int, d: int, dtype):
+    pos = jnp.arange(length, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(0, d, 2, dtype=jnp.float32)[None, :]
+    ang = pos / (10000.0 ** (dim / d))
+    pe = jnp.zeros((length, d), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(ang))
+    pe = pe.at[:, 1::2].set(jnp.cos(ang))
+    return pe.astype(dtype)
+
+
+def _sinusoidal_at(index, d: int, dtype):
+    dim = jnp.arange(0, d, 2, dtype=jnp.float32)
+    ang = index.astype(jnp.float32) / (10000.0 ** (dim / d))
+    pe = jnp.zeros((d,), jnp.float32)
+    pe = pe.at[0::2].set(jnp.sin(ang))
+    pe = pe.at[1::2].set(jnp.cos(ang))
+    return pe.astype(dtype)
+
+
+def _bidir_attention(p, cfg, x):
+    """Non-causal self-attention (whisper encoder)."""
+    positions = jnp.arange(x.shape[1])[None, :]
+    q, k, v = layers.project_qkv(p, cfg, x, positions, rope=False)
+    if cfg.mha_padded:
+        kg, vg = k, v
+    else:
+        idx = layers._kv_repeat_idx(cfg)
+        kg = jnp.take(k, idx, axis=2)
+        vg = jnp.take(v, idx, axis=2)
+    out = layers._sdpa(q, kg, vg, None, cfg.head_dim ** -0.5)
+    wo = layers._pad_wo(p["wo"], cfg.padded_heads)
+    return jnp.einsum("bshk,hkd->bsd", out, wo)
+
+
+# ---------------------------------------------------------------------------
+# Builder
+# ---------------------------------------------------------------------------
+
+def build(cfg: ModelConfig) -> ModelDef:
+    if cfg.family == "audio":
+        enc_layer = {
+            "ln1": norm_params(cfg), "ln2": norm_params(cfg),
+            "attn": layers.attention_params(cfg),
+            "mlp": layers.mlp_params(cfg, gated=False),
+        }
+        dec_layer = {
+            "ln1": norm_params(cfg), "ln_x": norm_params(cfg), "ln2": norm_params(cfg),
+            "attn": layers.attention_params(cfg),
+            "xattn": layers.attention_params(cfg, cross=True),
+            "mlp": layers.mlp_params(cfg, gated=False),
+        }
+        tree = {
+            "tok": layers.embed_params(cfg),
+            "enc_blocks": _stack(enc_layer, cfg.num_encoder_layers),
+            "enc_norm": norm_params(cfg),
+            "dec_blocks": _stack(dec_layer, cfg.num_layers),
+            "final_norm": norm_params(cfg),
+        }
+        return ModelDef(cfg, tree)
+
+    plan, n_scan = _layer_plan(cfg)
+    block = {f"pos{i}": _layer_params(cfg, kind, ffn) for i, (kind, ffn) in enumerate(plan)}
+    tree = {
+        "tok": layers.embed_params(cfg),
+        "blocks": _stack(block, n_scan),
+        "final_norm": norm_params(cfg),
+    }
+    if cfg.family == "ssm":
+        tree["ln0"] = norm_params(cfg)
+    return ModelDef(cfg, tree)

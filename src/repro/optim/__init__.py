@@ -1,0 +1,3 @@
+from repro.optim.optimizers import (adamw_init, adamw_update, sgd_update,
+                                    clip_by_global_norm, global_norm)
+from repro.optim.schedules import warmup_cosine, constant

@@ -1,0 +1,88 @@
+"""Optimizers (no optax dependency): AdamW + SGD, fp32 master moments.
+
+Opt-state moments mirror the parameter pytree (and inherit the same
+PartitionSpecs via `opt_specs`), so the optimizer is sharded exactly like
+the model — ZeRO-style when params are FSDP-sharded.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.params import ParamSpec, tree_map_specs
+
+
+def opt_specs(param_tree):
+    """ParamSpec tree for AdamW moments (fp32, same axes as params)."""
+    def mom(s: ParamSpec):
+        return ParamSpec(s.shape, "float32", s.axes, "zeros")
+    return {
+        "m": tree_map_specs(mom, param_tree),
+        "v": tree_map_specs(mom, param_tree),
+        "count": ParamSpec((), "int32", (), "zeros"),
+    }
+
+
+def adamw_init(params):
+    zeros = jax.tree_util.tree_map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return {
+        "m": zeros,
+        "v": jax.tree_util.tree_map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree_util.tree_map(lambda g: g * scale.astype(g.dtype), grads), norm
+
+
+def adamw_update(params, grads, opt_state, lr, *, b1=0.9, b2=0.95, eps=1e-8,
+                 weight_decay=0.0):
+    count = opt_state["count"] + 1
+    cf = count.astype(jnp.float32)
+    bc1 = 1.0 - b1 ** cf
+    bc2 = 1.0 - b2 ** cf
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g32
+        v = b2 * v + (1 - b2) * jnp.square(g32)
+        step = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+        if weight_decay:
+            step = step + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * step).astype(p.dtype), m, v
+
+    flat_p, tdef = jax.tree_util.tree_flatten(params)
+    flat_g = jax.tree_util.tree_leaves(grads)
+    flat_m = jax.tree_util.tree_leaves(opt_state["m"])
+    flat_v = jax.tree_util.tree_leaves(opt_state["v"])
+    new_p, new_m, new_v = [], [], []
+    for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v):
+        np_, nm, nv = upd(p, g, m, v)
+        new_p.append(np_)
+        new_m.append(nm)
+        new_v.append(nv)
+    unf = jax.tree_util.tree_unflatten
+    return unf(tdef, new_p), {"m": unf(tdef, new_m), "v": unf(tdef, new_v), "count": count}
+
+
+def sgd_update(params, grads, lr, momentum_state=None, momentum: float = 0.0):
+    if momentum and momentum_state is not None:
+        momentum_state = jax.tree_util.tree_map(
+            lambda s, g: momentum * s + g.astype(jnp.float32), momentum_state, grads)
+        eff = momentum_state
+    else:
+        eff = grads
+    params = jax.tree_util.tree_map(
+        lambda p, g: (p.astype(jnp.float32) - lr * g.astype(jnp.float32)).astype(p.dtype),
+        params, eff)
+    return params, momentum_state

@@ -1,0 +1,7 @@
+# NOTE: deliberately no XLA_FLAGS here — smoke tests and benches must see
+# the real single CPU device. Multi-device tests spawn subprocesses that set
+# --xla_force_host_platform_device_count themselves.
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,197 @@
+"""Distributed features: grad compression, stragglers, multi-device subprocess
+tests (sharded hazy consistency, elastic re-mesh restore)."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _run_subprocess(code: str, devices: int = 8) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, timeout=600, env=env)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+# ---------------------------------------------------------------------------
+# Straggler logic (pure python)
+# ---------------------------------------------------------------------------
+
+def test_straggler_detection_and_reassignment():
+    from repro.distributed import ShardAssigner, StragglerDetector
+    det = StragglerDetector(n_workers=4, threshold=1.5, patience=2)
+    asg = ShardAssigner(n_shards=8, n_workers=4)
+    flagged = []
+    for _ in range(5):
+        times = {0: 1.0, 1: 1.0, 2: 1.05, 3: 3.0}  # worker 3 is slow
+        flagged = det.observe(times)
+    assert flagged == [3]
+    newmap = asg.reassign(flagged, det)
+    assert 3 not in newmap and 3 in asg.evicted
+    covered = sorted(s for shards in newmap.values() for s in shards)
+    assert covered == list(range(8))        # every shard still owned
+    assert asg.owner_of(3) != 3
+
+
+def test_straggler_no_false_positive():
+    from repro.distributed import StragglerDetector
+    det = StragglerDetector(n_workers=4, threshold=1.5, patience=3)
+    for _ in range(10):
+        assert det.observe({w: 1.0 + 0.05 * w for w in range(4)}) == []
+
+
+# ---------------------------------------------------------------------------
+# Compression (multi-device, subprocess)
+# ---------------------------------------------------------------------------
+
+def test_compressed_allreduce_accuracy():
+    out = _run_subprocess("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import Mesh, PartitionSpec as P
+        from repro.distributed import (make_compressed_grad_allreduce,
+                                       error_feedback_init)
+        mesh = jax.make_mesh((8,), ("pod",),
+                             axis_types=(jax.sharding.AxisType.Auto,))
+        allred = make_compressed_grad_allreduce("pod", 8)
+        r = np.random.default_rng(0)
+        g_all = jnp.asarray(r.normal(size=(8, 64)), jnp.float32)
+        err0 = {"g": jnp.zeros((8, 64), jnp.float32)}
+
+        def f(g, err):
+            out, err2 = allred({"g": g}, err)
+            return out["g"], err2["g"]
+
+        fn = jax.jit(jax.shard_map(f, mesh=mesh,
+                                   in_specs=(P("pod"), P("pod")),
+                                   out_specs=(P("pod"), P("pod"))))
+        # accumulate over rounds: error feedback must keep the running mean
+        # close to the true mean
+        total_hat = np.zeros(64); total_true = np.zeros(64)
+        err = err0["g"]
+        for step in range(20):
+            g_step = g_all * (1.0 + 0.1 * step)
+            mean_hat, err = fn(g_step, err)
+            total_hat += np.asarray(mean_hat)[0]
+            total_true += np.asarray(jnp.mean(g_step, axis=0))
+        rel = np.abs(total_hat - total_true).max() / (np.abs(total_true).max() + 1e-9)
+        print("REL", rel)
+        assert rel < 0.02, rel
+    """)
+    assert "REL" in out
+
+
+# ---------------------------------------------------------------------------
+# Sharded hazy engine on a real (fake-device) mesh
+# ---------------------------------------------------------------------------
+
+def test_sharded_hazy_multidevice_consistency():
+    out = _run_subprocess("""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.core.sharded import ShardedHazy
+        from repro.core import zero_model, sgd_step
+        from repro.data import forest_like, example_stream
+        mesh = jax.make_mesh((4, 2), ("data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        corpus = forest_like(scale=0.01)
+        n = (corpus.features.shape[0] // 8) * 8
+        F = np.ascontiguousarray(corpus.features[:n, :52])  # 52 % 2 == 0
+        sh = ShardedHazy(mesh=mesh, n=n, d=52, M=1.0, p=2.0, cap_frac=1/4)
+        state = sh.init_state(F)
+        model = zero_model(52)
+        stream = example_stream(corpus, seed=3, label_noise=0.0)
+        for _, f, y in [next(stream) for _ in range(400)]:
+            model = sgd_step(model, f[:52], y, lr=0.02, l2=1e-3)
+            state = sh.apply_model(state, jnp.asarray(model.w),
+                                   jnp.asarray(model.b, jnp.float32))
+        truth = np.where(F @ model.w - model.b >= 0, 1, -1)
+        # per-shard permutations: compare via perm indices
+        perm = np.asarray(state.perm)
+        labels = np.asarray(state.labels)
+        assert np.array_equal(truth[perm], labels)
+        assert sh.all_members(state) == int((truth == 1).sum())
+        print("OK reorgs=", sh.skiing.reorgs)
+    """)
+    assert "OK" in out
+
+
+def test_reorganize_step_has_no_cross_row_collectives():
+    """DESIGN.md claim: shard-local clustering -> reorganization needs no
+    collectives beyond the model-axis eps psum (no all-to-all / all-gather
+    of the feature table)."""
+    out = _run_subprocess("""
+        import jax, jax.numpy as jnp
+        from repro.core.sharded import make_reorganize_step, state_specs
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        mesh = jax.make_mesh((4, 2), ("data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        st = state_specs(1024, 64, mesh)
+        w = jax.ShapeDtypeStruct((64,), jnp.float32,
+                                 sharding=NamedSharding(mesh, P("model")))
+        b = jax.ShapeDtypeStruct((), jnp.float32,
+                                 sharding=NamedSharding(mesh, P()))
+        with mesh:
+            txt = jax.jit(make_reorganize_step(mesh)).lower(st, w, b)\
+                     .compile().as_text()
+        bad = [l for l in txt.splitlines()
+               if ("all-to-all" in l or "all-gather" in l or
+                   "collective-permute" in l)]
+        assert not bad, bad[:3]
+        print("NO_CROSS_ROW_COLLECTIVES")
+    """)
+    assert "NO_CROSS_ROW_COLLECTIVES" in out
+
+
+# ---------------------------------------------------------------------------
+# Elastic scaling: checkpoint on one mesh, restore on a smaller one
+# ---------------------------------------------------------------------------
+
+def test_elastic_remesh_restore(tmp_path):
+    tmp_path = str(tmp_path)
+    out = _run_subprocess(f"""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.configs import smoke_config
+        from repro.models import build
+        from repro.models.steps import (init_train_state, make_train_step,
+                                        train_state_specs)
+        from repro.checkpoint import save_checkpoint, restore_checkpoint
+        from repro.launch.mesh import make_elastic_mesh
+        from repro.data import TokenStream
+
+        cfg = smoke_config("tinyllama-1.1b")
+        mdl = build(cfg)
+        ds = TokenStream(vocab_size=cfg.vocab_size, batch=4, seq_len=16, seed=0)
+        step_fn = jax.jit(make_train_step(mdl))
+
+        def batches(i):
+            return {{k: jnp.asarray(v) for k, v in ds.batch_at(i).items()}}
+
+        # train 3 steps on an 8-device mesh
+        mesh8 = make_elastic_mesh(8, model_parallel=2)
+        with mesh8:
+            state = init_train_state(mdl)
+            for i in range(3):
+                state, _ = step_fn(state, batches(i))
+        save_checkpoint({tmp_path!r}, state, 3)
+
+        # "lose" 4 devices: restore onto a 4-device mesh and keep training
+        mesh4 = make_elastic_mesh(4, model_parallel=2)
+        from repro.models.steps import train_state_specs
+        abstract = train_state_specs(mdl, mesh4)
+        with mesh4:
+            restored, step = restore_checkpoint({tmp_path!r}, abstract)
+            assert step == 3
+            restored, m = step_fn(restored, batches(3))
+        assert np.isfinite(float(m["loss"]))
+        print("ELASTIC_OK", float(m["loss"]))
+    """)
+    assert "ELASTIC_OK" in out

@@ -1,0 +1,140 @@
+"""Unit tests for the paper's machinery: waters, skiing, engine behaviour."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import (HazyEngine, NaiveEngine, LinearModel, Skiing, Waters,
+                        alpha_star, eps_bounds, holder_M, opt_cost,
+                        skiing_schedule, sgd_step, zero_model, vector_norm)
+from repro.data import forest_like, dblife_like, example_stream
+
+
+def test_alpha_star():
+    # positive root of x^2 + sigma x - 1
+    for sigma in [0.0, 0.1, 0.5, 1.0]:
+        a = alpha_star(sigma)
+        assert a > 0
+        assert abs(a * a + sigma * a - 1.0) < 1e-12
+    assert abs(alpha_star(0.0) - 1.0) < 1e-12  # paper: sigma->0 => alpha->1
+
+
+def test_holder_M():
+    F = np.array([[3.0, -4.0], [1.0, 1.0]], np.float32)
+    assert holder_M(F, 1.0) == pytest.approx(7.0)     # max l1 row norm
+    assert holder_M(F, 2.0) == pytest.approx(5.0)     # max l2
+    assert holder_M(F, np.inf) == pytest.approx(4.0)  # max |entry|
+
+
+def test_eps_bounds_lemma():
+    """Lemma 3.1: |delta_w . f| <= M ||delta_w||_p for all rows f."""
+    r = np.random.default_rng(0)
+    F = r.normal(size=(200, 16)).astype(np.float32)
+    for (p, q) in [(2.0, 2.0), (np.inf, 1.0), (1.0, np.inf)]:
+        M = holder_M(F, q)
+        stored = LinearModel(r.normal(size=16).astype(np.float32), 0.3)
+        cur = LinearModel(stored.w + 0.05 * r.normal(size=16).astype(np.float32),
+                          stored.b + 0.01)
+        lo, hi = eps_bounds(cur, stored, M, p)
+        eps_stored = F @ stored.w - stored.b
+        eps_cur = F @ cur.w - cur.b
+        # above-high-water rows must be positive under the current model
+        assert np.all(eps_cur[eps_stored >= hi] >= 0)
+        assert np.all(eps_cur[eps_stored <= lo] < 0)
+
+
+def test_waters_monotone():
+    w = Waters(p=2.0, M=1.0)
+    stored = zero_model(4)
+    m1 = LinearModel(np.ones(4, np.float32) * 0.1, 0.0)
+    lw1, hw1 = w.update(m1, stored)
+    m2 = LinearModel(np.ones(4, np.float32) * 0.05, 0.0)  # model moved back
+    lw2, hw2 = w.update(m2, stored)
+    assert lw2 <= lw1 and hw2 >= hw1 * 0  # lw never rises, hw never falls
+    assert hw2 == hw1  # smaller delta cannot shrink the band (Eq. 2)
+
+
+def test_skiing_triggers():
+    sk = Skiing(S=1.0, alpha=1.0)
+    assert not sk.should_reorganize()
+    for _ in range(9):
+        sk.record_incremental(0.1)
+    assert not sk.should_reorganize()
+    sk.record_incremental(0.11)
+    assert sk.should_reorganize()
+    sk.record_reorg(2.0)
+    assert sk.a == 0 and sk.S == 2.0 and sk.reorgs == 1
+
+
+def test_skiing_vs_opt_adversarial():
+    """On the paper's own adversarial costs the ratio approaches 1+alpha+sigma."""
+    S = 1.0
+    costs = lambda s, i: 0.25 if s == 0 else 0.0  # reorganizing once fixes it
+    sched, total = skiing_schedule(costs, 40, S, alpha=1.0)
+    opt = opt_cost(costs, 40, S)
+    assert total <= (1 + 1.0 + 0.1) * opt + 2 * S
+
+
+def test_engine_consistency_and_band():
+    corpus = forest_like(scale=0.01)
+    stream = example_stream(corpus, seed=1, label_noise=0.0)
+    model = zero_model(corpus.features.shape[1])
+    eng = HazyEngine(corpus.features, p=2.0, q=2.0, policy="eager")
+    for _, f, y in [next(stream) for _ in range(500)]:
+        model = sgd_step(model, f, y, lr=0.05, l2=1e-3)
+        eng.apply_model(model)
+    assert eng.check_consistent()
+    assert 0.0 <= eng.band_fraction() <= 1.0
+
+
+def test_engine_matches_naive():
+    corpus = dblife_like(scale=0.02)
+    stream = example_stream(corpus, seed=2, label_noise=0.0)
+    model = zero_model(corpus.features.shape[1])
+    hazy = HazyEngine(corpus.features, p=np.inf, q=1.0, policy="eager")
+    naive = NaiveEngine(corpus.features, policy="eager")
+    for _, f, y in [next(stream) for _ in range(200)]:
+        model = sgd_step(model, f, y, lr=0.05, l2=1e-3)
+        hazy.apply_model(model)
+        naive.apply_model(model)
+    assert hazy.all_members() == naive.all_members()
+    for i in range(0, corpus.features.shape[0], 997):
+        assert hazy.label(i) == naive.label(i)
+
+
+def test_lazy_policy_exact_on_read():
+    corpus = forest_like(scale=0.01)
+    stream = example_stream(corpus, seed=3, label_noise=0.0)
+    model = zero_model(corpus.features.shape[1])
+    lazy = HazyEngine(corpus.features, p=2.0, q=2.0, policy="lazy")
+    eager = HazyEngine(corpus.features, p=2.0, q=2.0, policy="eager")
+    for k, (_, f, y) in enumerate(next(stream) for _ in range(300)):
+        model = sgd_step(model, f, y, lr=0.05, l2=1e-3)
+        lazy.apply_model(model)
+        eager.apply_model(model)
+        if k % 50 == 17:
+            assert lazy.all_members() == eager.all_members()
+    assert lazy.check_consistent() and eager.check_consistent()
+
+
+def test_hybrid_label_agrees():
+    corpus = forest_like(scale=0.01)
+    stream = example_stream(corpus, seed=4, label_noise=0.0)
+    model = zero_model(corpus.features.shape[1])
+    eng = HazyEngine(corpus.features, p=2.0, q=2.0, policy="eager",
+                     buffer_frac=0.05)
+    for _, f, y in [next(stream) for _ in range(200)]:
+        model = sgd_step(model, f, y, lr=0.05, l2=1e-3)
+        eng.apply_model(model)
+    r = np.random.default_rng(0)
+    for i in r.integers(0, corpus.features.shape[0], 500):
+        lab, how = eng.hybrid_label(int(i))
+        assert lab == eng.label(int(i))
+        assert how in ("water", "buffer", "disk")
+
+
+def test_vector_norms():
+    x = np.array([3.0, -4.0], np.float32)
+    assert vector_norm(x, 1.0) == pytest.approx(7.0)
+    assert vector_norm(x, 2.0) == pytest.approx(5.0)
+    assert vector_norm(x, np.inf) == pytest.approx(4.0)

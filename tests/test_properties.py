@@ -1,0 +1,129 @@
+"""Hypothesis property tests for the system's invariants.
+
+The golden invariants of the paper:
+  P1 (safety, Lemma 3.1): entities outside [lw, hw] NEVER change label
+     between reorganizations.
+  P2 (view exactness): after any update/reorg interleaving, the maintained
+     view equals a from-scratch relabel under the current model.
+  P3 (SKIING competitiveness): cost(SKIING) <= (1+alpha+sigma)*OPT + O(S)
+     on any monotone cost matrix.
+  P4 (waters monotonicity, Eq. 2): lw non-increasing, hw non-decreasing
+     between reorganizations.
+"""
+import math
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (HazyEngine, LinearModel, Waters, eps_bounds,
+                        holder_M, opt_cost, skiing_schedule, sgd_step,
+                        zero_model)
+
+DIMS = st.integers(min_value=2, max_value=12)
+
+
+def _rand_floats(r, shape, scale=1.0):
+    return (r.standard_normal(shape) * scale).astype(np.float32)
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 10_000), d=DIMS,
+       pq=st.sampled_from([(2.0, 2.0), (math.inf, 1.0)]))
+def test_p1_safety_outside_band(seed, d, pq):
+    p, q = pq
+    r = np.random.default_rng(seed)
+    F = _rand_floats(r, (64, d))
+    M = holder_M(F, q)
+    stored = LinearModel(_rand_floats(r, d, 0.5), float(r.normal()))
+    waters = Waters(p=p, M=M)
+    eps_stored = F @ stored.w - stored.b
+    labels_at_store = eps_stored >= 0
+    cur = stored.copy()
+    for _ in range(5):
+        cur = LinearModel(cur.w + _rand_floats(r, d, 0.05),
+                          cur.b + float(r.normal() * 0.02))
+        lw, hw = waters.update(cur, stored)
+        eps_cur = F @ cur.w - cur.b
+        safe_pos = eps_stored >= hw
+        safe_neg = eps_stored <= lw
+        assert np.all(eps_cur[safe_pos] >= 0)
+        assert np.all(eps_cur[safe_neg] < 0)
+        # P4 monotonicity
+        assert waters.lw <= 0.0 <= waters.hw or waters.lw <= waters.hw
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000), n_updates=st.integers(5, 60),
+       alpha=st.sampled_from([0.5, 1.0, 2.0]))
+def test_p2_view_exactness(seed, n_updates, alpha):
+    r = np.random.default_rng(seed)
+    d = 8
+    F = _rand_floats(r, (256, d))
+    F /= np.maximum(np.linalg.norm(F, axis=1, keepdims=True), 1e-9)
+    eng = HazyEngine(F, p=2.0, q=2.0, alpha=alpha, policy="eager",
+                     cost_mode="modeled")
+    model = zero_model(d)
+    for _ in range(n_updates):
+        f = F[int(r.integers(0, 256))]
+        y = float(r.choice([-1.0, 1.0]))
+        model = sgd_step(model, f, y, lr=0.1, l2=1e-3)
+        eng.apply_model(model)
+    assert eng.check_consistent()
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000), n=st.integers(8, 40),
+       sigma=st.sampled_from([0.25, 0.5, 1.0]))
+def test_p3_skiing_competitive(seed, n, sigma):
+    """Random monotone costs with the paper's §3.3 assumptions: c(s,i)
+    nondecreasing in i for fixed s, and c <= sigma*S (an incremental step
+    never costs more than a scan). With alpha = alpha_star(sigma), Lemma 3.2
+    gives ratio (1 + alpha + sigma); finite horizons add O(S) edge slack."""
+    from repro.core import alpha_star
+    r = np.random.default_rng(seed)
+    S = 1.0
+    # §3.3 requires BOTH: (i) c(s,i) nondecreasing in i for fixed s, and
+    # (ii) c(s,i) <= c(s',i) for s >= s' (a fresher reorg never costs more).
+    # c(s,i) = g(i - s) with g a random nondecreasing function satisfies both.
+    incr = r.uniform(0.0, 0.15, size=n + 1)
+    g = np.minimum(np.cumsum(incr), sigma * S)
+
+    def costs(s, i):
+        return float(g[i - s])
+
+    alpha = alpha_star(sigma)
+    _, total = skiing_schedule(costs, n, S, alpha=alpha)
+    opt = opt_cost(costs, n, S)
+    assert total <= (1 + alpha + sigma) * opt + 3 * S + 1e-9
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000), d=DIMS)
+def test_sgd_reduces_hinge_on_example(seed, d):
+    r = np.random.default_rng(seed)
+    f = _rand_floats(r, d)
+    f /= max(np.linalg.norm(f), 1e-9)
+    y = float(r.choice([-1.0, 1.0]))
+    m = LinearModel(_rand_floats(r, d, 0.1), 0.0)
+    z0 = y * (f @ m.w - m.b)
+    m2 = sgd_step(m, f, y, lr=0.1, l2=0.0)
+    z1 = y * (f @ m2.w - m2.b)
+    if z0 < 1.0:           # active hinge: margin must improve
+        assert z1 > z0
+    else:                  # inactive: model unchanged (l2=0)
+        assert np.allclose(m2.w, m.w) and m2.b == m.b
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_random_features_approximate_kernel(seed):
+    from repro.core import RandomFeatures
+    from repro.core.random_features import gaussian_kernel
+    r = np.random.default_rng(seed)
+    X = _rand_floats(r, (20, 6))
+    X /= np.maximum(np.linalg.norm(X, axis=1, keepdims=True), 1e-9)
+    rf = RandomFeatures(6, 2048, sigma=1.0, seed=seed)
+    Z = rf(X)
+    K_approx = Z @ Z.T
+    K_true = gaussian_kernel(X, X, sigma=1.0)
+    assert np.max(np.abs(K_approx - K_true)) < 0.15

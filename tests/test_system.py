@@ -1,0 +1,107 @@
+"""End-to-end behaviour tests for the paper's system (ClassificationView)."""
+import numpy as np
+import pytest
+
+from repro.core import ClassificationView, MulticlassView
+from repro.data import dblife_like, example_stream, forest_like
+
+
+def test_view_lifecycle_eager():
+    corpus = forest_like(scale=0.005)
+    view = ClassificationView(corpus.features, policy="eager", norm=(2.0, 2.0),
+                              lr=0.05)
+    stream = example_stream(corpus, seed=0, label_noise=0.0)
+    for _, (i, _f, y) in zip(range(400), stream):
+        view.insert_example(i, y)
+    # reads are exact w.r.t. the current model
+    truth = np.where(view.F @ view.model.w - view.model.b >= 0, 1, -1)
+    assert view.all_members() == int(np.sum(truth == 1))
+    for i in range(0, len(truth), 311):
+        assert view.label(i) == truth[i]
+    # members() returns exactly the positive ids
+    mem = set(view.members().tolist())
+    assert mem == set(np.nonzero(truth == 1)[0].tolist())
+
+
+def test_view_policies_agree():
+    corpus = forest_like(scale=0.005)
+    stream = list(zip(range(300), example_stream(corpus, seed=1, label_noise=0.0)))
+    views = {p: ClassificationView(corpus.features, policy=p, norm=(2.0, 2.0),
+                                   lr=0.05) for p in ("eager", "lazy", "hybrid")}
+    views["naive"] = ClassificationView(corpus.features, policy="eager",
+                                        engine="naive", lr=0.05)
+    for _, (i, _f, y) in stream:
+        for v in views.values():
+            v.insert_example(i, y)
+    counts = {p: v.all_members() for p, v in views.items()}
+    assert len(set(counts.values())) == 1, counts
+    for i in range(0, corpus.features.shape[0], 499):
+        labs = {p: v.label(i) for p, v in views.items()}
+        assert len(set(labs.values())) == 1, (i, labs)
+
+
+def test_view_retrain_from_scratch_matches():
+    """Footnote 2: retraining replays the example log deterministically."""
+    corpus = forest_like(scale=0.005)
+    view = ClassificationView(corpus.features, policy="eager", norm=(2.0, 2.0),
+                              lr=0.05)
+    stream = example_stream(corpus, seed=2, label_noise=0.0)
+    for _, (i, _f, y) in zip(range(150), stream):
+        view.insert_example(i, y)
+    w_before, b_before = view.model.w.copy(), view.model.b
+    count_before = view.all_members()
+    view.retrain_from_scratch()
+    np.testing.assert_allclose(view.model.w, w_before, rtol=1e-6)
+    assert view.model.b == pytest.approx(b_before)
+    assert view.all_members() == count_before
+
+
+def test_view_with_feature_fn_refresh():
+    """The feature function is a backbone stand-in; refresh_features
+    re-embeds + reclusters (paper: feature change => full reorganization)."""
+    corpus = forest_like(scale=0.003)
+    scale = {"v": 1.0}
+
+    def feature_fn(X):
+        return np.asarray(X, np.float32) * scale["v"]
+
+    view = ClassificationView(corpus.features, feature_fn=feature_fn,
+                              policy="eager", norm=(2.0, 2.0), lr=0.05)
+    stream = example_stream(corpus, seed=3, label_noise=0.0)
+    for _, (i, _f, y) in zip(range(100), stream):
+        view.insert_example(i, y)
+    scale["v"] = 2.0  # backbone changed
+    view.refresh_features()
+    truth = np.where(view.F @ view.model.w - view.model.b >= 0, 1, -1)
+    assert view.all_members() == int(np.sum(truth == 1))
+
+
+def test_multiclass_one_vs_all():
+    r = np.random.default_rng(0)
+    k, n, d = 4, 2000, 16
+    centers = r.normal(size=(k, d)).astype(np.float32) * 3
+    cls = r.integers(0, k, n)
+    F = (centers[cls] + r.normal(size=(n, d)).astype(np.float32))
+    F /= np.maximum(np.linalg.norm(F, axis=1, keepdims=True), 1e-9)
+    mv = MulticlassView(F, k, policy="eager", lr=0.1, p=2.0, q=2.0)
+    for i in r.integers(0, n, 600):
+        mv.insert_example(int(i), int(cls[i]))
+    pred = np.array([mv.predict(int(i)) for i in range(0, n, 7)])
+    acc = float(np.mean(pred == cls[::7]))
+    assert acc > 0.7, acc
+    counts = mv.class_counts()
+    assert len(counts) == k and all(c >= 0 for c in counts)
+
+
+def test_skiing_reorganizes_under_drift():
+    """A drifting model must trigger reorganizations (the SKIING choice),
+    and the view must stay consistent across them."""
+    corpus = dblife_like(scale=0.01)
+    view = ClassificationView(corpus.features, policy="eager",
+                              norm=(np.inf, 1.0), lr=0.3, cost_mode="modeled")
+    stream = example_stream(corpus, seed=4, label_noise=0.2)
+    for _, (i, _f, y) in zip(range(600), stream):
+        view.insert_example(i, y)
+    eng = view.engine
+    assert eng.skiing.reorgs >= 1
+    assert eng.check_consistent()
