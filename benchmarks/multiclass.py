@@ -1,0 +1,88 @@
+"""Multiclass one-vs-all maintenance (paper App. B.5.4 / C.3) at k = 16 on
+the scaled-down Cora workload: the seed's per-class Python loop (k
+independent engines, k feature-table copies) vs the vectorized multi-view
+engine (one shared table, stacked models), per-example and batched.
+
+Emits the usual CSV rows plus machine-readable ``BENCH_multiclass.json``
+(written to the working directory) so CI can gate on the speedup."""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from benchmarks.common import BENCH_SCALE, emit
+from repro.core import MulticlassView
+from repro.data import cora_like, multiclass_example_stream
+
+K = int(os.environ.get("BENCH_MULTICLASS_K", "16"))
+BATCH = int(os.environ.get("BENCH_MULTICLASS_BATCH", "32"))
+
+
+def _workload():
+    # BENCH_SCALE defaults to 0.1 of the paper corpora; Cora is already
+    # tiny, so the default maps to the full 2708 papers.
+    corpus = cora_like(scale=BENCH_SCALE / 0.1)
+    n_updates = max(128, int(2000 * (BENCH_SCALE / 0.1)))
+    stream = multiclass_example_stream(corpus, seed=7)
+    inserts = [next(stream) for _ in range(n_updates)]
+    # relabel into K classes so k is a free experimental knob (the paper
+    # uses Cora's 7 topics; we stress more views per table)
+    inserts = [(i, c % K) for i, c in inserts]
+    return corpus, inserts
+
+
+def _run(view: MulticlassView, inserts, batch: int | None) -> float:
+    t0 = time.perf_counter()
+    if batch is None:
+        for i, c in inserts:
+            view.insert_example(i, c)
+    else:
+        for j in range(0, len(inserts), batch):
+            chunk = inserts[j:j + batch]
+            view.insert_examples([i for i, _ in chunk], [c for _, c in chunk])
+    return (time.perf_counter() - t0) / len(inserts) * 1e6   # us / insert
+
+
+def main() -> None:
+    corpus, inserts = _workload()
+    kw = dict(policy="eager", lr=0.1, p=2.0, q=2.0, cost_mode="modeled")
+
+    seed_view = MulticlassView(corpus.features, K, vectorized=False, **kw)
+    us_seed = _run(seed_view, inserts, batch=None)
+
+    vec_view = MulticlassView(corpus.features, K, vectorized=True, **kw)
+    us_vec = _run(vec_view, inserts, batch=None)
+
+    bat_view = MulticlassView(corpus.features, K, vectorized=True, **kw)
+    us_bat = _run(bat_view, inserts, batch=BATCH)
+
+    # identical final models => identical view contents (exactness check)
+    assert seed_view.class_counts() == bat_view.class_counts(), \
+        (seed_view.class_counts(), bat_view.class_counts())
+    assert bat_view.check_consistent()
+
+    n = corpus.features.shape[0]
+    emit(f"multiclass_seed_loop_k{K}_n{n}", us_seed)
+    emit(f"multiclass_vectorized_k{K}_n{n}", us_vec,
+         f"{us_seed / us_vec:.1f}x")
+    emit(f"multiclass_vectorized_batch{BATCH}_k{K}_n{n}", us_bat,
+         f"{us_seed / us_bat:.1f}x")
+
+    payload = {
+        "workload": {"corpus": corpus.name, "n": n,
+                     "d": int(corpus.features.shape[1]), "k": K,
+                     "updates": len(inserts), "batch": BATCH},
+        "us_per_insert": {"seed_loop": us_seed, "vectorized": us_vec,
+                          "vectorized_batched": us_bat},
+        "speedup": {"vectorized": us_seed / us_vec,
+                    "vectorized_batched": us_seed / us_bat},
+    }
+    with open("BENCH_multiclass.json", "w") as f:
+        json.dump(payload, f, indent=2)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,12 +1,19 @@
 """Benchmark driver — one module per paper table/figure (DESIGN.md §7).
 Prints ``name,us_per_call,derived`` CSV. Scale with BENCH_SCALE (default
 0.1 of the paper's corpus sizes, so the suite finishes on one CPU core).
+
+Exits non-zero if any module fails (CI gates on this); the failure still
+leaves a ``<module>_FAILED`` CSV row for postmortem parsing.
 """
 from __future__ import annotations
 
+import os
 import sys
 import time
 import traceback
+
+# allow `python benchmarks/run.py` from anywhere (sys.path[0] is benchmarks/)
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 
 MODULES = [
@@ -18,13 +25,15 @@ MODULES = [
     "benchmarks.scalability",       # Fig. 11(A)
     "benchmarks.sensitivity",       # Fig. 12
     "benchmarks.waters",            # Fig. 13
+    "benchmarks.multiclass",        # App. B.5.4 / C.3 (multi-view engine)
     "benchmarks.kernel_bench",      # framework kernels
 ]
 
 
-def main() -> None:
+def main() -> int:
     print("name,us_per_call,derived")
     only = sys.argv[1] if len(sys.argv) > 1 else None
+    failed = []
     for mod_name in MODULES:
         if only and only not in mod_name:
             continue
@@ -37,7 +46,12 @@ def main() -> None:
             print(f"# {mod_name} FAILED", file=sys.stderr)
             traceback.print_exc()
             print(f"{mod_name}_FAILED,0,error")
+            failed.append(mod_name)
+    if failed:
+        print(f"# failed modules: {', '.join(failed)}", file=sys.stderr)
+        return 1
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

@@ -4,6 +4,7 @@ from repro.core.linear_model import (LinearModel, zero_model, sgd_step,
 from repro.core.waters import Waters, holder_M, eps_bounds, vector_norm
 from repro.core.skiing import Skiing, alpha_star, skiing_schedule, opt_cost
 from repro.core.hazy import HazyEngine, NaiveEngine
+from repro.core.multiview import MultiViewEngine, row_norms
 from repro.core.view import ClassificationView
 from repro.core.multiclass import MulticlassView
 from repro.core.random_features import RandomFeatures

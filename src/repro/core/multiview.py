@@ -1,0 +1,270 @@
+"""Vectorized multi-view HAZY maintenance: k one-vs-all views, ONE table.
+
+The paper's multiclass experiments (App. B.5.4 / C.3) run k independent
+binary HAZY views — our seed reproduced that literally with k `HazyEngine`s,
+each holding its *own copy* of the feature table (`F_sorted`) and re-scanning
+it per update. Following F-IVM's observation that many model-based views
+over the same relation should share the underlying relational state, this
+engine keeps
+
+  * the feature table `F` exactly once, in fixed entity order — it is never
+    gathered into per-view sorted copies (k·n·d bytes -> n·d bytes);
+  * all k models stacked as a `(k, d)` matrix `W` plus `(k,)` biases, so one
+    training insert updates every view with a single rank-1 update and one
+    matrix-vector product;
+  * the eps-clustered scratch state per view as *rows of arrays*:
+    `eps_sorted`/`perm`/`inv_perm`/`labels_sorted` are `(k, n)`, Hölder
+    waters `lw`/`hw` are `(k,)`, and the SKIING accumulators are `(k,)` —
+    no per-view Python objects on the hot path.
+
+One maintenance round then costs: a vectorized waters update (row norms of
+`W − W_stored`), k binary searches to locate the per-view bands, ONE gather
+of the union band's feature rows, ONE matmul `F[union] @ W.T` that
+reclassifies every view's band simultaneously, and a per-view scatter of
+band-sized label slices. Reorganizations batch the same way: all due views
+re-sort from one `F @ W[due].T` product. HBM/cache traffic is proportional
+to the union band, not k times the table.
+
+Cost accounting mirrors `hazy.py`: `cost_mode="measured"` splits the round's
+wall time across views by band width; `"modeled"` charges `S_v · width_v/n`
+(deterministic, used by the equivalence tests). Each view keeps its own
+SKIING accumulator, so per-view reorg cadence matches the k-engine seed.
+"""
+from __future__ import annotations
+
+import time
+from typing import Tuple
+
+import numpy as np
+
+from repro.core.hazy import Stats
+from repro.core.skiing import alpha_star
+from repro.core.waters import holder_M
+
+
+def row_norms(X: np.ndarray, p: float) -> np.ndarray:
+    """`vector_norm` over rows: (k, d) -> (k,)."""
+    if X.size == 0:
+        return np.zeros(X.shape[0], np.float32)
+    if np.isinf(p):
+        return np.max(np.abs(X), axis=1)
+    if p == 1.0:
+        return np.sum(np.abs(X), axis=1)
+    return np.sum(np.abs(X) ** p, axis=1) ** (1.0 / p)
+
+
+class MultiViewEngine:
+    """Eager/lazy maintenance of k binary views over one shared table."""
+
+    def __init__(self, features: np.ndarray, num_views: int, *,
+                 p: float = float("inf"), q: float = 1.0, alpha: float = 1.0,
+                 policy: str = "eager", cost_mode: str = "measured",
+                 touch_ns: float = 0.0):
+        assert policy in ("eager", "lazy")
+        self.F = np.ascontiguousarray(features, np.float32)
+        self.n, self.d = self.F.shape
+        self.k = int(num_views)
+        self.p = p
+        self.policy = policy
+        self.cost_mode = cost_mode
+        self.touch_ns = touch_ns
+        self.M = holder_M(self.F, q)
+
+        k, n = self.k, self.n
+        self.W = np.zeros((k, self.d), np.float32)
+        self.b = np.zeros(k, np.float64)
+        self.W_stored = np.zeros((k, self.d), np.float32)
+        self.b_stored = np.zeros(k, np.float64)
+        self.lw = np.zeros(k, np.float64)
+        self.hw = np.zeros(k, np.float64)
+        self.perm = np.zeros((k, n), np.int64)
+        self.inv_perm = np.zeros((k, n), np.int64)
+        self.eps_sorted = np.zeros((k, n), np.float32)
+        self.labels_sorted = np.zeros((k, n), np.int8)
+        self.pos_count = np.zeros(k, np.int64)
+        self.stats = Stats()
+        self.reorg_counts = np.zeros(k, np.int64)
+        self._pending = False  # lazy: a model round awaits catch-up
+
+        # Initial organization of all k views; the measured wall time seeds
+        # the per-view SKIING S (one view's share of the batched reorg).
+        t0 = time.perf_counter()
+        self._reorganize_views(np.ones(k, bool))
+        S0 = max(time.perf_counter() - t0, 1e-9) / k
+        t0 = time.perf_counter()
+        float(np.sum(self.eps_sorted[0]))
+        scan = max(time.perf_counter() - t0, 1e-12)
+        self.sigma = min(1.0, scan / S0)
+        self.alpha = alpha if alpha else alpha_star(self.sigma)
+        self.S = np.full(k, S0, np.float64)       # per-view reorg cost
+        self.acc = np.zeros(k, np.float64)        # SKIING accumulators
+        self.stats = Stats()                      # init organization is free
+        self.reorg_counts[:] = 0
+
+    # ------------------------------------------------------------------
+    # Organization
+    # ------------------------------------------------------------------
+
+    def _reorganize_views(self, mask: np.ndarray):
+        """Re-sort the scratch state of every view in `mask` from one
+        shared `F @ W[mask].T` product. F itself never moves."""
+        views = np.flatnonzero(mask)
+        if views.size == 0:
+            return
+        t0 = time.perf_counter()
+        Z = self.F @ self.W[views].T - self.b[views].astype(np.float32)
+        for j, v in enumerate(views):
+            e = Z[:, j]
+            order = np.argsort(e, kind="stable")
+            self.perm[v] = order
+            self.inv_perm[v, order] = np.arange(self.n)
+            self.eps_sorted[v] = e[order]
+            lab = np.where(self.eps_sorted[v] >= 0, 1, -1).astype(np.int8)
+            self.labels_sorted[v] = lab
+            self.pos_count[v] = int(np.count_nonzero(lab == 1))
+        self.W_stored[views] = self.W[views]
+        self.b_stored[views] = self.b[views]
+        self.lw[views] = 0.0
+        self.hw[views] = 0.0
+        wall = (time.perf_counter() - t0
+                + self.touch_ns * 1e-9 * self.n * views.size)
+        if hasattr(self, "S"):
+            self.S[views] = wall / views.size
+            self.acc[views] = 0.0
+        self.stats.reorgs += int(views.size)
+        self.reorg_counts[views] += 1
+        self.stats.reorg_seconds += wall
+
+    # ------------------------------------------------------------------
+    # One maintenance round (all k views)
+    # ------------------------------------------------------------------
+
+    def apply_models(self, W: np.ndarray, b: np.ndarray):
+        """The k views must reflect the stacked model (W, b): eager does the
+        banded reclassify now, lazy defers it to the next read."""
+        self.W = np.asarray(W, np.float32).copy()
+        self.b = np.asarray(b, np.float64).copy()
+        self.stats.rounds += 1
+        if self.policy == "lazy":
+            self._pending = True
+            return
+        # SKIING, check-first (Fig. 7), independently per view.
+        due = self.acc >= self.alpha * self.S
+        self._reorganize_views(due)
+        self._incremental_step(~due)
+
+    def _bands(self, views: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+        lo = np.empty(views.size, np.int64)
+        hi = np.empty(views.size, np.int64)
+        eps, lw, hw = self.eps_sorted, self.lw, self.hw
+        for j, v in enumerate(views):
+            row = eps[v]
+            lo[j] = row.searchsorted(lw[v], "left")    # ndarray method: the
+            hi[j] = row.searchsorted(hw[v], "right")   # hot path, no wrapper
+        return lo, hi
+
+    def _relabel_bands(self, views: np.ndarray):
+        """The shared banded-reclassify core: vectorized waters update
+        (Eq. 2), per-view band location, ONE gather of the union band's
+        feature rows and ONE matmul that classifies every view's band.
+        Returns (lo, widths, total, wall) for the caller's cost model."""
+        t0 = time.perf_counter()
+        dw = row_norms(self.W[views] - self.W_stored[views], self.p)
+        db = self.b[views] - self.b_stored[views]
+        self.lw[views] = np.minimum(self.lw[views], -self.M * dw + db)
+        self.hw[views] = np.maximum(self.hw[views], self.M * dw + db)
+        lo, hi = self._bands(views)
+        widths = hi - lo
+        total = int(widths.sum())
+        if total > 0:
+            band_ids = [self.perm[v, lo[j]:hi[j]] for j, v in enumerate(views)]
+            uids = np.unique(np.concatenate(band_ids))
+            # ONE matmul classifies every view's band under its own model.
+            Z = self.F[uids] @ self.W[views].T - self.b[views].astype(np.float32)
+            for j, v in enumerate(views):
+                if widths[j] == 0:
+                    continue
+                z = Z[np.searchsorted(uids, band_ids[j]), j]
+                new = np.where(z >= 0, 1, -1).astype(np.int8)
+                old = self.labels_sorted[v, lo[j]:hi[j]]
+                self.pos_count[v] += (int(np.count_nonzero(new == 1))
+                                      - int(np.count_nonzero(old == 1)))
+                self.labels_sorted[v, lo[j]:hi[j]] = new
+        wall = time.perf_counter() - t0 + self.touch_ns * 1e-9 * total
+        self.stats.tuples_reclassified += total
+        self.stats.tuples_total_possible += self.n * views.size
+        return lo, widths, total, wall
+
+    def _incremental_step(self, mask: np.ndarray):
+        views = np.flatnonzero(mask)
+        if views.size == 0:
+            return
+        lo, widths, total, wall = self._relabel_bands(views)
+        if self.cost_mode == "modeled":
+            costs = self.S[views] * (widths / max(1, self.n))
+        else:
+            costs = wall * (widths / max(1, total))
+        self.acc[views] += costs
+        self.stats.band_fraction_last = float(widths.mean()) / max(1, self.n)
+        self.stats.incremental_seconds += wall
+
+    def _lazy_catch_up(self):
+        if not self._pending:
+            return
+        lo, widths, total, wall = self._relabel_bands(np.arange(self.k))
+        self._pending = False
+        if self.cost_mode == "modeled":
+            # paper §3.4 lazy waste: (N_R − N_+)/N_R per view
+            n_read = np.maximum(1, self.n - lo)
+            waste = np.maximum(0.0, (n_read - self.pos_count) / n_read)
+            costs = self.S * waste
+        else:
+            costs = wall * (widths / max(1, total))
+        self.acc += costs
+        due = self.acc >= self.alpha * self.S
+        self._reorganize_views(due)
+
+    # ------------------------------------------------------------------
+    # Reads
+    # ------------------------------------------------------------------
+
+    def all_members(self) -> np.ndarray:
+        """Per-view positive-member counts, (k,) — the All Members probe
+        answered for every one-vs-all view at once."""
+        if self.policy == "lazy":
+            self._lazy_catch_up()
+        return self.pos_count.copy()
+
+    def members(self, view: int) -> np.ndarray:
+        if self.policy == "lazy":
+            self._lazy_catch_up()
+        return self.perm[view, self.labels_sorted[view] == 1]
+
+    def label(self, view: int, entity_id: int) -> int:
+        if self.policy == "lazy":
+            self._lazy_catch_up()
+        return int(self.labels_sorted[view, self.inv_perm[view, entity_id]])
+
+    def labels_of(self, entity_id: int) -> np.ndarray:
+        """All k view labels of one entity, (k,) int8 (one eps-map probe
+        per view; no feature access)."""
+        if self.policy == "lazy":
+            self._lazy_catch_up()
+        pos = self.inv_perm[:, entity_id]
+        return self.labels_sorted[np.arange(self.k), pos]
+
+    def band_fractions(self) -> np.ndarray:
+        lo, hi = self._bands(np.arange(self.k))
+        return (hi - lo) / max(1, self.n)
+
+    def check_consistent(self) -> bool:
+        """Golden invariant, per view: maintained labels == from-scratch
+        relabel of the shared table under that view's current model."""
+        if self.policy == "lazy":
+            self._lazy_catch_up()
+        Z = self.F @ self.W.T - self.b.astype(np.float32)
+        for v in range(self.k):
+            truth = np.where(Z[self.perm[v], v] >= 0, 1, -1).astype(np.int8)
+            if not np.array_equal(truth, self.labels_sorted[v]):
+                return False
+        return True

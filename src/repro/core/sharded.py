@@ -29,6 +29,11 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+try:                                   # jax >= 0.6 exports it at top level
+    shard_map = jax.shard_map
+except AttributeError:                 # pinned 0.4.x: experimental namespace
+    from jax.experimental.shard_map import shard_map
+
 
 class ShardedHazyState(NamedTuple):
     F: jax.Array            # (n, d) bf16 — rows in shard-local eps-sorted order
@@ -89,7 +94,7 @@ def make_naive_update_step(mesh: Mesh):
         labels = jnp.where(z >= 0, 1, -1).astype(jnp.int8)
         return labels
 
-    fn = jax.shard_map(
+    fn = shard_map(
         local, mesh=mesh,
         in_specs=(pf, pr, pr, pr, pw, P(), P(), P(), pw, P()),
         out_specs=pr)
@@ -133,7 +138,7 @@ def make_hazy_update_step(mesh: Mesh, n: int, cap_frac: float = 1 / 64):
             wmax = jax.lax.pmax(wmax, ax)
         return labels, wsum, wmax
 
-    fn = jax.shard_map(
+    fn = shard_map(
         local, mesh=mesh,
         in_specs=(pf, pr, pr, pr, pw, P(), P(), P(), pw, P()),
         out_specs=(pr, P(), P()))
@@ -165,7 +170,7 @@ def make_reorganize_step(mesh: Mesh):
         labels_new = jnp.where(eps_new >= 0, 1, -1).astype(jnp.int8)
         return F_new, eps_new, labels_new, perm_new
 
-    fn = jax.shard_map(
+    fn = shard_map(
         local, mesh=mesh,
         in_specs=(pf, pr, pr, pr, pw, P(), P(), P(), pw, P()),
         out_specs=(pf, pr, pr, pr))
@@ -188,7 +193,7 @@ def make_all_members_step(mesh: Mesh):
             c = jax.lax.psum(c, ax)
         return c
 
-    fn = jax.shard_map(local, mesh=mesh, in_specs=(pr,), out_specs=P())
+    fn = shard_map(local, mesh=mesh, in_specs=(pr,), out_specs=P())
     return lambda state: fn(state.labels)
 
 
@@ -259,3 +264,234 @@ class ShardedHazy:
 
     def all_members(self, state) -> int:
         return int(self._count(state))
+
+
+# ---------------------------------------------------------------------------
+# Multi-view twin: k one-vs-all views over ONE shared, never-gathered table.
+# The view index is a vmapped axis — one program maintains all k views.
+# ---------------------------------------------------------------------------
+
+class ShardedMultiViewState(NamedTuple):
+    """k views sharing one feature table.
+
+    F stays in FIXED entity order for the lifetime of the state (it is the
+    single shared copy — reorganization re-sorts the per-view scratch
+    arrays, never the table). Per-view state carries a leading k axis and
+    is replicated over the model axis, sharded over rows."""
+    F: jax.Array            # (n, d) — fixed entity order, shared by all views
+    ids: jax.Array          # (n,) i32 global entity id per row
+    eps: jax.Array          # (k, n) f32 — per-view eps, shard-locally sorted
+    labels: jax.Array       # (k, n) int8 aligned to eps order
+    perm: jax.Array         # (k, n) i32 shard-LOCAL row index per position
+    gids: jax.Array         # (k, n) i32 global entity id per position
+    W_stored: jax.Array     # (k, d) f32
+    b_stored: jax.Array     # (k,) f32
+    lw: jax.Array           # (k,) f32
+    hw: jax.Array           # (k,) f32
+
+
+def multiview_state_specs(n: int, d: int, k: int, mesh: Mesh,
+                          dtype=jnp.bfloat16):
+    row_axes = _row_axes(mesh)
+    model = "model" if "model" in mesh.axis_names else None
+    rows = P(row_axes)
+    krows = P(None, row_axes)
+
+    def sds(shape, dt, spec):
+        return jax.ShapeDtypeStruct(shape, dt, sharding=NamedSharding(mesh, spec))
+
+    return ShardedMultiViewState(
+        F=sds((n, d), dtype, P(row_axes, model)),
+        ids=sds((n,), jnp.int32, rows),
+        eps=sds((k, n), jnp.float32, krows),
+        labels=sds((k, n), jnp.int8, krows),
+        perm=sds((k, n), jnp.int32, krows),
+        gids=sds((k, n), jnp.int32, krows),
+        W_stored=sds((k, d), jnp.float32, P(None, model)),
+        b_stored=sds((k,), jnp.float32, P()),
+        lw=sds((k,), jnp.float32, P()),
+        hw=sds((k,), jnp.float32, P()),
+    )
+
+
+def _mv_specs(mesh: Mesh):
+    rows = _row_axes(mesh)
+    model = "model" if "model" in mesh.axis_names else None
+    return (P(rows, model), P(rows), P(None, rows), P(None, model))
+
+
+def make_multiview_hazy_update_step(mesh: Mesh, n: int, k: int,
+                                    cap_frac: float = 1 / 64):
+    """Banded incremental step for all k views in one launch; the view axis
+    is vmapped so XLA fuses the k band matmuls over the shared table.
+    Returns (state', widths_sum (k,), widths_max (k,))."""
+    pf, pr, pkr, pkw = _mv_specs(mesh)
+    model_ax = "model" if "model" in mesh.axis_names else None
+    rows = _row_axes(mesh)
+    n_shards = int(np.prod([mesh.shape[a] for a in rows])) if rows else 1
+    n_local = n // n_shards
+    cap = max(64, int(n_local * cap_frac))
+
+    def local(F, ids, eps, labels, perm, gids, W_s, b_s, lw, hw, W, b):
+        Ff = F.astype(jnp.float32)
+
+        def one_view(eps_v, labels_v, perm_v, lw_v, hw_v, w_v, b_v):
+            lo = jnp.searchsorted(eps_v, lw_v, side="left").astype(jnp.int32)
+            hi = jnp.searchsorted(eps_v, hw_v, side="right").astype(jnp.int32)
+            width = hi - lo
+            start = jnp.clip(lo, 0, jnp.maximum(0, eps_v.shape[0] - cap))
+            idx = jax.lax.dynamic_slice(perm_v, (start,), (cap,))
+            Fb = jnp.take(Ff, idx, axis=0)     # gather cap rows of the ONE table
+            z = jnp.einsum("nd,d->n", Fb, w_v)
+            if model_ax:
+                z = jax.lax.psum(z, model_ax)
+            z = z - b_v
+            new = jnp.where(z >= 0, 1, -1).astype(jnp.int8)
+            old = jax.lax.dynamic_slice(labels_v, (start,), (cap,))
+            pos = jnp.arange(cap) + start
+            in_band = (pos >= lo) & (pos < hi)
+            merged = jnp.where(in_band, new, old)
+            return jax.lax.dynamic_update_slice(labels_v, merged, (start,)), width
+
+        labels, widths = jax.vmap(one_view)(eps, labels, perm, lw, hw, W, b)
+        wsum, wmax = widths, widths
+        for ax in rows:
+            wsum = jax.lax.psum(wsum, ax)
+            wmax = jax.lax.pmax(wmax, ax)
+        return labels, wsum, wmax
+
+    fn = shard_map(
+        local, mesh=mesh,
+        in_specs=(pf, pr, pkr, pkr, pkr, pkr, pkw, P(), P(), P(), pkw, P()),
+        out_specs=(pkr, P(), P()))
+
+    def step(state: ShardedMultiViewState, W, b):
+        labels, wsum, wmax = fn(*state, W, b)
+        return state._replace(labels=labels), wsum, wmax
+
+    return step, cap
+
+
+def make_multiview_reorganize_step(mesh: Mesh):
+    """Re-sort every view's scratch arrays from ONE `F @ W.T` product.
+
+    Because the table itself is never permuted, reorganization does NOT
+    gather F rows at all — it is strictly cheaper than the single-view
+    reorganize (whose dominant cost is the row gather), and still needs no
+    collectives beyond the model-axis eps psum."""
+    pf, pr, pkr, pkw = _mv_specs(mesh)
+    model_ax = "model" if "model" in mesh.axis_names else None
+
+    def local(F, ids, eps, labels, perm, gids, W_s, b_s, lw, hw, W, b):
+        Z = jnp.einsum("nd,kd->kn", F.astype(jnp.float32), W)
+        if model_ax:
+            Z = jax.lax.psum(Z, model_ax)
+        Z = Z - b[:, None]
+        order = jnp.argsort(Z, axis=1).astype(jnp.int32)
+        eps_new = jnp.take_along_axis(Z, order, axis=1)
+        gids_new = jax.vmap(lambda o: jnp.take(ids, o))(order)
+        labels_new = jnp.where(eps_new >= 0, 1, -1).astype(jnp.int8)
+        return eps_new, labels_new, order, gids_new
+
+    fn = shard_map(
+        local, mesh=mesh,
+        in_specs=(pf, pr, pkr, pkr, pkr, pkr, pkw, P(), P(), P(), pkw, P()),
+        out_specs=(pkr, pkr, pkr, pkr))
+
+    def step(state: ShardedMultiViewState, W, b):
+        eps, labels, perm, gids = fn(*state, W, b)
+        k = b.shape[0]
+        zeros = jnp.zeros((k,), jnp.float32)
+        return ShardedMultiViewState(state.F, state.ids, eps, labels, perm,
+                                     gids, W, b, zeros, zeros)
+
+    return step
+
+
+def make_multiview_all_members_step(mesh: Mesh):
+    _, _, pkr, _ = _mv_specs(mesh)
+    rows = _row_axes(mesh)
+
+    def local(labels):
+        c = jnp.sum((labels == 1).astype(jnp.int32), axis=1)
+        for ax in rows:
+            c = jax.lax.psum(c, ax)
+        return c
+
+    fn = shard_map(local, mesh=mesh, in_specs=(pkr,), out_specs=P())
+    return lambda state: fn(state.labels)
+
+
+@dataclasses.dataclass
+class ShardedMultiViewHazy:
+    """Host driver for k views: pooled SKIING (a reorganization re-sorts all
+    views from one fused matmul, so the strategy treats it as one global
+    op), per-view Hölder waters kept host-side as arrays."""
+    mesh: Mesh
+    n: int
+    d: int
+    k: int
+    M: float
+    p: float = 2.0
+    alpha: float = 1.0
+    cap_frac: float = 1 / 64
+
+    def __post_init__(self):
+        hz, self.cap = make_multiview_hazy_update_step(
+            self.mesh, self.n, self.k, self.cap_frac)
+        self._hazy = jax.jit(hz)
+        self._reorg = jax.jit(make_multiview_reorganize_step(self.mesh))
+        self._count = jax.jit(make_multiview_all_members_step(self.mesh))
+        from repro.core.skiing import Skiing
+        self.skiing = Skiing(S=1.0, alpha=self.alpha)
+        self.lw = np.zeros(self.k, np.float64)
+        self.hw = np.zeros(self.k, np.float64)
+
+    def init_state(self, F: np.ndarray) -> ShardedMultiViewState:
+        specs = multiview_state_specs(self.n, self.d, self.k, self.mesh,
+                                      dtype=jnp.bfloat16)
+        put = lambda x, s: jax.device_put(x, s.sharding)
+        k, n = self.k, self.n
+        state = ShardedMultiViewState(
+            F=put(F.astype(np.float32), specs.F),
+            ids=put(np.arange(n, dtype=np.int32), specs.ids),
+            eps=put(np.zeros((k, n), np.float32), specs.eps),
+            labels=put(np.ones((k, n), np.int8), specs.labels),
+            perm=put(np.tile(np.arange(n, dtype=np.int32), (k, 1)), specs.perm),
+            gids=put(np.tile(np.arange(n, dtype=np.int32), (k, 1)), specs.gids),
+            W_stored=put(np.zeros((k, self.d), np.float32), specs.W_stored),
+            b_stored=put(np.zeros(k, np.float32), specs.b_stored),
+            lw=put(np.zeros(k, np.float32), specs.lw),
+            hw=put(np.zeros(k, np.float32), specs.hw),
+        )
+        return self._reorg(state, jnp.zeros((k, self.d), jnp.float32),
+                           jnp.zeros(k, jnp.float32))
+
+    def _do_reorg(self, state, W, b):
+        state = self._reorg(state, W, b)
+        self.skiing.record_reorg()
+        self.lw[:] = 0.0
+        self.hw[:] = 0.0
+        return state
+
+    def apply_models(self, state: ShardedMultiViewState, W, b):
+        """One eager round for all k views (modeled costs ∝ rows touched)."""
+        from repro.core.multiview import row_norms
+        if self.skiing.should_reorganize():
+            return self._do_reorg(state, W, b)
+        dw = row_norms(np.asarray(W) - np.asarray(state.W_stored), self.p)
+        db = np.asarray(b, np.float64) - np.asarray(state.b_stored, np.float64)
+        self.lw = np.minimum(self.lw, -self.M * dw + db)
+        self.hw = np.maximum(self.hw, self.M * dw + db)
+        state, wsum, wmax = self._hazy(
+            state._replace(lw=jnp.asarray(self.lw, jnp.float32),
+                           hw=jnp.asarray(self.hw, jnp.float32)), W, b)
+        if int(np.max(np.asarray(wmax))) > self.cap:
+            # some view's capacity window overflowed on some shard
+            return self._do_reorg(state, W, b)
+        self.skiing.record_incremental(
+            float(np.sum(np.asarray(wsum))) / (self.n * self.k))
+        return state
+
+    def all_members(self, state) -> np.ndarray:
+        return np.asarray(self._count(state))

@@ -55,9 +55,26 @@ class ClassificationView:
                               l2=self.l2, method=self.method)
         self.engine.apply_model(self.model)
 
-    def insert_examples(self, ids: Sequence[int], labels: Sequence[float]):
+    def insert_examples(self, ids: Sequence[int], labels: Sequence[float], *,
+                        batched: bool = True):
+        """Insert a batch of training examples.
+
+        `batched=True` is the fast path: SGD still runs example-by-example
+        (identical model trajectory to k `insert_example` calls), but view
+        maintenance is amortized to ONE `apply_model` round at the end —
+        reads after the batch observe only the batch-final model, and the
+        view stays exact w.r.t. it. `batched=False` reproduces the seed's
+        per-example maintenance (one HAZY round per insert)."""
+        if not batched:
+            for i, y in zip(ids, labels):
+                self.insert_example(i, y)
+            return
         for i, y in zip(ids, labels):
-            self.insert_example(i, y)
+            f = self.F[i]
+            self.examples.append((f, float(y)))
+            self.model = sgd_step(self.model, f, float(y), lr=self.lr,
+                                  l2=self.l2, method=self.method)
+        self.engine.apply_model(self.model)
 
     def retrain_from_scratch(self):
         """Paper footnote 2: deletions/label-changes retrain non-incrementally."""

@@ -96,6 +96,45 @@ def citeseer_like(scale: float = 1.0, hash_dim: int = 4096, seed: int = 2) -> Co
                             nnz=60, norm="l1", seed=seed)
 
 
+@dataclasses.dataclass
+class MulticlassCorpus:
+    name: str
+    features: np.ndarray      # (n, d) float32, row-normalized
+    classes: np.ndarray       # (n,) int class ids
+    num_classes: int
+
+
+def multiclass_corpus(name: str, n: int, d: int, num_classes: int, *,
+                      separation: float = 2.5, norm: str = "l2",
+                      seed: int = 0) -> MulticlassCorpus:
+    """k class-conditional clusters — the one-vs-all workload of the
+    paper's multiclass experiments (App. B.5.4 / C.3)."""
+    r = np.random.default_rng(seed)
+    centers = (r.normal(size=(num_classes, d)) * separation).astype(np.float32)
+    cls = r.integers(0, num_classes, n)
+    x = centers[cls] + r.normal(size=(n, d)).astype(np.float32)
+    x = _normalize(x, norm).astype(np.float32)
+    return MulticlassCorpus(name, x, cls.astype(np.int64), num_classes)
+
+
+def cora_like(scale: float = 1.0, num_classes: int = 7, hash_dim: int = 64,
+              seed: int = 5) -> MulticlassCorpus:
+    """Cora: 2708 papers, 7 topics. The binary word vectors go through the
+    hashing trick into `hash_dim` dense dims (same adaptation as DB/CS)."""
+    return multiclass_corpus("CORA", max(256, int(2708 * scale)), hash_dim,
+                             num_classes, seed=seed)
+
+
+def multiclass_example_stream(corpus: MulticlassCorpus, *, seed: int = 0
+                              ) -> Iterator[Tuple[int, int]]:
+    """Infinite stream of (entity_id, class) training inserts."""
+    r = np.random.default_rng(seed)
+    n = corpus.features.shape[0]
+    while True:
+        i = int(r.integers(0, n))
+        yield i, int(corpus.classes[i])
+
+
 def example_stream(corpus: Corpus, *, seed: int = 0,
                    label_noise: float = 0.02) -> Iterator[Tuple[int, np.ndarray, float]]:
     """Infinite stream of (id, feature, label) training examples — the

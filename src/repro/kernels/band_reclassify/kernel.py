@@ -31,6 +31,68 @@ def _band_kernel(scalars_ref,           # (2,) i32: [start_block, width]
     lab_out_ref[...] = jnp.where(in_band, new, lab_in_ref[...])
 
 
+def _mv_band_kernel(scalars_ref,        # (2, k) i32: [start_block_v; width_v]
+                    w_ref, b_ref, f_ref, lab_in_ref, lab_out_ref):
+    v = pl.program_id(0)
+    i = pl.program_id(1)
+    width = scalars_ref[1, v]
+    bn = f_ref.shape[0]
+    f = f_ref[...].astype(jnp.float32)
+    w = w_ref[...].astype(jnp.float32)
+    eps = jnp.sum(f * w, axis=1)[None, :] - b_ref[0, 0]
+    new = jnp.where(eps >= 0, 1, -1).astype(jnp.int8)
+    offs = i * bn + jax.lax.broadcasted_iota(jnp.int32, (1, bn), 1)
+    in_band = offs < width
+    lab_out_ref[...] = jnp.where(in_band, new, lab_in_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("cap", "block_n", "interpret"))
+def multiview_band_reclassify(F, labels, W, b, start_blocks, widths, *,
+                              cap: int = 4096, block_n: int = 512,
+                              interpret: bool = False):
+    """Union-band relabel for k views over ONE shared scratch table.
+
+    F: (n, d) — the shared eps-clustered scratch table (one clustering for
+    all views, the multi-view engine's shared-table layout); labels:
+    (k, n) int8, row v aligned to the SAME row order as F, updated in
+    place; W: (k, d); b: (k,); start_blocks/widths: (k,) i32 — per-view
+    windows in units of block_n rows.
+
+    Grid is (k, cap // block_n): program (v, i) streams the i-th tile of
+    view v's window and relabels it under view v's model. Each view's
+    window must COVER its true eps band in the shared order — relabeling a
+    superset is exact, because relabeling recomputes sign(w_v·f − b_v),
+    the correct current label for ANY row; the band only bounds which rows
+    may have changed. Per-view windows are positioned independently via
+    the scalar-prefetch starts, so one launch touches the union of the k
+    (covering) bands — HBM traffic ∝ Σ_v window_v, not k·n."""
+    k, n = labels.shape
+    n2, d = F.shape
+    assert n == n2 and cap % block_n == 0 and n % block_n == 0
+    grid = (k, cap // block_n)
+    scalars = jnp.stack([start_blocks.astype(jnp.int32),
+                         widths.astype(jnp.int32)])
+
+    out = pl.pallas_call(
+        _mv_band_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, d), lambda v, i, s: (v, 0)),
+                pl.BlockSpec((1, 1), lambda v, i, s: (v, 0)),
+                pl.BlockSpec((block_n, d), lambda v, i, s: (s[0, v] + i, 0)),
+                pl.BlockSpec((1, block_n), lambda v, i, s: (v, s[0, v] + i)),
+            ],
+            out_specs=pl.BlockSpec((1, block_n), lambda v, i, s: (v, s[0, v] + i)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((k, n), jnp.int8),
+        input_output_aliases={4: 0},
+        interpret=interpret,
+    )(scalars, W, b.reshape(-1, 1).astype(jnp.float32), F, labels)
+    return out
+
+
 @functools.partial(jax.jit, static_argnames=("cap", "block_n", "interpret"))
 def band_reclassify(F_sorted, labels, w, b, start_block, width, *,
                     cap: int = 4096, block_n: int = 512,

@@ -1,11 +1,35 @@
-"""Public wrapper: aligns the band window to tile boundaries and clamps it."""
+"""Public wrappers: align band windows to tile boundaries and clamp them."""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.band_reclassify.kernel import band_reclassify as _kernel
-from repro.kernels.band_reclassify.ref import band_reclassify_ref
+from repro.kernels.band_reclassify.kernel import (
+    band_reclassify as _kernel,
+    multiview_band_reclassify as _mv_kernel,
+)
+from repro.kernels.band_reclassify.ref import band_reclassify_ref  # noqa: F401
+
+
+def multiview_band_reclassify(F, labels, W, b, start_rows, end_rows, *,
+                              cap: int = 4096, block_n: int = 512,
+                              interpret: bool = False):
+    """Relabel rows [start_rows[v], end_rows[v]) of the shared scratch
+    table under each view's model (W[v], b[v]) in ONE kernel launch.
+
+    labels: (k, n) int8, rows aligned to F's row order. Windows are
+    tile-aligned and capacity-clamped per view; the caller (the multi-view
+    SKIING driver) must ensure end_rows[v] − aligned_start[v] ≤ cap for
+    every view, or trigger reorganization."""
+    n, d = F.shape
+    start_rows = jnp.asarray(start_rows, jnp.int32)
+    end_rows = jnp.asarray(end_rows, jnp.int32)
+    start_blocks = jnp.clip(start_rows // block_n, 0,
+                            max(0, (n - cap) // block_n))
+    widths = jnp.clip(end_rows - start_blocks * block_n, 0, cap)
+    return _mv_kernel(F, labels, W, jnp.asarray(b, jnp.float32),
+                      start_blocks, widths, cap=cap, block_n=block_n,
+                      interpret=interpret)
 
 
 def band_reclassify(F_sorted, labels, w, b, start_row, end_row, *,

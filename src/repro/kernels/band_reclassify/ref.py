@@ -3,6 +3,19 @@ import jax
 import jax.numpy as jnp
 
 
+def multiview_band_reclassify_ref(F, labels, W, b, start_blocks, widths, *,
+                                  cap: int, block_n: int):
+    """Multi-view oracle: the single-view dynamic-slice formulation applied
+    per view against the one shared table."""
+    k, n = labels.shape
+
+    def one(lab_v, w_v, b_v, sb_v, width_v):
+        return band_reclassify_ref(F, lab_v[:, None], w_v, b_v, sb_v, width_v,
+                                   cap=cap, block_n=block_n)[:, 0]
+
+    return jax.vmap(one)(labels, W, b, start_blocks, widths)
+
+
 def band_reclassify_ref(F_sorted, labels, w, b, start_block, width, *,
                         cap: int, block_n: int):
     n, d = F_sorted.shape

@@ -5,11 +5,19 @@ from __future__ import annotations
 import jax
 
 
+def make_mesh(shape, axes):
+    """`jax.make_mesh` across JAX versions: explicit `axis_types` only
+    exists from jax 0.5; on older pins every axis is Auto by default."""
+    at = getattr(jax.sharding, "AxisType", None)
+    if at is not None:
+        return jax.make_mesh(shape, axes, axis_types=(at.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_elastic_mesh(num_devices: int, *, model_parallel: int = 16):
@@ -22,12 +30,13 @@ def make_elastic_mesh(num_devices: int, *, model_parallel: int = 16):
     import numpy as np
     arr = np.array(devices).reshape(data, model_parallel)
     from jax.sharding import Mesh
-    return Mesh(arr, ("data", "model"),
-                axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    at = getattr(jax.sharding, "AxisType", None)
+    if at is not None:
+        return Mesh(arr, ("data", "model"), axis_types=(at.Auto,) * 2)
+    return Mesh(arr, ("data", "model"))
 
 
 def make_host_mesh(shape=(1, 1), axes=("data", "model")):
     """Tiny mesh over however many (possibly fake) local devices exist —
     used by tests and CPU examples."""
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)

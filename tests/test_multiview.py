@@ -1,0 +1,145 @@
+"""Equivalence and exactness tests for the vectorized multi-view engine.
+
+The load-bearing claim: `MulticlassView(vectorized=True)` — one shared
+table, stacked models, union-band maintenance — is *observationally
+identical* to the seed's k-independent-`HazyEngine` loop: same model
+trajectory bit for bit, same predictions, same `class_counts()`, including
+across reorganizations (decisions are compared under the deterministic
+`cost_mode="modeled"`)."""
+import numpy as np
+import pytest
+
+from repro.core import MulticlassView, MultiViewEngine
+from repro.data import cora_like, multiclass_example_stream
+
+
+def _cora_views(k=None, scale=0.5, **kw):
+    c = cora_like(scale=scale)
+    k = k or c.num_classes
+    kw.setdefault("policy", "eager")
+    kw.setdefault("cost_mode", "modeled")
+    kw.setdefault("p", 2.0)
+    kw.setdefault("q", 2.0)
+    kw.setdefault("lr", 0.1)
+    seed_view = MulticlassView(c.features, k, vectorized=False, **kw)
+    vec_view = MulticlassView(c.features, k, vectorized=True, **kw)
+    stream = multiclass_example_stream(c, seed=11)
+    return c, seed_view, vec_view, stream
+
+
+def test_vectorized_matches_seed_loop_on_cora():
+    """Identical class_counts, predictions, models AND per-view reorg
+    schedules vs the seed per-class loop on a Cora-sized workload."""
+    c, seed_view, vec_view, stream = _cora_views()
+    for i, cls in (next(stream) for _ in range(700)):
+        seed_view.insert_example(i, cls)
+        vec_view.insert_example(i, cls)
+    # the stacked SGD is the same float32 program as k sequential sgd_steps
+    Ws = np.stack([m.w for m in seed_view.models])
+    bs = np.array([m.b for m in seed_view.models])
+    assert np.array_equal(Ws, vec_view.W)
+    assert np.array_equal(bs, vec_view.b)
+    assert seed_view.class_counts() == vec_view.class_counts()
+    sample = range(0, c.features.shape[0], 13)
+    assert [seed_view.predict(i) for i in sample] == \
+           [vec_view.predict(i) for i in sample]
+    # per-entity view membership agrees too
+    for i in range(0, c.features.shape[0], 97):
+        assert np.array_equal(seed_view.view_labels(i), vec_view.view_labels(i))
+    # equivalence must hold THROUGH reorganizations, not around them
+    seed_reorgs = [e.skiing.reorgs for e in seed_view.engines]
+    assert sum(seed_reorgs) >= 1
+    assert seed_reorgs == vec_view.engine.reorg_counts.tolist()
+    assert vec_view.check_consistent() and seed_view.check_consistent()
+
+
+def test_batched_insert_examples_is_exact():
+    """The batched fast path produces the same final models and (because
+    eager maintenance is exact w.r.t. the current model) the same counts
+    as per-example maintenance."""
+    c, seed_view, vec_view, stream = _cora_views(k=16)
+    inserts = [next(stream) for _ in range(400)]
+    for i, cls in inserts:
+        seed_view.insert_example(i, cls % 16)
+    for j in range(0, len(inserts), 32):
+        chunk = inserts[j:j + 32]
+        vec_view.insert_examples([i for i, _ in chunk],
+                                 [cls % 16 for _, cls in chunk])
+    assert seed_view.class_counts() == vec_view.class_counts()
+    assert vec_view.check_consistent()
+
+
+def test_multiview_engine_lazy_matches_eager():
+    c = cora_like(scale=0.3)
+    k = c.num_classes
+    lazy = MulticlassView(c.features, k, policy="lazy", cost_mode="modeled",
+                          p=2.0, q=2.0, lr=0.1)
+    eager = MulticlassView(c.features, k, policy="eager", cost_mode="modeled",
+                           p=2.0, q=2.0, lr=0.1)
+    stream = multiclass_example_stream(c, seed=3)
+    for t, (i, cls) in enumerate(next(stream) for _ in range(300)):
+        lazy.insert_example(i, cls)
+        eager.insert_example(i, cls)
+        if t % 50 == 17:    # reads force lazy catch-up; views must agree
+            assert lazy.class_counts() == eager.class_counts()
+    assert lazy.check_consistent() and eager.check_consistent()
+
+
+def test_multiview_engine_reorganizes_under_drift():
+    """A drifting stacked model must trigger per-view reorganizations and
+    stay consistent across them (the SKIING choice, per view)."""
+    c, _, vec_view, stream = _cora_views(scale=0.2, lr=0.3)
+    for i, cls in (next(stream) for _ in range(500)):
+        vec_view.insert_example(i, cls)
+    eng = vec_view.engine
+    assert eng.stats.reorgs >= 1
+    assert eng.check_consistent()
+    # bands are tracked per view and stay within [0, 1]
+    fracs = eng.band_fractions()
+    assert np.all((fracs >= 0.0) & (fracs <= 1.0))
+
+
+def test_multiview_engine_members_and_labels():
+    r = np.random.default_rng(0)
+    n, d, k = 512, 16, 4
+    F = r.normal(size=(n, d)).astype(np.float32)
+    F /= np.maximum(np.linalg.norm(F, axis=1, keepdims=True), 1e-9)
+    eng = MultiViewEngine(F, k, p=2.0, q=2.0, cost_mode="modeled")
+    W = r.normal(size=(k, d)).astype(np.float32) * 0.2
+    b = r.normal(size=k) * 0.05
+    eng.apply_models(W, b)
+    Z = F @ W.T - b.astype(np.float32)
+    truth = np.where(Z >= 0, 1, -1)
+    assert np.array_equal(eng.all_members(), (truth == 1).sum(axis=0))
+    for v in range(k):
+        assert set(eng.members(v).tolist()) == \
+               set(np.flatnonzero(truth[:, v] == 1).tolist())
+    for i in range(0, n, 31):
+        assert np.array_equal(eng.labels_of(i), truth[i])
+        for v in range(k):
+            assert eng.label(v, i) == truth[i, v]
+
+
+def test_classification_view_batched_insert_exact():
+    """ClassificationView.insert_examples(batched=True): one maintenance
+    round per batch, reads still exact w.r.t. the batch-final model."""
+    from repro.core import ClassificationView
+    from repro.data import forest_like, example_stream
+    corpus = forest_like(scale=0.005)
+    a = ClassificationView(corpus.features, policy="eager", norm=(2.0, 2.0),
+                           lr=0.05)
+    bchd = ClassificationView(corpus.features, policy="eager", norm=(2.0, 2.0),
+                              lr=0.05)
+    stream = list(zip(range(300), example_stream(corpus, seed=5,
+                                                 label_noise=0.0)))
+    ids = [i for _, (i, _f, _y) in stream]
+    ys = [y for _, (_i, _f, y) in stream]
+    for i, y in zip(ids, ys):
+        a.insert_example(i, y)
+    for j in range(0, len(ids), 25):
+        bchd.insert_examples(ids[j:j + 25], ys[j:j + 25])
+    np.testing.assert_allclose(a.model.w, bchd.model.w, rtol=0, atol=0)
+    assert a.model.b == bchd.model.b
+    assert a.all_members() == bchd.all_members()
+    truth = np.where(corpus.features @ bchd.model.w - bchd.model.b >= 0, 1, -1)
+    assert bchd.all_members() == int((truth == 1).sum())

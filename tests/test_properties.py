@@ -13,7 +13,11 @@ The golden invariants of the paper:
 import math
 
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="hypothesis not installed (see requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import (HazyEngine, LinearModel, Waters, eps_bounds,
                         holder_M, opt_cost, skiing_schedule, sgd_step,
