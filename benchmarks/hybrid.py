@@ -1,0 +1,146 @@
+"""§3.5.2/Fig. 8 hybrid read path on the vectorized multi-view engine.
+
+Mixed single-entity read/update traffic on the cora_like multiclass corpus
+(k one-vs-all views over ONE shared table), one run per policy:
+
+  * eager  — every update pays the banded reclassify; reads are plain
+             eps-map label lookups (`labels_of`).
+  * lazy   — updates defer; the first read of a round catches up (per-view
+             pending mask).
+  * hybrid — updates defer the relabel but keep the eps-map tight (SKIING
+             on the probe miss rate); reads go waters short-circuit ->
+             per-view hot buffer -> one shared "disk" feature-row touch
+             (`hybrid_labels_of`).
+
+The paper's architecture stores the table on disk, so `touch_ns`
+(BENCH_HYBRID_TOUCH_NS, default 2000 = 2 µs/tuple) emulates the storage
+tier exactly as the engines' cost accounting defines it: maintenance is
+charged per tuple touched (bands + reorganizations, via
+`stats.incremental_seconds`/`reorg_seconds`), hybrid disk probes pay one
+touch per read that misses the in-memory tiers (charged arithmetically
+from the engine's `disk_touches` counter). The read-path latency —
+maintenance plus reads, amortized per read — is the number the paper's
+eager-vs-hybrid comparison is about; pure in-memory read wall time is
+reported alongside. Emits machine-readable ``BENCH_hybrid.json``.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from benchmarks.common import BENCH_SCALE, emit
+from repro.core import MulticlassView
+from repro.core.multiview import HYBRID_TIERS
+from repro.data import cora_like, multiclass_example_stream
+
+BATCH = int(os.environ.get("BENCH_HYBRID_BATCH", "16"))
+READS_PER_ROUND = int(os.environ.get("BENCH_HYBRID_READS", "12"))
+BUFFER_FRAC = float(os.environ.get("BENCH_HYBRID_BUFFER", "0.05"))
+TOUCH_NS = float(os.environ.get("BENCH_HYBRID_TOUCH_NS", "2000"))
+
+
+def _workload():
+    corpus = cora_like(scale=BENCH_SCALE / 0.1)
+    n = corpus.features.shape[0]
+    n_updates = max(160, int(2000 * (BENCH_SCALE / 0.1)))
+    stream = multiclass_example_stream(corpus, seed=13)
+    inserts = [next(stream) for _ in range(n_updates)]
+    r = np.random.default_rng(17)
+    rounds = []
+    for j in range(0, len(inserts), BATCH):
+        reads = r.integers(0, n, READS_PER_ROUND)
+        rounds.append((inserts[j:j + BATCH], reads))
+    return corpus, rounds
+
+
+def _run(corpus, rounds, policy: str):
+    view = MulticlassView(corpus.features, corpus.num_classes, policy=policy,
+                          buffer_frac=BUFFER_FRAC, p=2.0, q=2.0, lr=0.1,
+                          cost_mode="measured", touch_ns=TOUCH_NS)
+    eng = view.engine
+    read_s = 0.0
+    n_reads = 0
+    for chunk, reads in rounds:
+        view.insert_examples([i for i, _ in chunk], [c for _, c in chunk])
+        t0 = time.perf_counter()
+        if policy == "hybrid":
+            for i in reads:
+                eng.hybrid_labels_of(int(i))
+        else:
+            for i in reads:
+                eng.labels_of(int(i))
+        read_s += time.perf_counter() - t0
+        n_reads += len(reads)
+    # maintenance as the engine's own storage-aware accounting charges it
+    maint_s = eng.stats.incremental_seconds + eng.stats.reorg_seconds
+    # disk probes are charged arithmetically (sleep granularity ~100us would
+    # swamp a per-row touch), exactly like the maintenance accounting
+    read_s += eng.disk_touches * TOUCH_NS * 1e-9
+    # snapshot tier counters BEFORE the verification probes below, so the
+    # reported fractions describe only the timed workload
+    hits = eng.hybrid_hits.copy()
+    # exactness: whatever the policy deferred, reads must be (and stay)
+    # exact w.r.t. the current model
+    truth = np.where(corpus.features @ view.W.T
+                     - view.b.astype(np.float32) >= 0, 1, -1)
+    for i in range(0, corpus.features.shape[0], 29):
+        probe = (eng.hybrid_labels_of(i)[0] if policy == "hybrid"
+                 else eng.labels_of(i))
+        assert np.array_equal(probe, truth[i]), (policy, i)
+    return view, hits, maint_s, read_s, n_reads
+
+
+def main() -> None:
+    corpus, rounds = _workload()
+    n = corpus.features.shape[0]
+    k = corpus.num_classes
+    results = {}
+    for policy in ("eager", "lazy", "hybrid"):
+        view, hits, maint_s, read_s, n_reads = _run(corpus, rounds, policy)
+        read_us = read_s / n_reads * 1e6
+        path_us = (maint_s + read_s) / n_reads * 1e6
+        results[policy] = {"read_us": read_us, "read_path_us": path_us,
+                           "maintenance_seconds": maint_s,
+                           "read_seconds": read_s, "n_reads": n_reads,
+                           "reorgs": int(view.engine.stats.reorgs)}
+        extra = ""
+        if policy == "hybrid":
+            frac = hits.astype(float) / max(1.0, float(hits.sum()))
+            results[policy]["tier_hits"] = {
+                t: int(h) for t, h in zip(HYBRID_TIERS, hits)}
+            results[policy]["tier_fractions"] = {
+                t: float(f) for t, f in zip(HYBRID_TIERS, frac)}
+            extra = (f"water={frac[0]:.3f};buffer={frac[1]:.3f};"
+                     f"disk={frac[2]:.3f}")
+        emit(f"hybrid_readpath_{policy}_k{k}_n{n}", path_us,
+             f"read_us={read_us:.2f};{extra}")
+
+    hyb, eag = results["hybrid"], results["eager"]
+    wb = (hyb["tier_fractions"]["water"] + hyb["tier_fractions"]["buffer"])
+    payload = {
+        "workload": {"corpus": corpus.name, "n": n,
+                     "d": int(corpus.features.shape[1]), "k": k,
+                     "updates": sum(len(c) for c, _ in rounds),
+                     "reads": hyb["n_reads"], "batch": BATCH,
+                     "buffer_frac": BUFFER_FRAC, "touch_ns": TOUCH_NS},
+        "policies": results,
+        "hybrid_water_buffer_fraction": wb,
+        "hybrid_majority_in_memory": wb > 0.5,
+        "read_path_speedup_vs_eager":
+            eag["read_path_us"] / hyb["read_path_us"],
+    }
+    with open("BENCH_hybrid.json", "w") as f:
+        json.dump(payload, f, indent=2)
+    assert wb > 0.5, f"hybrid tier resolved only {wb:.2%} without disk"
+    # at toy scale (CI smoke) maintenance is too cheap for the read-path
+    # comparison to be meaningful; gate it on a real-sized corpus
+    if n >= 1000:
+        assert hyb["read_path_us"] < eag["read_path_us"], \
+            (hyb["read_path_us"], eag["read_path_us"])
+
+
+if __name__ == "__main__":
+    main()

@@ -26,8 +26,20 @@ MODULES = [
     "benchmarks.sensitivity",       # Fig. 12
     "benchmarks.waters",            # Fig. 13
     "benchmarks.multiclass",        # App. B.5.4 / C.3 (multi-view engine)
+    "benchmarks.hybrid",            # §3.5.2 hybrid tier on the multi-view engine
     "benchmarks.kernel_bench",      # framework kernels
 ]
+
+
+def _selected(only: str, mod_name: str) -> bool:
+    """Exact short-name match wins (``run.py hybrid`` must not also run
+    ``hybrid_buffer``); otherwise substring, as before."""
+    if only is None:
+        return True
+    shorts = {m.rsplit(".", 1)[-1] for m in MODULES}
+    if only in shorts or only in MODULES:
+        return only in (mod_name, mod_name.rsplit(".", 1)[-1])
+    return only in mod_name
 
 
 def main() -> int:
@@ -35,7 +47,7 @@ def main() -> int:
     only = sys.argv[1] if len(sys.argv) > 1 else None
     failed = []
     for mod_name in MODULES:
-        if only and only not in mod_name:
+        if not _selected(only, mod_name):
             continue
         t0 = time.time()
         try:

@@ -59,6 +59,24 @@ def main():
     acc = np.mean(mv.predict_batch(sample) == cls[sample])
     print(f"one-vs-all accuracy (random-feature kernel): {acc:.3f}")
 
+    # §3.5.2 hybrid read tier: single-entity reads resolved per view by
+    # waters short-circuit -> hot buffer -> one shared feature-row touch,
+    # with maintenance deferred per view until a read needs it.
+    hyb = MulticlassView(F, k, policy="hybrid", buffer_frac=0.05, lr=0.1,
+                         p=2.0, q=2.0)
+    for j in range(0, n_updates, batch):
+        chunk = ids[j:j + batch]
+        hyb.insert_examples(chunk, cls[chunk])
+    t0 = time.perf_counter()
+    via_views = [hyb.predict_via_views(int(i)) for i in sample]
+    dt = time.perf_counter() - t0
+    hits = hyb.engine.hybrid_hits.copy()
+    agree = sum(p == hyb.predict(int(i)) for p, i in zip(via_views, sample))
+    frac = hits / max(1, hits.sum())
+    print(f"hybrid single-entity reads: {len(sample)/dt:.0f} reads/s, "
+          f"tiers water/buffer/disk = {frac[0]:.3f}/{frac[1]:.3f}/{frac[2]:.3f}, "
+          f"predict_via_views agrees on {agree}/{len(sample)}")
+
 
 if __name__ == "__main__":
     main()

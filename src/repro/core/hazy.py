@@ -15,6 +15,15 @@ Cost accounting: `cost_mode="measured"` uses wall time (paper's choice);
 "modeled" uses S·(band/n) for deterministic tests. `touch_ns` adds a
 per-tuple-touched penalty to emulate a slower storage tier (the paper's
 on-disk architecture) — 0 for main-memory mode.
+
+Policies: "eager" maintains on every model round, "lazy" defers to the next
+read, "hybrid" (§3.5.2) defers like lazy but serves single-entity reads
+through the eps-map/waters/hot-buffer tier (`hybrid_label`) without a full
+catch-up — a pending model only needs a waters update (Eq. 2 is monotone)
+for the short-circuit to stay exact. Boundary convention (Lemma 3.1):
+eps ≥ hw is certainly positive, eps < lw certainly negative, and the band
+[lw, hw) is what reclassification must touch — the probe and the band
+search use the same partition.
 """
 from __future__ import annotations
 
@@ -29,6 +38,18 @@ from repro.core.skiing import Skiing, alpha_star
 from repro.core.waters import Waters, holder_M
 
 
+def hot_buffer_window(eps_sorted: np.ndarray, cap: int) -> Tuple[int, int]:
+    """[lo, hi) positions of the §3.5.2 hot buffer: `cap` eps-sorted slots
+    centered on the zero boundary (the tuples most likely to flip). Shared
+    by the single-view engine and the per-view windows of `MultiViewEngine`."""
+    n = eps_sorted.shape[0]
+    cap = max(1, min(int(cap), n))
+    boundary = int(np.searchsorted(eps_sorted, 0.0))
+    lo = max(0, boundary - cap // 2)
+    hi = min(n, lo + cap)
+    return lo, hi
+
+
 @dataclasses.dataclass
 class Stats:
     rounds: int = 0
@@ -41,16 +62,17 @@ class Stats:
 
 
 class HazyEngine:
-    """Eager/lazy incremental maintenance of one binary classification view."""
+    """Eager/lazy/hybrid incremental maintenance of one binary view."""
 
     def __init__(self, features: np.ndarray, *, p: float = float("inf"),
                  q: float = 1.0, alpha: float = 1.0, policy: str = "eager",
                  cost_mode: str = "measured", touch_ns: float = 0.0,
                  buffer_frac: float = 0.0):
-        assert policy in ("eager", "lazy")
+        assert policy in ("eager", "lazy", "hybrid")
         self.F = np.ascontiguousarray(features, np.float32)
         self.n, self.d = self.F.shape
         self.policy = policy
+        self._defers = policy in ("lazy", "hybrid")
         self.cost_mode = cost_mode
         self.touch_ns = touch_ns
         self.M = holder_M(self.F, q)
@@ -61,6 +83,7 @@ class HazyEngine:
         self.buffer_frac = buffer_frac
         self._buffer_lo = 0
         self._buffer_hi = 0
+        self.disk_touches = 0      # hybrid probes that read a feature row
         # initial organization (free S estimate)
         t0 = time.perf_counter()
         self._do_reorganize()
@@ -89,10 +112,8 @@ class HazyEngine:
         self.stored = self.model.copy()
         self.waters.reset()
         if self.buffer_frac:
-            B = max(1, int(self.buffer_frac * self.n))
-            boundary = int(np.searchsorted(self.eps_sorted, 0.0))
-            self._buffer_lo = max(0, boundary - B // 2)
-            self._buffer_hi = min(self.n, self._buffer_lo + B)
+            self._buffer_lo, self._buffer_hi = hot_buffer_window(
+                self.eps_sorted, int(self.buffer_frac * self.n))
 
     def reorganize(self):
         t0 = time.perf_counter()
@@ -107,8 +128,11 @@ class HazyEngine:
     # ------------------------------------------------------------------
 
     def _band(self) -> Tuple[int, int]:
+        # [lw, hw): eps ≥ hw is certainly positive (equality included, since
+        # z ≥ 0 labels +1), eps < lw certainly negative — the same partition
+        # `hybrid_label` short-circuits on.
         lo = int(np.searchsorted(self.eps_sorted, self.waters.lw, side="left"))
-        hi = int(np.searchsorted(self.eps_sorted, self.waters.hw, side="right"))
+        hi = int(np.searchsorted(self.eps_sorted, self.waters.hw, side="left"))
         return lo, hi
 
     def _incremental_step(self) -> float:
@@ -135,8 +159,20 @@ class HazyEngine:
         (lazy). SKIING decides reorg-vs-incremental (Fig. 7: check first)."""
         self.model = model.copy()
         self.stats.rounds += 1
-        if self.policy == "lazy":
+        if self._defers:
             self._pending = self.model
+            if self.policy == "hybrid":
+                # §3.5.2: the band relabel stays deferred (hybrid reads do
+                # not need it), but the eps-map must stay tight or every
+                # probe degrades to the disk tier — so SKIING still decides
+                # reorgs on updates, charging the expected probe miss rate
+                # (the band fraction) instead of relabel wall time.
+                self.waters.update(self.model, self.stored)
+                lo, hi = self._band()
+                miss = self.skiing.S * ((hi - lo) / max(1, self.n))
+                if self.skiing.record_incremental(miss):
+                    self.reorganize()
+                    self._pending = None
             return
         if self.skiing.should_reorganize():
             self.reorganize()
@@ -167,6 +203,7 @@ class HazyEngine:
              if self.cost_mode == "measured" else self.skiing.S * max(0.0, waste))
         self.stats.tuples_reclassified += width
         self.stats.tuples_total_possible += self.n
+        self.stats.incremental_seconds += max(0.0, c)
         if self.skiing.record_incremental(max(0.0, c)):
             self.reorganize()
 
@@ -176,17 +213,17 @@ class HazyEngine:
 
     def all_members(self) -> int:
         """'How many entities with label 1?' (paper's All Members probe)."""
-        if self.policy == "lazy":
+        if self._defers:
             self._lazy_catch_up()
         return self.pos_count
 
     def members(self) -> np.ndarray:
-        if self.policy == "lazy":
+        if self._defers:
             self._lazy_catch_up()
         return self.perm[self.labels_sorted == 1]
 
     def label(self, entity_id: int) -> int:
-        if self.policy == "lazy":
+        if self._defers:
             self._lazy_catch_up()
         return int(self.labels_sorted[self.inv_perm[entity_id]])
 
@@ -196,31 +233,43 @@ class HazyEngine:
 
     def hybrid_label(self, entity_id: int) -> Tuple[int, str]:
         """eps-map + waters + buffer; returns (label, how) where how ∈
-        {water, buffer, disk} for instrumentation."""
+        {water, buffer, disk} for instrumentation.
+
+        Exact under every policy: a pending (lazy/hybrid) model only needs
+        the monotone waters update — no catch-up relabel — because the
+        short-circuit tests the guarantee, not the materialized labels, and
+        the buffer/disk tiers classify against the current model directly."""
+        if self._pending is not None:
+            self.waters.update(self.model, self.stored)
         pos = self.inv_perm[entity_id]
         e = self.eps_sorted[pos]
-        if e <= self.waters.lw:
-            return -1, "water"
+        # Lemma 3.1 partition, aligned with _band(): eps ≥ hw certainly
+        # positive (z == 0 labels +1, so equality short-circuits high);
+        # eps < lw certainly negative — eps == lw may sit exactly on the
+        # boundary (z == 0 ⇒ +1) and must be classified, not short-circuited.
         if e >= self.waters.hw:
             return 1, "water"
+        if e < self.waters.lw:
+            return -1, "water"
         if self._buffer_lo <= pos < self._buffer_hi:
             z = self.F_sorted[pos] @ self.model.w - self.model.b
             return (1 if z >= 0 else -1), "buffer"
         z = self.F[entity_id] @ self.model.w - self.model.b   # "go to disk"
-        if self.touch_ns:
-            time.sleep(self.touch_ns * 1e-9)
-        return (1 if z >= 0 else -1), "disk"
+        self.disk_touches += 1     # charged as disk_touches * touch_ns by
+        return (1 if z >= 0 else -1), "disk"   # callers (sleep is too coarse)
 
     # ------------------------------------------------------------------
 
     def band_fraction(self) -> float:
+        if self._defers:
+            self._lazy_catch_up()
         lo, hi = self._band()
         return (hi - lo) / max(1, self.n)
 
     def check_consistent(self) -> bool:
         """Golden invariant: view == naive relabel under the current model
         (after lazy catch-up)."""
-        if self.policy == "lazy":
+        if self._defers:
             self._lazy_catch_up()
         truth = np.where(self.F_sorted @ self.model.w - self.model.b >= 0, 1, -1)
         return bool(np.array_equal(truth.astype(np.int8), self.labels_sorted))

@@ -16,6 +16,12 @@ Two execution paths share one API:
 (same model trajectory as k calls to `insert_example`) but view maintenance
 is amortized to ONE round per batch — the views are exact w.r.t. the
 batch-final model, which is all any read after the batch can observe.
+
+`policy="hybrid"` (paper §3.5.2) defers maintenance like lazy and serves
+single-entity reads through the per-view eps-map/waters/hot-buffer tier;
+`predict_via_views` turns those per-view hybrid reads into a multiclass
+argmax without a full-table scan — in the common one-positive-view case
+without touching the feature table at all.
 """
 from __future__ import annotations
 
@@ -34,10 +40,12 @@ class MulticlassView:
                  l2: float = 1e-4, alpha: float = 1.0,
                  p: float = float("inf"), q: float = 1.0,
                  cost_mode: str = "measured", touch_ns: float = 0.0,
-                 vectorized: bool = True):
+                 buffer_frac: float = 0.0, vectorized: bool = True):
         self.F = np.asarray(features, np.float32)
         self.k = num_classes
         self.lr, self.l2 = lr, l2
+        if policy == "hybrid" and not buffer_frac:
+            buffer_frac = 0.01            # paper §4.2 default: 1% in memory
         self.vectorized = bool(vectorized) and engine == "hazy"
         if self.vectorized:
             self.W = np.zeros((num_classes, self.F.shape[1]), np.float32)
@@ -45,7 +53,8 @@ class MulticlassView:
             self.engine = MultiViewEngine(self.F, num_classes, p=p, q=q,
                                           alpha=alpha, policy=policy,
                                           cost_mode=cost_mode,
-                                          touch_ns=touch_ns)
+                                          touch_ns=touch_ns,
+                                          buffer_frac=buffer_frac)
             self.engines = None
         else:
             self._models = [zero_model(self.F.shape[1])
@@ -53,12 +62,15 @@ class MulticlassView:
             if engine == "hazy":
                 self.engines = [HazyEngine(self.F, p=p, q=q, alpha=alpha,
                                            policy=policy, cost_mode=cost_mode,
-                                           touch_ns=touch_ns)
+                                           touch_ns=touch_ns,
+                                           buffer_frac=buffer_frac)
                                 for _ in range(num_classes)]
             else:
-                self.engines = [NaiveEngine(self.F, policy=policy,
-                                            touch_ns=touch_ns)
-                                for _ in range(num_classes)]
+                # NaiveEngine has no hybrid tier; lazy is the closest policy
+                # (it too classifies on read against the current model).
+                self.engines = [NaiveEngine(
+                    self.F, policy="lazy" if policy == "hybrid" else policy,
+                    touch_ns=touch_ns) for _ in range(num_classes)]
             self.engine = None
 
     # ------------------------------------------------------------------
@@ -142,6 +154,37 @@ class MulticlassView:
         if self.vectorized:
             return self.engine.labels_of(entity_id)
         return np.array([e.label(entity_id) for e in self.engines], np.int8)
+
+    def hybrid_view_labels(self, entity_id: int) -> np.ndarray:
+        """±1 membership per view via the §3.5.2 hybrid read tier (exact
+        under every policy; no catch-up, at most one feature-table touch)."""
+        if self.vectorized:
+            return self.engine.hybrid_labels_of(entity_id)[0]
+        return np.array([e.hybrid_label(entity_id)[0]
+                         if isinstance(e, HazyEngine) else e.label(entity_id)
+                         for e in self.engines], np.int8)
+
+    def predict_via_views(self, entity_id: int) -> int:
+        """Multiclass argmax resolved from the per-view hybrid reads, never
+        a full-table scan. Exactly one positive one-vs-all view — the common
+        case on a trained model — decides the class with NO feature read
+        (its margin is the only non-negative one, hence the argmax); ties
+        (>1) rank only the positive views' margins, and the no-positive case
+        falls back to all k margins from one feature row. Agrees with
+        `predict` on every input."""
+        labels = self.hybrid_view_labels(entity_id)
+        pos = np.flatnonzero(labels == 1)
+        if pos.size == 1:
+            return int(pos[0])
+        f = self.F[entity_id]
+        if self.vectorized:
+            W, b = self.W, self.b
+        else:
+            W = np.stack([m.w for m in self._models])
+            b = np.array([m.b for m in self._models], np.float64)
+        cand = pos if pos.size > 1 else np.arange(self.k)
+        scores = W[cand] @ f - b[cand].astype(np.float32)
+        return int(cand[np.argmax(scores)])
 
     def check_consistent(self) -> bool:
         if self.vectorized:

@@ -25,6 +25,21 @@ band-sized label slices. Reorganizations batch the same way: all due views
 re-sort from one `F @ W[due].T` product. HBM/cache traffic is proportional
 to the union band, not k times the table.
 
+Laziness is PER VIEW: `pending` is a `(k,)` mask, so a read that touches
+only view v (`label`, `members`, `hybrid_label`) catches up that view alone
+while the cold k−1 views keep deferring; the paper's §3.4 lazy waste
+accounting is charged per view (`lazy_waste`).
+
+The §3.5.2/Fig. 8 hybrid read tier is also per-view rows of shared arrays:
+`(k,)` hot-buffer windows `buffer_lo`/`buffer_hi` around each view's zero
+boundary (with the buffered feature rows materialized per view, the "stored
+in memory" fraction), and `hybrid_label` / `hybrid_labels_of` resolving
+eps-map -> waters short-circuit -> buffer -> "disk". A pending model only
+needs the monotone waters update for the short-circuit to stay exact, so
+hybrid reads never force a catch-up; the batched probe touches the shared
+`F[entity_id]` row at most ONCE for all k views that miss, instead of k
+feature reads.
+
 Cost accounting mirrors `hazy.py`: `cost_mode="measured"` splits the round's
 wall time across views by band width; `"modeled"` charges `S_v · width_v/n`
 (deterministic, used by the equivalence tests). Each view keeps its own
@@ -33,13 +48,17 @@ SKIING accumulator, so per-view reorg cadence matches the k-engine seed.
 from __future__ import annotations
 
 import time
-from typing import Tuple
+from typing import Optional, Tuple
 
 import numpy as np
 
-from repro.core.hazy import Stats
+from repro.core.hazy import Stats, hot_buffer_window
 from repro.core.skiing import alpha_star
 from repro.core.waters import holder_M
+
+# hybrid tier codes returned by `hybrid_labels_of` (index into HYBRID_TIERS)
+HYBRID_TIERS = ("water", "buffer", "disk")
+TIER_WATER, TIER_BUFFER, TIER_DISK = 0, 1, 2
 
 
 def row_norms(X: np.ndarray, p: float) -> np.ndarray:
@@ -54,18 +73,19 @@ def row_norms(X: np.ndarray, p: float) -> np.ndarray:
 
 
 class MultiViewEngine:
-    """Eager/lazy maintenance of k binary views over one shared table."""
+    """Eager/lazy/hybrid maintenance of k binary views over one shared table."""
 
     def __init__(self, features: np.ndarray, num_views: int, *,
                  p: float = float("inf"), q: float = 1.0, alpha: float = 1.0,
                  policy: str = "eager", cost_mode: str = "measured",
-                 touch_ns: float = 0.0):
-        assert policy in ("eager", "lazy")
+                 touch_ns: float = 0.0, buffer_frac: float = 0.0):
+        assert policy in ("eager", "lazy", "hybrid")
         self.F = np.ascontiguousarray(features, np.float32)
         self.n, self.d = self.F.shape
         self.k = int(num_views)
         self.p = p
         self.policy = policy
+        self._defers = policy in ("lazy", "hybrid")
         self.cost_mode = cost_mode
         self.touch_ns = touch_ns
         self.M = holder_M(self.F, q)
@@ -82,12 +102,28 @@ class MultiViewEngine:
         self.eps_sorted = np.zeros((k, n), np.float32)
         self.labels_sorted = np.zeros((k, n), np.int8)
         self.pos_count = np.zeros(k, np.int64)
-        self.stats = Stats()
-        self.reorg_counts = np.zeros(k, np.int64)
-        self._pending = False  # lazy: a model round awaits catch-up
+        self.pending = np.zeros(k, bool)        # per-view deferred maintenance
+        self._waters_stale = np.zeros(k, bool)  # waters behind current model
+        self._waters_dirty = False              # scalar mirror of .any()
+        self.lazy_waste = np.zeros(k, np.float64)  # §3.4 waste, per view
+        # §3.5.2 hot buffer, per view: [buffer_lo, buffer_hi) positions of
+        # the eps-sorted order, with the feature rows materialized (the
+        # fraction of entities "stored in memory"; F is the disk tier).
+        self.buffer_frac = buffer_frac
+        self.buffer_cap = max(1, int(buffer_frac * n)) if buffer_frac else 0
+        self.buffer_lo = np.zeros(k, np.int64)
+        self.buffer_hi = np.zeros(k, np.int64)
+        self.buffer_F: Optional[np.ndarray] = (
+            np.zeros((k, self.buffer_cap, self.d), np.float32)
+            if self.buffer_cap else None)
+        self.hybrid_hits = np.zeros(3, np.int64)  # cumulative per-tier probes
+        self.disk_touches = 0                     # shared F-row reads by probes
+        self._arange_k = np.arange(k)
 
         # Initial organization of all k views; the measured wall time seeds
         # the per-view SKIING S (one view's share of the batched reorg).
+        # stats/S/acc are created only afterwards (guarded by hasattr below)
+        # so the free init round is never charged.
         t0 = time.perf_counter()
         self._reorganize_views(np.ones(k, bool))
         S0 = max(time.perf_counter() - t0, 1e-9) / k
@@ -98,8 +134,8 @@ class MultiViewEngine:
         self.alpha = alpha if alpha else alpha_star(self.sigma)
         self.S = np.full(k, S0, np.float64)       # per-view reorg cost
         self.acc = np.zeros(k, np.float64)        # SKIING accumulators
-        self.stats = Stats()                      # init organization is free
-        self.reorg_counts[:] = 0
+        self.stats = Stats()
+        self.reorg_counts = np.zeros(k, np.int64)
 
     # ------------------------------------------------------------------
     # Organization
@@ -122,18 +158,24 @@ class MultiViewEngine:
             lab = np.where(self.eps_sorted[v] >= 0, 1, -1).astype(np.int8)
             self.labels_sorted[v] = lab
             self.pos_count[v] = int(np.count_nonzero(lab == 1))
+            if self.buffer_cap:
+                blo, bhi = hot_buffer_window(self.eps_sorted[v], self.buffer_cap)
+                self.buffer_lo[v], self.buffer_hi[v] = blo, bhi
+                self.buffer_F[v, :bhi - blo] = self.F[order[blo:bhi]]
         self.W_stored[views] = self.W[views]
         self.b_stored[views] = self.b[views]
         self.lw[views] = 0.0
         self.hw[views] = 0.0
+        self._waters_stale[views] = False
+        self.pending[views] = False
         wall = (time.perf_counter() - t0
                 + self.touch_ns * 1e-9 * self.n * views.size)
-        if hasattr(self, "S"):
+        if hasattr(self, "S"):   # absent only during the free init round
             self.S[views] = wall / views.size
             self.acc[views] = 0.0
-        self.stats.reorgs += int(views.size)
-        self.reorg_counts[views] += 1
-        self.stats.reorg_seconds += wall
+            self.stats.reorgs += int(views.size)
+            self.reorg_counts[views] += 1
+            self.stats.reorg_seconds += wall
 
     # ------------------------------------------------------------------
     # One maintenance round (all k views)
@@ -141,26 +183,50 @@ class MultiViewEngine:
 
     def apply_models(self, W: np.ndarray, b: np.ndarray):
         """The k views must reflect the stacked model (W, b): eager does the
-        banded reclassify now, lazy defers it to the next read."""
+        banded reclassify now; lazy/hybrid defer it to the next read that
+        actually touches each view (per-view pending mask)."""
         self.W = np.asarray(W, np.float32).copy()
         self.b = np.asarray(b, np.float64).copy()
         self.stats.rounds += 1
-        if self.policy == "lazy":
-            self._pending = True
+        if self._defers:
+            self.pending[:] = True
+            self._waters_stale[:] = True
+            self._waters_dirty = True
+            if self.policy == "hybrid":
+                # §3.5.2: band relabels stay deferred per view, but the
+                # eps-map must stay tight or probes degrade to the disk
+                # tier — SKIING still reorganizes due views on updates,
+                # charging the expected probe miss rate (band fraction).
+                self._update_waters(np.arange(self.k))
+                lo, hi = self._bands(np.arange(self.k))
+                self.acc += self.S * ((hi - lo) / max(1, self.n))
+                due = self.acc >= self.alpha * self.S
+                self._reorganize_views(due)   # clears pending for due views
             return
         # SKIING, check-first (Fig. 7), independently per view.
         due = self.acc >= self.alpha * self.S
         self._reorganize_views(due)
         self._incremental_step(~due)
 
+    def _update_waters(self, views: np.ndarray):
+        """Vectorized Eq. 2 for the given views (monotone, idempotent)."""
+        dw = row_norms(self.W[views] - self.W_stored[views], self.p)
+        db = self.b[views] - self.b_stored[views]
+        self.lw[views] = np.minimum(self.lw[views], -self.M * dw + db)
+        self.hw[views] = np.maximum(self.hw[views], self.M * dw + db)
+        self._waters_stale[views] = False
+        self._waters_dirty = bool(self._waters_stale.any())
+
     def _bands(self, views: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+        # [lw, hw) per view — same Lemma 3.1 partition as the hybrid probe
+        # (eps ≥ hw certainly positive incl. equality, eps < lw negative).
         lo = np.empty(views.size, np.int64)
         hi = np.empty(views.size, np.int64)
         eps, lw, hw = self.eps_sorted, self.lw, self.hw
         for j, v in enumerate(views):
             row = eps[v]
             lo[j] = row.searchsorted(lw[v], "left")    # ndarray method: the
-            hi[j] = row.searchsorted(hw[v], "right")   # hot path, no wrapper
+            hi[j] = row.searchsorted(hw[v], "left")    # hot path, no wrapper
         return lo, hi
 
     def _relabel_bands(self, views: np.ndarray):
@@ -169,10 +235,7 @@ class MultiViewEngine:
         feature rows and ONE matmul that classifies every view's band.
         Returns (lo, widths, total, wall) for the caller's cost model."""
         t0 = time.perf_counter()
-        dw = row_norms(self.W[views] - self.W_stored[views], self.p)
-        db = self.b[views] - self.b_stored[views]
-        self.lw[views] = np.minimum(self.lw[views], -self.M * dw + db)
-        self.hw[views] = np.maximum(self.hw[views], self.M * dw + db)
+        self._update_waters(views)
         lo, hi = self._bands(views)
         widths = hi - lo
         total = int(widths.sum())
@@ -208,20 +271,33 @@ class MultiViewEngine:
         self.stats.band_fraction_last = float(widths.mean()) / max(1, self.n)
         self.stats.incremental_seconds += wall
 
-    def _lazy_catch_up(self):
-        if not self._pending:
+    def _catch_up(self, views: Optional[np.ndarray] = None):
+        """Catch up the PENDING subset of `views` (default: every view).
+        Views outside `views` keep deferring — per-view laziness — and the
+        paper's §3.4 lazy waste is charged only to the views read now."""
+        if not self._defers:
             return
-        lo, widths, total, wall = self._relabel_bands(np.arange(self.k))
-        self._pending = False
+        if views is None:
+            todo = np.flatnonzero(self.pending)
+        else:
+            todo = np.asarray(views)[self.pending[np.asarray(views)]]
+        if todo.size == 0:
+            return
+        lo, widths, total, wall = self._relabel_bands(todo)
+        self.pending[todo] = False
+        # §3.4 lazy waste per view: (N_R − N_+)/N_R of the tuples a lazy
+        # All-Members read scans are wasted (read but not returned).
+        n_read = np.maximum(1, self.n - lo)
+        waste = np.maximum(0.0, (n_read - self.pos_count[todo]) / n_read)
+        self.lazy_waste[todo] += waste
         if self.cost_mode == "modeled":
-            # paper §3.4 lazy waste: (N_R − N_+)/N_R per view
-            n_read = np.maximum(1, self.n - lo)
-            waste = np.maximum(0.0, (n_read - self.pos_count) / n_read)
-            costs = self.S * waste
+            costs = self.S[todo] * waste
         else:
             costs = wall * (widths / max(1, total))
-        self.acc += costs
-        due = self.acc >= self.alpha * self.S
+        self.acc[todo] += costs
+        self.stats.incremental_seconds += wall
+        due = np.zeros(self.k, bool)
+        due[todo] = self.acc[todo] >= self.alpha * self.S[todo]
         self._reorganize_views(due)
 
     # ------------------------------------------------------------------
@@ -230,38 +306,109 @@ class MultiViewEngine:
 
     def all_members(self) -> np.ndarray:
         """Per-view positive-member counts, (k,) — the All Members probe
-        answered for every one-vs-all view at once."""
-        if self.policy == "lazy":
-            self._lazy_catch_up()
+        answered for every one-vs-all view at once (touches all k views)."""
+        self._catch_up()
         return self.pos_count.copy()
 
     def members(self, view: int) -> np.ndarray:
-        if self.policy == "lazy":
-            self._lazy_catch_up()
+        self._catch_up(np.array([view]))
         return self.perm[view, self.labels_sorted[view] == 1]
 
     def label(self, view: int, entity_id: int) -> int:
-        if self.policy == "lazy":
-            self._lazy_catch_up()
+        """Hot read of ONE view: catches up only that view; the other k−1
+        pending views keep deferring."""
+        self._catch_up(np.array([view]))
         return int(self.labels_sorted[view, self.inv_perm[view, entity_id]])
 
     def labels_of(self, entity_id: int) -> np.ndarray:
         """All k view labels of one entity, (k,) int8 (one eps-map probe
-        per view; no feature access)."""
-        if self.policy == "lazy":
-            self._lazy_catch_up()
+        per view; no feature access). Touches — and catches up — all views."""
+        self._catch_up()
         pos = self.inv_perm[:, entity_id]
-        return self.labels_sorted[np.arange(self.k), pos]
+        return self.labels_sorted[self._arange_k, pos]
 
     def band_fractions(self) -> np.ndarray:
+        self._catch_up()   # stale waters would report pre-catch-up bands
         lo, hi = self._bands(np.arange(self.k))
         return (hi - lo) / max(1, self.n)
+
+    # ------------------------------------------------------------------
+    # Hybrid single-entity reads (paper §3.5.2, Fig. 8) — per-view tier
+    # ------------------------------------------------------------------
+
+    def hybrid_label(self, view: int, entity_id: int) -> Tuple[int, str]:
+        """One view's §3.5.2 read: eps-map probe -> waters short-circuit ->
+        hot buffer -> "disk" (the shared F row). Exact under every policy:
+        a pending model needs only the monotone waters update, never a
+        catch-up relabel, so cold views stay deferred."""
+        if self._waters_dirty:
+            self._update_waters(np.flatnonzero(self._waters_stale))
+        pos = self.inv_perm[view, entity_id]
+        e = self.eps_sorted[view, pos]
+        if e >= self.hw[view]:
+            self.hybrid_hits[TIER_WATER] += 1
+            return 1, "water"
+        if e < self.lw[view]:
+            self.hybrid_hits[TIER_WATER] += 1
+            return -1, "water"
+        if self.buffer_cap and self.buffer_lo[view] <= pos < self.buffer_hi[view]:
+            f = self.buffer_F[view, pos - self.buffer_lo[view]]
+            z = f @ self.W[view] - np.float32(self.b[view])
+            self.hybrid_hits[TIER_BUFFER] += 1
+            return (1 if z >= 0 else -1), "buffer"
+        z = self.F[entity_id] @ self.W[view] - np.float32(self.b[view])
+        self.disk_touches += 1     # charged as disk_touches * touch_ns by
+        self.hybrid_hits[TIER_DISK] += 1   # callers; time.sleep granularity
+        return (1 if z >= 0 else -1), "disk"  # (~100us) would swamp it
+
+    def hybrid_labels_of(self, entity_id: int) -> Tuple[np.ndarray, np.ndarray]:
+        """All k views' §3.5.2 reads at once: returns ((k,) int8 labels,
+        (k,) int8 tier codes indexing HYBRID_TIERS). The waters test is one
+        vectorized (k,) compare; the views that miss water AND buffer share
+        ONE `F[entity_id]` touch (one matvec against their stacked models)
+        instead of k feature reads."""
+        if self._waters_dirty:
+            self._update_waters(np.flatnonzero(self._waters_stale))
+        pos = self.inv_perm[:, entity_id]
+        e = self.eps_sorted[self._arange_k, pos]
+        wpos = e >= self.hw
+        miss = ~wpos & (e >= self.lw)
+        if not miss.any():                 # every view water-short-circuited
+            self.hybrid_hits[TIER_WATER] += self.k
+            return (np.where(wpos, 1, -1).astype(np.int8),
+                    np.zeros(self.k, np.int8))
+        labels = np.where(wpos, 1, -1).astype(np.int8)
+        how = np.zeros(self.k, np.int8)
+        if self.buffer_cap:
+            in_buf = miss & (self.buffer_lo <= pos) & (pos < self.buffer_hi)
+            bviews = np.flatnonzero(in_buf)
+            if bviews.size:
+                rows = self.buffer_F[bviews, pos[bviews] - self.buffer_lo[bviews]]
+                z = np.einsum("vd,vd->v", rows, self.W[bviews]) \
+                    - self.b[bviews].astype(np.float32)
+                labels[bviews] = np.where(z >= 0, 1, -1)
+                how[bviews] = TIER_BUFFER
+                miss = miss & ~in_buf
+        dviews = np.flatnonzero(miss)
+        if dviews.size:
+            f = self.F[entity_id]          # the ONE shared feature touch
+            self.disk_touches += 1         # callers charge touch_ns per touch
+            z = self.W[dviews] @ f - self.b[dviews].astype(np.float32)
+            labels[dviews] = np.where(z >= 0, 1, -1)
+            how[dviews] = TIER_DISK
+        n_disk = dviews.size
+        n_buffer = int(np.count_nonzero(how == TIER_BUFFER))
+        self.hybrid_hits[TIER_WATER] += self.k - n_buffer - n_disk
+        self.hybrid_hits[TIER_BUFFER] += n_buffer
+        self.hybrid_hits[TIER_DISK] += n_disk
+        return labels, how
+
+    # ------------------------------------------------------------------
 
     def check_consistent(self) -> bool:
         """Golden invariant, per view: maintained labels == from-scratch
         relabel of the shared table under that view's current model."""
-        if self.policy == "lazy":
-            self._lazy_catch_up()
+        self._catch_up()
         Z = self.F @ self.W.T - self.b.astype(np.float32)
         for v in range(self.k):
             truth = np.where(Z[self.perm[v], v] >= 0, 1, -1).astype(np.int8)

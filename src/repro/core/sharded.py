@@ -13,6 +13,12 @@ model axis and scalar metric reductions:
                          embarrassingly parallel — see DESIGN.md on why
                          shard-local clustering preserves correctness)
 
+The multi-view twin additionally exposes the §3.5.2 hybrid read pair:
+`make_multiview_hybrid_probe_step` (eps-map lookup + waters short-circuit —
+a pure (k,) compare, zero feature bytes) and
+`make_multiview_entity_margin_step` (ONE shared feature-row gather that
+classifies every view the waters cannot resolve).
+
 Static band capacity: jit needs static shapes, so the band is processed
 through a `cap`-row window per shard (cap = n_shard * cap_frac). The host
 wrapper checks the true width and triggers reorganization if the window
@@ -116,9 +122,11 @@ def make_hazy_update_step(mesh: Mesh, n: int, cap_frac: float = 1 / 64):
     cap = max(64, int(n_local * cap_frac))
 
     def local(F, eps, labels, perm, w_s, b_s, lw, hw, w, b):
-        # Hölder waters were updated on the host (scalars); locate the band.
+        # Hölder waters were updated on the host (scalars); locate the band
+        # [lw, hw) — the same Lemma 3.1 partition the hybrid probe uses
+        # (eps ≥ hw certainly positive incl. equality, eps < lw negative).
         lo = jnp.searchsorted(eps, lw, side="left").astype(jnp.int32)
-        hi = jnp.searchsorted(eps, hw, side="right").astype(jnp.int32)
+        hi = jnp.searchsorted(eps, hw, side="left").astype(jnp.int32)
         width = hi - lo
         start = jnp.clip(lo, 0, jnp.maximum(0, eps.shape[0] - cap))
         Fb = jax.lax.dynamic_slice(F, (start, 0), (cap, F.shape[1]))
@@ -337,7 +345,7 @@ def make_multiview_hazy_update_step(mesh: Mesh, n: int, k: int,
 
         def one_view(eps_v, labels_v, perm_v, lw_v, hw_v, w_v, b_v):
             lo = jnp.searchsorted(eps_v, lw_v, side="left").astype(jnp.int32)
-            hi = jnp.searchsorted(eps_v, hw_v, side="right").astype(jnp.int32)
+            hi = jnp.searchsorted(eps_v, hw_v, side="left").astype(jnp.int32)
             width = hi - lo
             start = jnp.clip(lo, 0, jnp.maximum(0, eps_v.shape[0] - cap))
             idx = jax.lax.dynamic_slice(perm_v, (start,), (cap,))
@@ -408,6 +416,68 @@ def make_multiview_reorganize_step(mesh: Mesh):
     return step
 
 
+def make_multiview_hybrid_probe_step(mesh: Mesh):
+    """§3.5.2 waters short-circuit for ONE entity across all k views with
+    ZERO feature-table bytes: the entity's stored eps per view comes from
+    the eps-map (masked row-shard sum over `gids`, psum'd), and the waters
+    test itself is a pure (k,) compare vmapped over views. Returns
+    (labels (k,) int8 with 0 = unresolved, resolved (k,) bool, eps_e (k,))."""
+    pf, pr, pkr, pkw = _mv_specs(mesh)
+    rows = _row_axes(mesh)
+
+    def local(F, ids, eps, labels, perm, gids, W_s, b_s, lw, hw, eid):
+        def one_view(eps_v, gids_v):
+            hit = gids_v == eid                  # entity appears once globally
+            return jnp.sum(jnp.where(hit, eps_v, 0.0))
+
+        e = jax.vmap(one_view)(eps, gids)        # (k,) shard-local partial
+        for ax in rows:
+            e = jax.lax.psum(e, ax)
+        # the waters test: a pure (k,) compare, no feature bytes touched
+        lab = jnp.where(e >= hw, 1, jnp.where(e < lw, -1, 0)).astype(jnp.int8)
+        return lab, lab != 0, e
+
+    fn = shard_map(
+        local, mesh=mesh,
+        in_specs=(pf, pr, pkr, pkr, pkr, pkr, pkw, P(), P(), P(), P()),
+        out_specs=(P(), P(), P()))
+
+    def step(state: ShardedMultiViewState, entity_id):
+        return fn(*state, entity_id)
+
+    return step
+
+
+def make_multiview_entity_margin_step(mesh: Mesh):
+    """The "disk" fallback for views the waters cannot short-circuit: ONE
+    gather of the entity's feature row (masked row-shard sum), then every
+    view's margin from the stacked models — one shared F touch for all k
+    views that miss. Returns z (k,) f32 (margins, bias already subtracted)."""
+    pf, pr, pkr, pkw = _mv_specs(mesh)
+    model_ax = "model" if "model" in mesh.axis_names else None
+    rows = _row_axes(mesh)
+
+    def local(F, ids, eps, labels, perm, gids, W_s, b_s, lw, hw, W, b, eid):
+        hit = (ids == eid).astype(jnp.float32)            # (n_local,)
+        f = jnp.einsum("n,nd->d", hit, F.astype(jnp.float32))
+        z = jnp.einsum("kd,d->k", W, f)
+        if model_ax:
+            z = jax.lax.psum(z, model_ax)
+        for ax in rows:            # other row shards contribute exact zeros
+            z = jax.lax.psum(z, ax)
+        return z - b
+
+    fn = shard_map(
+        local, mesh=mesh,
+        in_specs=(pf, pr, pkr, pkr, pkr, pkr, pkw, P(), P(), P(), pkw, P(), P()),
+        out_specs=P())
+
+    def step(state: ShardedMultiViewState, W, b, entity_id):
+        return fn(*state, W, b, entity_id)
+
+    return step
+
+
 def make_multiview_all_members_step(mesh: Mesh):
     _, _, pkr, _ = _mv_specs(mesh)
     rows = _row_axes(mesh)
@@ -442,6 +512,8 @@ class ShardedMultiViewHazy:
         self._hazy = jax.jit(hz)
         self._reorg = jax.jit(make_multiview_reorganize_step(self.mesh))
         self._count = jax.jit(make_multiview_all_members_step(self.mesh))
+        self._probe = jax.jit(make_multiview_hybrid_probe_step(self.mesh))
+        self._margin = jax.jit(make_multiview_entity_margin_step(self.mesh))
         from repro.core.skiing import Skiing
         self.skiing = Skiing(S=1.0, alpha=self.alpha)
         self.lw = np.zeros(self.k, np.float64)
@@ -495,3 +567,20 @@ class ShardedMultiViewHazy:
 
     def all_members(self, state) -> np.ndarray:
         return np.asarray(self._count(state))
+
+    def hybrid_labels_of(self, state: ShardedMultiViewState, W, b,
+                         entity_id: int):
+        """§3.5.2 batched single-entity read: the device-side waters probe
+        resolves what it can with zero feature bytes; the views that miss
+        share ONE feature-row gather (the margin step). Returns
+        ((k,) int8 labels, (k,) bool resolved-by-water mask)."""
+        st = state._replace(lw=jnp.asarray(self.lw, jnp.float32),
+                            hw=jnp.asarray(self.hw, jnp.float32))
+        lab, resolved, _ = self._probe(st, jnp.int32(entity_id))
+        lab = np.asarray(lab).copy()
+        resolved = np.asarray(resolved)
+        if not resolved.all():
+            z = np.asarray(self._margin(st, W, jnp.asarray(b, jnp.float32),
+                                        jnp.int32(entity_id)))
+            lab = np.where(resolved, lab, np.where(z >= 0, 1, -1)).astype(np.int8)
+        return lab, resolved

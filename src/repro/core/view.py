@@ -33,15 +33,26 @@ class ClassificationView:
         self.model = zero_model(self.F.shape[1])
         p, q = norm
         self.hybrid = policy == "hybrid"
-        eng_policy = "eager" if self.hybrid else policy
+        # ctor parameters are stored ONCE and reused verbatim whenever the
+        # engine is rebuilt (refresh_features) — nothing silently reverts.
+        self._engine_kind = engine
         if engine == "hazy":
-            self.engine = HazyEngine(self.F, p=p, q=q, alpha=alpha,
-                                     policy=eng_policy, cost_mode=cost_mode,
-                                     touch_ns=touch_ns,
-                                     buffer_frac=buffer_frac if self.hybrid else 0.0)
+            # hybrid is a first-class HazyEngine policy (lazy maintenance +
+            # §3.5.2 read tier) — no silent rewrite to eager.
+            self._engine_kwargs = dict(
+                p=p, q=q, alpha=alpha, policy=policy, cost_mode=cost_mode,
+                touch_ns=touch_ns,
+                buffer_frac=buffer_frac if self.hybrid else 0.0)
         else:
-            self.engine = NaiveEngine(self.F, policy=eng_policy, touch_ns=touch_ns)
+            self._engine_kwargs = dict(
+                policy="lazy" if self.hybrid else policy, touch_ns=touch_ns)
+        self.engine = self._make_engine()
         self.examples: list = []
+
+    def _make_engine(self):
+        if self._engine_kind == "hazy":
+            return HazyEngine(self.F, **self._engine_kwargs)
+        return NaiveEngine(self.F, **self._engine_kwargs)
 
     # ------------------------------------------------------------------
     # Updates ("INSERT INTO Example_Papers ...")
@@ -92,23 +103,15 @@ class ClassificationView:
             self._entities = entities
         F = self.feature_fn(self._entities) if self.feature_fn else self._entities
         self.F = np.asarray(F, np.float32)
-        kw = {}
-        if isinstance(self.engine, HazyEngine):
-            eng = self.engine
-            self.engine = HazyEngine(self.F, p=eng.waters.p,
-                                     alpha=eng.skiing.alpha, policy=eng.policy,
-                                     cost_mode=eng.cost_mode, touch_ns=eng.touch_ns,
-                                     buffer_frac=eng.buffer_frac)
-        else:
-            self.engine = NaiveEngine(self.F, policy=self.engine.policy)
-        self.engine.apply_model(self.model)
+        self.engine = self._make_engine()   # same ctor kwargs: q, touch_ns,
+        self.engine.apply_model(self.model)  # alpha … all survive the rebuild
 
     # ------------------------------------------------------------------
     # Reads
     # ------------------------------------------------------------------
 
     def label(self, entity_id: int) -> int:
-        if self.hybrid:
+        if self.hybrid and isinstance(self.engine, HazyEngine):
             lab, _ = self.engine.hybrid_label(entity_id)
             return lab
         return self.engine.label(entity_id)

@@ -7,8 +7,10 @@ For stored model (w_s, b_s) and current model (w_j, b_j):
     hw = max over rounds since s of eps_high;  lw = min of eps_low
 
 with M = max_t ||f(t)||_q, 1/p + 1/q = 1. Any tuple with stored
-eps ≥ hw is certainly positive under the current model; eps ≤ lw certainly
-negative; only eps ∈ (lw, hw) needs reclassification.
+eps ≥ hw is certainly positive under the current model (equality included:
+z ≥ 0 labels +1); eps < lw certainly negative (at eps == lw the current
+margin can be exactly 0, which labels +1); only eps ∈ [lw, hw) needs
+reclassification — the partition every band search and hybrid probe uses.
 """
 from __future__ import annotations
 

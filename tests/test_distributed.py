@@ -167,7 +167,18 @@ def test_sharded_multiview_multidevice_consistency():
         counts = sh.all_members(state)
         assert np.array_equal(counts, (truth == 1).sum(axis=0)), counts
         assert counts.min() > 0 and counts.max() < n   # non-degenerate views
-        print("OK reorgs=", sh.skiing.reorgs, "counts=", counts)
+        # §3.5.2 hybrid probe: device-side waters short-circuit (zero feature
+        # bytes) + one shared feature-row gather for the views that miss —
+        # exact for every sampled entity
+        resolved_total = 0
+        for i in range(0, n, 61):
+            lab, resolved = sh.hybrid_labels_of(state, jnp.asarray(W),
+                                                b, int(i))
+            assert np.array_equal(lab, truth[i]), (i, lab, truth[i])
+            resolved_total += int(resolved.sum())
+        assert resolved_total > 0      # the waters tier did real work
+        print("OK reorgs=", sh.skiing.reorgs, "counts=", counts,
+              "water_resolved=", resolved_total)
     """)
     assert "OK" in out
 

@@ -1,0 +1,293 @@
+"""§3.5.2 hybrid read tier + per-view laziness: oracle tests and regressions.
+
+Covers the four PR-2 bug classes with dedicated tests:
+  * `HazyEngine.hybrid_label` probing stale waters under a pending lazy model
+  * `ClassificationView.refresh_features` dropping ctor params (q, touch_ns)
+  * exact-water-mark boundary disagreement between the hybrid probe and the
+    band search (both engines)
+  * `MultiViewEngine.band_fractions` skipping lazy catch-up
+plus the hybrid-read oracle (reads always agree with a from-scratch
+sign(F @ w − b) under every policy) and per-view pending isolation.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (ClassificationView, HazyEngine, LinearModel,
+                        MulticlassView, MultiViewEngine, holder_M, sgd_step,
+                        zero_model)
+from repro.core.hazy import hot_buffer_window
+from repro.core.multiview import HYBRID_TIERS
+from repro.data import cora_like, forest_like, example_stream, \
+    multiclass_example_stream
+
+
+def _oracle(F, w, b):
+    return np.where(F @ w - b >= 0, 1, -1)
+
+
+# ---------------------------------------------------------------------------
+# Bug 1: hybrid_label must be exact with a pending (lazy/hybrid) model
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("policy", ["lazy", "hybrid"])
+def test_hazy_hybrid_label_exact_with_pending_model(policy):
+    corpus = forest_like(scale=0.01)
+    stream = example_stream(corpus, seed=11, label_noise=0.0)
+    model = zero_model(corpus.features.shape[1])
+    eng = HazyEngine(corpus.features, p=2.0, q=2.0, policy=policy,
+                     buffer_frac=0.05)
+    for _, f, y in [next(stream) for _ in range(200)]:
+        model = sgd_step(model, f, y, lr=0.05, l2=1e-3)
+        eng.apply_model(model)   # no reads: the model stays pending
+    truth = _oracle(eng.F, model.w, model.b)
+    for i in range(0, corpus.features.shape[0], 7):
+        lab, how = eng.hybrid_label(i)
+        assert lab == truth[i], (i, how)
+    # the probe used the waters update, not a full catch-up: under pure
+    # lazy the relabel must still be deferred
+    if policy == "lazy":
+        assert eng._pending is not None
+    assert eng.all_members() == int((truth == 1).sum())
+
+
+# ---------------------------------------------------------------------------
+# Bug 2: refresh_features must preserve the ctor parameters
+# ---------------------------------------------------------------------------
+
+def test_refresh_features_preserves_ctor_params():
+    r = np.random.default_rng(0)
+    F1 = r.normal(size=(64, 8)).astype(np.float32)
+    F2 = 2.0 * r.normal(size=(64, 8)).astype(np.float32)
+    view = ClassificationView(F1, policy="lazy", norm=(2.0, 2.0), alpha=1.3,
+                              cost_mode="modeled", touch_ns=123.0)
+    assert view.engine.M == holder_M(F1, 2.0)
+    view.insert_example(3, 1.0)
+    view.refresh_features(entities=F2)
+    assert view.engine.M == holder_M(F2, 2.0)       # q survived (was q=1.0)
+    assert view.engine.touch_ns == 123.0
+    assert view.engine.policy == "lazy"
+    assert view.engine.cost_mode == "modeled"
+    assert view.engine.skiing.alpha == 1.3
+    # NaiveEngine branch: touch_ns survived (was dropped entirely)
+    nview = ClassificationView(F1, engine="naive", policy="lazy",
+                               touch_ns=55.0)
+    nview.insert_example(1, -1.0)
+    nview.refresh_features(entities=F2)
+    assert nview.engine.touch_ns == 55.0
+    assert nview.engine.policy == "lazy"
+
+
+# ---------------------------------------------------------------------------
+# Bug 3: entities with eps exactly AT a water mark — probe and band search
+# must partition identically ([lw, hw) reclassified; e >= hw / e < lw
+# short-circuited)
+# ---------------------------------------------------------------------------
+
+def test_exact_water_boundary_single_view():
+    # 1-D features with exact f32 values; q=2 => M = 2
+    F = np.array([[2.0], [1.0], [0.5], [-1.0], [-2.0]], np.float32)
+    eng = HazyEngine(F, p=2.0, q=2.0, policy="eager")
+    eng.model = LinearModel(np.array([1.0], np.float32), 0.0)
+    eng.reorganize()                     # stored = (w=1, b=0); eps = f values
+
+    # db = +1, dw = 0 -> lw = 0, hw = 1: entity f=1 sits exactly at hw
+    eng.apply_model(LinearModel(np.array([1.0], np.float32), 1.0))
+    assert (eng.waters.lw, eng.waters.hw) == (0.0, 1.0)
+    truth = _oracle(F, eng.model.w, eng.model.b)
+    lab, how = eng.hybrid_label(1)       # eps_stored == hw == 1
+    assert how == "water" and lab == 1 == truth[1]
+    assert eng.label(1) == truth[1]
+    for i in range(F.shape[0]):
+        lab, _ = eng.hybrid_label(i)
+        assert lab == truth[i] == eng.label(i), i
+    assert eng.check_consistent()
+
+    # db = −1 -> lw = −1, hw = 0: entity f=−1 sits exactly at lw, and its
+    # true label under the new model is +1 (z == 0) — it must be
+    # reclassified by BOTH paths, never short-circuited to −1
+    eng2 = HazyEngine(F, p=2.0, q=2.0, policy="eager")
+    eng2.model = LinearModel(np.array([1.0], np.float32), 0.0)
+    eng2.reorganize()
+    eng2.apply_model(LinearModel(np.array([1.0], np.float32), -1.0))
+    assert (eng2.waters.lw, eng2.waters.hw) == (-1.0, 0.0)
+    truth = _oracle(F, eng2.model.w, eng2.model.b)
+    assert truth[3] == 1                 # z = −1 + 1 = 0 -> +1
+    lab, how = eng2.hybrid_label(3)
+    assert lab == 1 and how != "water"
+    assert eng2.label(3) == 1
+    lab, how = eng2.hybrid_label(4)      # f=−2 < lw: certainly negative
+    assert lab == -1 and how == "water" and truth[4] == -1
+    assert eng2.check_consistent()
+
+
+def test_exact_water_boundary_multiview():
+    F = np.array([[2.0], [1.0], [0.5], [-1.0], [-2.0]], np.float32)
+    k = 2
+    eng = MultiViewEngine(F, k, p=2.0, q=2.0, cost_mode="modeled")
+    W = np.ones((k, 1), np.float32)
+    b = np.zeros(k)
+    eng.W, eng.b = W.copy(), b.copy()
+    eng._reorganize_views(np.ones(k, bool))   # stored = (1, 0) per view
+    # view 0: db=+1 (hw=1, entity f=1 at hw); view 1: db=−1 (lw=−1, f=−1 at lw)
+    eng.apply_models(W, np.array([1.0, -1.0]))
+    assert (eng.lw[0], eng.hw[0]) == (0.0, 1.0)
+    assert (eng.lw[1], eng.hw[1]) == (-1.0, 0.0)
+    Z = F @ eng.W.T - eng.b.astype(np.float32)
+    truth = np.where(Z >= 0, 1, -1)
+    lab, how = eng.hybrid_label(0, 1)         # eps_stored == hw for view 0
+    assert lab == 1 == truth[1, 0] and how == "water"
+    lab, how = eng.hybrid_label(1, 3)         # eps_stored == lw for view 1
+    assert lab == 1 == truth[3, 1] and how != "water"   # z == 0 -> +1
+    for i in range(F.shape[0]):
+        labs, hows = eng.hybrid_labels_of(i)
+        assert np.array_equal(labs, truth[i]), i
+        for v in range(k):
+            assert eng.hybrid_label(v, i)[0] == truth[i, v]
+            assert eng.label(v, i) == truth[i, v]
+    assert eng.check_consistent()
+
+
+# ---------------------------------------------------------------------------
+# Bug 4: band_fractions under lazy must reflect the caught-up view state
+# ---------------------------------------------------------------------------
+
+def test_band_fractions_catches_up_lazy_views():
+    c = cora_like(scale=0.2)
+    k = c.num_classes
+    a = MultiViewEngine(c.features, k, p=2.0, q=2.0, policy="lazy",
+                        cost_mode="modeled")
+    bb = MultiViewEngine(c.features, k, p=2.0, q=2.0, policy="lazy",
+                         cost_mode="modeled")
+    r = np.random.default_rng(5)
+    W = r.normal(size=(k, c.features.shape[1])).astype(np.float32) * 0.1
+    bias = r.normal(size=k) * 0.01
+    a.apply_models(W, bias)
+    bb.apply_models(W, bias)
+    assert a.pending.all()
+    fracs = a.band_fractions()
+    assert not a.pending.any()           # the read caught the views up
+    bb.all_members()                     # explicit catch-up on the twin
+    assert np.array_equal(fracs, bb.band_fractions())
+
+
+# ---------------------------------------------------------------------------
+# Per-view laziness: a read of view v leaves the other k−1 views pending
+# ---------------------------------------------------------------------------
+
+def test_per_view_pending_isolation():
+    c = cora_like(scale=0.2)
+    k = c.num_classes
+    eng = MultiViewEngine(c.features, k, p=2.0, q=2.0, policy="lazy",
+                          cost_mode="modeled")
+    r = np.random.default_rng(7)
+    W = r.normal(size=(k, c.features.shape[1])).astype(np.float32) * 0.1
+    bias = r.normal(size=k) * 0.01
+    eng.apply_models(W, bias)
+    assert eng.pending.all()
+    truth = np.where(c.features @ W.T - bias.astype(np.float32) >= 0, 1, -1)
+    before = eng.labels_sorted.copy()
+    assert eng.label(2, 5) == truth[5, 2]          # hot view caught up...
+    assert not eng.pending[2]
+    others = [v for v in range(k) if v != 2]
+    assert eng.pending[others].all()               # ...cold views defer
+    for v in others:                               # their state is untouched
+        assert np.array_equal(eng.labels_sorted[v], before[v])
+    mem = eng.members(4)
+    assert not eng.pending[4] and eng.pending[[v for v in others if v != 4]].all()
+    assert set(mem.tolist()) == set(np.flatnonzero(truth[:, 4] == 1).tolist())
+    counts = eng.all_members()                     # touches every view
+    assert not eng.pending.any()
+    assert np.array_equal(counts, (truth == 1).sum(axis=0))
+    # §3.4 waste was charged exactly to the views that caught up
+    assert np.all(eng.lazy_waste >= 0.0)
+
+
+# ---------------------------------------------------------------------------
+# Hybrid-read oracle: random update streams, both engines, every policy —
+# hybrid reads match sign(F @ w − b) for EVERY entity, and no read ever
+# observes a pre-catch-up label
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("policy", ["eager", "lazy", "hybrid"])
+def test_hybrid_read_oracle_multiview(policy):
+    c = cora_like(scale=0.15)
+    k = c.num_classes
+    view = MulticlassView(c.features, k, policy=policy, buffer_frac=0.08,
+                          p=2.0, q=2.0, lr=0.1, cost_mode="modeled")
+    eng = view.engine
+    stream = multiclass_example_stream(c, seed=23)
+    r = np.random.default_rng(29)
+    for t, (i, cls) in enumerate(next(stream) for _ in range(240)):
+        view.insert_example(i, cls)
+        if t % 40 == 11:
+            truth = np.where(c.features @ view.W.T
+                             - view.b.astype(np.float32) >= 0, 1, -1)
+            for e in range(c.features.shape[0]):
+                labs, hows = eng.hybrid_labels_of(e)
+                assert np.array_equal(labs, truth[e]), (t, e)
+                assert set(np.unique(hows)) <= {0, 1, 2}
+            for e in r.integers(0, c.features.shape[0], 40):
+                v = int(r.integers(0, k))
+                assert eng.hybrid_label(v, int(e))[0] == truth[e, v]
+                assert eng.label(v, int(e)) == truth[e, v]
+                assert view.predict_via_views(int(e)) == view.predict(int(e))
+    assert eng.check_consistent()
+    if policy == "hybrid":
+        assert eng.hybrid_hits.sum() > 0
+
+
+@pytest.mark.parametrize("policy", ["eager", "lazy", "hybrid"])
+def test_hybrid_read_oracle_single_view(policy):
+    corpus = forest_like(scale=0.008)
+    stream = example_stream(corpus, seed=31, label_noise=0.0)
+    model = zero_model(corpus.features.shape[1])
+    eng = HazyEngine(corpus.features, p=2.0, q=2.0, policy=policy,
+                     buffer_frac=0.05)
+    for t, (_, f, y) in enumerate(next(stream) for _ in range(200)):
+        model = sgd_step(model, f, y, lr=0.05, l2=1e-3)
+        eng.apply_model(model)
+        if t % 50 == 13:
+            truth = _oracle(eng.F, model.w, model.b)
+            for i in range(corpus.features.shape[0]):
+                assert eng.hybrid_label(i)[0] == truth[i], (t, i)
+    assert eng.check_consistent()
+
+
+# ---------------------------------------------------------------------------
+# Plumbing: ClassificationView keeps hybrid hybrid; MulticlassView policy +
+# predict_via_views on the legacy path; the shared buffer helper
+# ---------------------------------------------------------------------------
+
+def test_classification_view_hybrid_not_rewritten():
+    corpus = forest_like(scale=0.005)
+    view = ClassificationView(corpus.features, policy="hybrid",
+                              norm=(2.0, 2.0), lr=0.05, buffer_frac=0.05)
+    assert view.engine.policy == "hybrid"          # no silent eager rewrite
+    stream = example_stream(corpus, seed=41, label_noise=0.0)
+    for _, (i, _f, y) in zip(range(150), stream):
+        view.insert_example(i, y)
+    truth = _oracle(view.F, view.model.w, view.model.b)
+    for i in range(0, len(truth), 101):
+        assert view.label(i) == truth[i]
+    assert view.all_members() == int((truth == 1).sum())
+
+
+def test_predict_via_views_legacy_loop_matches_predict():
+    c = cora_like(scale=0.12)
+    k = c.num_classes
+    view = MulticlassView(c.features, k, policy="hybrid", buffer_frac=0.05,
+                          p=2.0, q=2.0, lr=0.1, vectorized=False)
+    stream = multiclass_example_stream(c, seed=43)
+    for i, cls in (next(stream) for _ in range(150)):
+        view.insert_example(i, cls)
+    for e in range(0, c.features.shape[0], 17):
+        assert view.predict_via_views(e) == view.predict(e)
+
+
+def test_hot_buffer_window_shared_helper():
+    eps = np.array([-3.0, -1.0, -0.5, 0.25, 2.0, 4.0], np.float32)
+    lo, hi = hot_buffer_window(eps, 2)
+    assert (lo, hi) == (2, 4)                      # straddles the boundary
+    assert hot_buffer_window(eps, 100) == (0, 6)   # capped at n
+    assert hot_buffer_window(eps, 0) == (3, 4)     # min capacity 1
+    assert len(HYBRID_TIERS) == 3
