@@ -27,6 +27,7 @@ MODULES = [
     "benchmarks.waters",            # Fig. 13
     "benchmarks.multiclass",        # App. B.5.4 / C.3 (multi-view engine)
     "benchmarks.hybrid",            # §3.5.2 hybrid tier on the multi-view engine
+    "benchmarks.scale",             # paper-scale CS/FC on the multi-view engine
     "benchmarks.kernel_bench",      # framework kernels
 ]
 

@@ -1,0 +1,124 @@
+"""Paper-scale benchmark of the vectorized multi-view engine (ROADMAP item).
+
+Runs the workloads the paper sizes its corpora at — citeseer_like at full
+scale (721k rows through the hashing trick, k = 16 one-vs-all views over
+ONE shared table) and forest_like (582k × 54 dense) — and reports
+tuples/sec for the three paths that matter at scale:
+
+  * insert       — batched training inserts (`insert_examples`) through the
+                   eager engine: SGD on the stacked models + ONE union-band
+                   maintenance round per batch;
+  * all_members  — the (k,) positive-count probe on the maintained views;
+  * hybrid reads — §3.5.2 `hybrid_labels_of` single-entity reads on a
+                   hybrid-policy twin driven by the same stream (waters
+                   short-circuit -> hot buffer -> one shared F-row touch).
+
+Writes machine-readable ``BENCH_scale.json``. BENCH_SCALE scales the row
+counts (1.0 = paper scale; the CI smoke uses 0.02); BENCH_SCALE_HASH_DIM
+sizes the hashed feature space of the text corpus.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from benchmarks.common import BENCH_SCALE, emit
+from repro.core import MulticlassView
+from repro.core.multiview import HYBRID_TIERS
+from repro.data import citeseer_like, forest_like
+
+K = int(os.environ.get("BENCH_SCALE_K", "16"))
+BATCH = int(os.environ.get("BENCH_SCALE_BATCH", "64"))
+ROUNDS = int(os.environ.get("BENCH_SCALE_ROUNDS", "30"))
+HASH_DIM = int(os.environ.get("BENCH_SCALE_HASH_DIM", "1024"))
+READS = int(os.environ.get("BENCH_SCALE_READS", "2000"))
+
+
+def _stream(n: int, cls: np.ndarray, seed: int):
+    r = np.random.default_rng(seed)
+    ids = r.integers(0, n, ROUNDS * BATCH)
+    return [(int(i), int(cls[i])) for i in ids]
+
+
+def _bench_corpus(corpus, pq) -> dict:
+    n, d = corpus.features.shape
+    p, q = pq
+    r = np.random.default_rng(5)
+    cls = r.integers(0, K, n)            # k-way one-vs-all labeling
+    inserts = _stream(n, cls, seed=7)
+    kw = dict(p=p, q=q, lr=0.05, cost_mode="measured")
+
+    eager = MulticlassView(corpus.features, K, policy="eager", **kw)
+    t0 = time.perf_counter()
+    for j in range(0, len(inserts), BATCH):
+        chunk = inserts[j:j + BATCH]
+        eager.insert_examples([i for i, _ in chunk], [c for _, c in chunk])
+    insert_s = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    calls = 0
+    while time.perf_counter() - t0 < 0.5:
+        counts = eager.class_counts()
+        calls += 1
+    members_s = (time.perf_counter() - t0) / calls
+    # exactness gate: maintained counts == from-scratch relabel counts
+    truth = (corpus.features @ eager.W.T
+             - eager.b.astype(np.float32) >= 0).sum(axis=0)
+    assert np.array_equal(counts, truth), (counts, truth.tolist())
+
+    hybrid = MulticlassView(corpus.features, K, policy="hybrid",
+                            buffer_frac=0.01, **kw)
+    for j in range(0, len(inserts), BATCH):
+        chunk = inserts[j:j + BATCH]
+        hybrid.insert_examples([i for i, _ in chunk], [c for _, c in chunk])
+    read_ids = np.random.default_rng(9).integers(0, n, READS)
+    eng = hybrid.engine
+    t0 = time.perf_counter()
+    for i in read_ids:
+        eng.hybrid_labels_of(int(i))
+    read_s = time.perf_counter() - t0
+    hits = eng.hybrid_hits.astype(float)
+    frac = hits / max(1.0, hits.sum())
+
+    name = corpus.name
+    emit(f"scale_insert_{name}_k{K}_n{n}",
+         insert_s / len(inserts) * 1e6,
+         f"{len(inserts) / insert_s:.0f}/s")
+    emit(f"scale_all_members_{name}_k{K}_n{n}", members_s * 1e6,
+         f"{1.0 / members_s:.0f}/s")
+    emit(f"scale_hybrid_read_{name}_k{K}_n{n}", read_s / READS * 1e6,
+         f"{READS / read_s:.0f}/s")
+    return {
+        "n": n, "d": d, "k": K,
+        "insert": {"total": len(inserts), "seconds": insert_s,
+                   "tuples_per_sec": len(inserts) / insert_s,
+                   "reorgs": int(eager.engine.stats.reorgs)},
+        "all_members": {"seconds_per_call": members_s,
+                        "calls_per_sec": 1.0 / members_s},
+        "hybrid_read": {"reads": int(READS), "seconds": read_s,
+                        "tuples_per_sec": READS / read_s,
+                        "tier_fractions": {t: float(f) for t, f
+                                           in zip(HYBRID_TIERS, frac)}},
+    }
+
+
+def main() -> None:
+    cs = citeseer_like(scale=BENCH_SCALE, hash_dim=HASH_DIM)
+    fc = forest_like(scale=BENCH_SCALE)
+    payload = {
+        "scale": BENCH_SCALE,
+        "batch": BATCH, "rounds": ROUNDS,
+        "corpora": {
+            "CS": _bench_corpus(cs, (np.inf, 1.0)),
+            "FC": _bench_corpus(fc, (2.0, 2.0)),
+        },
+    }
+    with open("BENCH_scale.json", "w") as f:
+        json.dump(payload, f, indent=2)
+
+
+if __name__ == "__main__":
+    main()

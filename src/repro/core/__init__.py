@@ -1,10 +1,15 @@
 from repro.core.linear_model import (LinearModel, zero_model, sgd_step,
                                      train_batch, full_gradient_train,
                                      precision_recall)
+from repro.core.engine import (EngineParams, EngineState, band_mask,
+                               band_partition, band_windows, classify,
+                               covering_windows, hot_buffer_window,
+                               probe_partition, row_norms, skiing_charge,
+                               skiing_due, waters_bounds, waters_update)
 from repro.core.waters import Waters, holder_M, eps_bounds, vector_norm
 from repro.core.skiing import Skiing, alpha_star, skiing_schedule, opt_cost
 from repro.core.hazy import HazyEngine, NaiveEngine
-from repro.core.multiview import MultiViewEngine, row_norms
+from repro.core.multiview import MultiViewEngine
 from repro.core.view import ClassificationView
 from repro.core.multiclass import MulticlassView
 from repro.core.random_features import RandomFeatures

@@ -1,0 +1,386 @@
+"""Single-source functional core of the HAZY maintenance algorithm (§3.2–3.5).
+
+The paper's incremental-maintenance algorithm used to be implemented three
+separate times — host `HazyEngine` (core/hazy.py), vectorized
+`MultiViewEngine` (core/multiview.py) and the jax `ShardedMultiViewHazy`
+(core/sharded.py) — and the copies drifted apart in exactly the Lemma 3.1
+partition they must agree on. Following Bismarck's unified-architecture
+argument (one shared aggregation core under many statistical views) and
+F-IVM's shared-state view maintenance, every algorithm *rule* now lives here
+exactly once, backend-parameterized by `xp` (numpy on the host, jax.numpy
+under jit/shard_map):
+
+Layer 1 — primitives (imported by hazy.py / multiview.py / sharded.py /
+waters.py / skiing.py; no other module may reimplement them):
+
+  * `band_partition` / `band_windows` / `band_mask` / `probe_partition` —
+    THE Lemma 3.1 partition: eps ≥ hw certainly positive (equality included,
+    z ≥ 0 labels +1), eps < lw certainly negative, band [lw, hw) must be
+    reclassified. Sorted-row (searchsorted), elementwise-mask and
+    point-probe forms of the same inequalities.
+  * `waters_bounds` / `waters_update` — Hölder waters, Eq. 2 (running
+    min/max of ±M·‖ΔW‖_p + Δb), vectorized over stacked (k, d) models and
+    valid for a single (d,) model.
+  * `skiing_charge` / `skiing_due` — the SKIING strategy (§3.2.1, Fig. 7):
+    accumulate incremental cost, reorganize when it reaches α·S.
+  * `classify` — sign labels (z ≥ 0 → +1), `row_norms` — the one p-norm,
+    `hot_buffer_window` — the §3.5.2 hot-buffer window around the zero
+    boundary, `covering_windows` — per-view covering windows of the band in
+    a SHARED clustering order (the device-side form the Pallas
+    `multiview_band_reclassify` kernel consumes).
+
+Layer 2 — `EngineState` pytree + pure steps (`apply_model`, `reorganize`,
+`catch_up`, `hybrid_probe`): the executable specification of one
+maintenance round over k views sharing ONE feature table, identical under
+numpy and jax.numpy (jit-able: static shapes, full-mask band merges,
+modeled costs). The stateful shells (`HazyEngine` as the k = 1
+specialization with a materialized `F_sorted`, `MultiViewEngine` with exact
+dynamic band slices and measured wall-time costs) keep their storage
+layouts and cost accounting but route every decision through Layer 1; the
+property tests drive the same insert stream through a shell and the jitted
+Layer 2 steps and assert identical labels, counts, waters and reorg
+schedules.
+
+Modeled costs here are dimensionless (width/n, band fraction, lazy waste):
+every modeled charge in the shells is S_v · (dimensionless quantity) and
+the SKIING threshold is α · S_v, so S_v cancels and the reorg schedule is
+invariant to it — Layer 2 therefore charges the dimensionless quantity
+against the threshold α directly.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import numpy as np
+
+# hybrid tier codes returned by the §3.5.2 probes (index into HYBRID_TIERS)
+HYBRID_TIERS = ("water", "buffer", "disk")
+TIER_WATER, TIER_BUFFER, TIER_DISK = 0, 1, 2
+
+
+# ---------------------------------------------------------------------------
+# Layer 1 — primitives (the single source of every algorithm rule)
+# ---------------------------------------------------------------------------
+
+def row_norms(X, p: float, xp=np):
+    """p-norm over the LAST axis: (..., d) -> (...,). The one norm behind the
+    Hölder waters (Eq. 2) on every backend; dtype-preserving."""
+    if X.shape[-1] == 0:
+        return xp.zeros(X.shape[:-1], X.dtype)
+    A = xp.abs(X)
+    if np.isinf(p):
+        return xp.max(A, axis=-1)
+    if p == 1.0:
+        return xp.sum(A, axis=-1)
+    return xp.sum(A ** p, axis=-1) ** (1.0 / p)
+
+
+def classify(z, xp=np):
+    """Sign labels: z ≥ 0 → +1 else −1, int8 (z == 0 labels +1 everywhere —
+    the convention every band search and probe below shares)."""
+    return xp.where(z >= 0, 1, -1).astype(xp.int8)
+
+
+def band_partition(eps_sorted, lw, hw, xp=np) -> Tuple:
+    """THE Lemma 3.1 partition on one eps-sorted row: returns [lo, hi) such
+    that positions ≥ hi are certainly positive (eps ≥ hw, equality
+    included), positions < lo certainly negative (eps < lw), and [lo, hi)
+    is the band reclassification must touch. `probe_partition` is the same
+    partition for a point probe — they must never disagree (PR 2's
+    exact-water-mark bug)."""
+    lo = xp.searchsorted(eps_sorted, lw, side="left")
+    hi = xp.searchsorted(eps_sorted, hw, side="left")
+    return lo, hi
+
+
+def band_windows(eps_sorted, lw, hw, xp=np) -> Tuple:
+    """`band_partition` per view: (k, n) sorted rows + (k,) waters ->
+    (k,) lo, (k,) hi. k is static, so the loop unrolls under jit."""
+    pairs = [band_partition(eps_sorted[v], lw[v], hw[v], xp=xp)
+             for v in range(eps_sorted.shape[0])]
+    lo = xp.stack([xp.asarray(a) for a, _ in pairs])
+    hi = xp.stack([xp.asarray(b) for _, b in pairs])
+    return lo, hi
+
+
+def band_mask(eps, lw, hw):
+    """Elementwise Lemma 3.1 band membership: True iff eps ∈ [lw, hw) (the
+    rows that must be reclassified), for eps rows in ANY order — the form
+    the sharded shared-order steps use."""
+    return (eps >= lw) & (eps < hw)
+
+
+def probe_partition(eps, lw, hw, xp=np):
+    """Point-probe form of the partition: +1 (eps ≥ hw), −1 (eps < lw),
+    0 (in the band — the caller must classify against the current model)."""
+    return xp.where(eps >= hw, 1, xp.where(eps < lw, -1, 0)).astype(xp.int8)
+
+
+def waters_bounds(W, b, W_stored, b_stored, M: float, p: float, xp=np):
+    """One round of Lemma 3.1 bounds: (−M‖ΔW‖_p + Δb, M‖ΔW‖_p + Δb).
+    W may be a single (d,) model or stacked (k, d) models."""
+    dw = row_norms(W - W_stored, p, xp=xp)
+    db = b - b_stored
+    return -M * dw + db, M * dw + db
+
+
+def waters_update(lw, hw, W, b, W_stored, b_stored, M: float, p: float,
+                  xp=np):
+    """Eq. 2 running waters: lw never rises, hw never falls between
+    reorganizations (monotone, idempotent). THE waters update."""
+    lo, hi = waters_bounds(W, b, W_stored, b_stored, M, p, xp=xp)
+    return xp.minimum(lw, lo), xp.maximum(hw, hi)
+
+
+def skiing_charge(acc, cost):
+    """THE SKIING charge rule: accumulate one incremental-step cost."""
+    return acc + cost
+
+
+def skiing_due(acc, alpha, S):
+    """SKIING trigger (Fig. 7): reorganize when accumulated incremental
+    cost has reached α·S. Scalar or per-view arrays."""
+    return acc >= alpha * S
+
+
+def hot_buffer_window(eps_sorted, cap: int, xp=np) -> Tuple:
+    """[lo, hi) positions of the §3.5.2 hot buffer: `cap` eps-sorted slots
+    centered on the zero boundary (the tuples most likely to flip). Shared
+    by the single-view engine, the per-view windows of `MultiViewEngine`
+    and the Layer 2 pure state."""
+    n = eps_sorted.shape[0]
+    cap = max(1, min(int(cap), n))
+    boundary = xp.searchsorted(eps_sorted, 0.0, side="left")
+    lo = xp.maximum(0, boundary - cap // 2)
+    hi = xp.minimum(n, lo + cap)
+    return lo, hi
+
+
+def covering_windows(eps, lw, hw, xp=np) -> Tuple:
+    """Per-view covering windows of the Lemma 3.1 band in a SHARED row
+    order.
+
+    eps: (k, n) per-view stored-model margins of the rows of ONE shared
+    scratch table (each row of eps follows the table's shared clustering
+    order, NOT sorted per view). Returns ((k,) start, (k,) end, (k,) true
+    band width) where [start_v, end_v) is the tightest contiguous window
+    containing every row of view v's band — relabeling a covering superset
+    is exact because relabeling recomputes sign(w_v·f − b_v). This is the
+    window form `multiview_band_reclassify` (Pallas) consumes; a view with
+    an empty band gets the empty window [0, 0)."""
+    k, n = eps.shape
+    mask = band_mask(eps, lw[:, None], hw[:, None])
+    width = xp.sum(mask, axis=1).astype(xp.int32)
+    first = xp.argmax(mask, axis=1).astype(xp.int32)
+    last = (n - 1 - xp.argmax(mask[:, ::-1], axis=1)).astype(xp.int32)
+    has = width > 0
+    start = xp.where(has, first, 0).astype(xp.int32)
+    end = xp.where(has, last + 1, 0).astype(xp.int32)
+    return start, end, width
+
+
+def argsort_stable(x, xp=np, axis=-1):
+    """Stable argsort on both backends (ties keep row order, so identical
+    eps give identical clustering permutations everywhere)."""
+    if xp is np:
+        return np.argsort(x, axis=axis, kind="stable")
+    return xp.argsort(x, axis=axis)        # jnp argsort is stable by default
+
+
+# ---------------------------------------------------------------------------
+# Layer 2 — EngineState pytree + pure steps (the executable specification)
+# ---------------------------------------------------------------------------
+
+class EngineParams(NamedTuple):
+    """Static hyper-parameters of the maintenance algorithm (close over
+    them with functools.partial before jit)."""
+    M: float                 # Hölder constant max_t ‖f(t)‖_q
+    p: float                 # waters norm (1/p + 1/q = 1)
+    alpha: float             # SKIING threshold multiplier
+    buffer_cap: int = 0      # §3.5.2 hot-buffer rows per view (0 = off)
+
+
+class EngineState(NamedTuple):
+    """k one-vs-all views over ONE shared feature table, as a pytree.
+
+    F stays in fixed entity order for the lifetime of the state (the
+    multi-view shared-table layout: reorganization re-sorts the per-view
+    scratch rows, never the table). All per-view state is rows of stacked
+    arrays — no Python objects, so the whole state jits and shards."""
+    F: np.ndarray            # (n, d) f32 — shared table, fixed entity order
+    W: np.ndarray            # (k, d) f32 current models
+    b: np.ndarray            # (k,) current biases
+    W_stored: np.ndarray     # (k, d) f32 models the clustering was built on
+    b_stored: np.ndarray     # (k,)
+    lw: np.ndarray           # (k,) low waters
+    hw: np.ndarray           # (k,) high waters
+    eps_sorted: np.ndarray   # (k, n) f32 stored-model eps, sorted per view
+    perm: np.ndarray         # (k, n) position -> entity id
+    inv_perm: np.ndarray     # (k, n) entity id -> position (the eps-map)
+    labels: np.ndarray       # (k, n) int8, aligned to eps_sorted
+    pos_count: np.ndarray    # (k,) number of +1 labels per view
+    pending: np.ndarray      # (k,) bool — view defers maintenance
+    acc: np.ndarray          # (k,) SKIING accumulators (dimensionless)
+    buffer_lo: np.ndarray    # (k,) hot-buffer window start positions
+    buffer_hi: np.ndarray    # (k,) hot-buffer window end positions
+
+
+def make_params(F, *, p: float = 2.0, q: float = 2.0, alpha: float = 1.0,
+                buffer_frac: float = 0.0) -> EngineParams:
+    F = np.asarray(F, np.float32)
+    cap = max(1, int(buffer_frac * F.shape[0])) if buffer_frac else 0
+    return EngineParams(M=float(np.max(row_norms(F, q))), p=p, alpha=alpha,
+                        buffer_cap=cap)
+
+
+def init_state(F, k: int, params: EngineParams) -> EngineState:
+    """Fresh state under the zero model, all k views clustered (built on the
+    host with numpy; jax users tree-map `jnp.asarray` over the result)."""
+    F = np.ascontiguousarray(F, np.float32)
+    n, d = F.shape
+    zk = np.zeros(k, np.float64)
+    state = EngineState(
+        F=F, W=np.zeros((k, d), np.float32), b=zk.copy(),
+        W_stored=np.zeros((k, d), np.float32), b_stored=zk.copy(),
+        lw=zk.copy(), hw=zk.copy(),
+        eps_sorted=np.zeros((k, n), np.float32),
+        perm=np.zeros((k, n), np.int64), inv_perm=np.zeros((k, n), np.int64),
+        labels=np.zeros((k, n), np.int8), pos_count=np.zeros(k, np.int64),
+        pending=np.zeros(k, bool), acc=zk.copy(),
+        buffer_lo=np.zeros(k, np.int64), buffer_hi=np.zeros(k, np.int64),
+    )
+    return reorganize(state, np.ones(k, bool), params, xp=np)
+
+
+def reorganize(state: EngineState, due, params: EngineParams,
+               xp=np) -> EngineState:
+    """Re-sort the scratch rows of every view in `due` from one shared
+    `F @ W.T` product; reset their stored models, waters, SKIING
+    accumulators and pending flags. F itself never moves."""
+    k, n = state.eps_sorted.shape
+    b32 = state.b.astype(xp.float32)
+    Z = (state.F @ state.W.T - b32).T                    # (k, n) fresh eps
+    order = argsort_stable(Z, xp=xp, axis=1)
+    eps_new = xp.take_along_axis(Z, order, axis=1)
+    inv_new = argsort_stable(order, xp=xp, axis=1)       # inverse permutation
+    labels_new = classify(eps_new, xp=xp)
+    pos_new = xp.sum(labels_new == 1, axis=1)
+    due = xp.asarray(due)
+    dr = due[:, None]
+    out = state._replace(
+        eps_sorted=xp.where(dr, eps_new, state.eps_sorted),
+        perm=xp.where(dr, order, state.perm),
+        inv_perm=xp.where(dr, inv_new, state.inv_perm),
+        labels=xp.where(dr, labels_new, state.labels),
+        pos_count=xp.where(due, pos_new, state.pos_count),
+        W_stored=xp.where(dr, state.W, state.W_stored),
+        b_stored=xp.where(due, state.b, state.b_stored),
+        lw=xp.where(due, 0.0, state.lw), hw=xp.where(due, 0.0, state.hw),
+        pending=state.pending & ~due,
+        acc=xp.where(due, 0.0, state.acc),
+    )
+    if params.buffer_cap:
+        wins = [hot_buffer_window(eps_new[v], params.buffer_cap, xp=xp)
+                for v in range(k)]
+        blo = xp.stack([xp.asarray(a) for a, _ in wins])
+        bhi = xp.stack([xp.asarray(b) for _, b in wins])
+        out = out._replace(buffer_lo=xp.where(due, blo, state.buffer_lo),
+                           buffer_hi=xp.where(due, bhi, state.buffer_hi))
+    return out
+
+
+def _relabel(state: EngineState, sel, params: EngineParams, xp=np):
+    """Waters update + banded reclassify of the views in `sel` (the shared
+    incremental step). Returns (state', lo, widths)."""
+    k, n = state.eps_sorted.shape
+    lw, hw = waters_update(state.lw, state.hw, state.W, state.b,
+                           state.W_stored, state.b_stored,
+                           params.M, params.p, xp=xp)
+    lw = xp.where(sel, lw, state.lw)
+    hw = xp.where(sel, hw, state.hw)
+    lo, hi = band_windows(state.eps_sorted, lw, hw, xp=xp)
+    pos = xp.arange(n)[None, :]
+    in_band = (pos >= lo[:, None]) & (pos < hi[:, None]) & sel[:, None]
+    b32 = state.b.astype(xp.float32)
+    Z = (state.F @ state.W.T - b32).T                    # (k, n) entity order
+    Zs = xp.take_along_axis(Z, state.perm, axis=1)       # per-view eps order
+    labels = xp.where(in_band, classify(Zs, xp=xp), state.labels)
+    pos_count = xp.sum(labels == 1, axis=1)
+    widths = xp.where(sel, hi - lo, 0)
+    return (state._replace(lw=lw, hw=hw, labels=labels, pos_count=pos_count),
+            lo, widths)
+
+
+def apply_model(state: EngineState, W, b, params: EngineParams,
+                policy: str = "eager", xp=np):
+    """One maintenance round: the k views must reflect (W, b). Eager pays
+    the banded reclassify now (SKIING check-first, Fig. 7); lazy defers
+    everything to `catch_up`; hybrid defers the relabel but keeps the
+    eps-map tight (SKIING charged with the expected probe miss rate).
+    Returns (state', info) with info = {reorged (k,) bool, widths (k,)}."""
+    k, n = state.eps_sorted.shape
+    state = state._replace(W=xp.asarray(W, xp.float32), b=xp.asarray(b))
+    zeros = xp.zeros(k, bool)
+    if policy == "eager":
+        due = skiing_due(state.acc, params.alpha, 1.0)
+        state = reorganize(state, due, params, xp=xp)
+        state, _, widths = _relabel(state, ~due, params, xp=xp)
+        state = state._replace(acc=skiing_charge(state.acc, widths / n))
+        return state, {"reorged": due, "widths": widths}
+    state = state._replace(pending=xp.ones(k, bool))
+    if policy == "hybrid":
+        lw, hw = waters_update(state.lw, state.hw, state.W, state.b,
+                               state.W_stored, state.b_stored,
+                               params.M, params.p, xp=xp)
+        state = state._replace(lw=lw, hw=hw)
+        lo, hi = band_windows(state.eps_sorted, lw, hw, xp=xp)
+        state = state._replace(
+            acc=skiing_charge(state.acc, (hi - lo) / n))
+        due = skiing_due(state.acc, params.alpha, 1.0)
+        state = reorganize(state, due, params, xp=xp)
+        return state, {"reorged": due, "widths": hi - lo}
+    return state, {"reorged": zeros, "widths": xp.zeros(k, xp.int32)}
+
+
+def catch_up(state: EngineState, touch, params: EngineParams, xp=np):
+    """Catch up the pending subset of the touched views (per-view laziness:
+    untouched views keep deferring). Charges the §3.4 lazy waste
+    (N_R − N_+)/N_R per caught-up view and reorganizes the ones SKIING says
+    are due. Returns (state', info)."""
+    k, n = state.eps_sorted.shape
+    todo = state.pending & xp.asarray(touch)
+    state, lo, widths = _relabel(state, todo, params, xp=xp)
+    n_read = xp.maximum(1, n - lo)
+    waste = xp.where(todo,
+                     xp.maximum(0.0, (n_read - state.pos_count) / n_read),
+                     0.0)
+    acc = skiing_charge(state.acc, waste)
+    due = skiing_due(acc, params.alpha, 1.0) & todo
+    state = reorganize(state._replace(pending=state.pending & ~todo, acc=acc),
+                       due, params, xp=xp)
+    return state, {"reorged": due, "caught_up": todo, "waste": waste,
+                   "widths": widths}
+
+
+def hybrid_probe(state: EngineState, entity_id, params: EngineParams, xp=np):
+    """§3.5.2/Fig. 8 single-entity read across all k views: eps-map lookup →
+    waters short-circuit (`probe_partition`) → hot buffer → one shared
+    F-row touch for every view the waters cannot resolve. Exact under every
+    policy: a pending model only needs the monotone waters update, never a
+    catch-up relabel. Returns (state', (k,) int8 labels, (k,) int8 tiers)."""
+    lw, hw = waters_update(state.lw, state.hw, state.W, state.b,
+                           state.W_stored, state.b_stored,
+                           params.M, params.p, xp=xp)
+    state = state._replace(lw=lw, hw=hw)
+    posn = state.inv_perm[:, entity_id]
+    e = xp.take_along_axis(state.eps_sorted, posn[:, None], axis=1)[:, 0]
+    t = probe_partition(e, lw, hw, xp=xp)
+    z = state.W @ state.F[entity_id] - state.b.astype(xp.float32)
+    lab = xp.where(t != 0, t, classify(z, xp=xp)).astype(xp.int8)
+    if params.buffer_cap:
+        in_buf = (state.buffer_lo <= posn) & (posn < state.buffer_hi)
+    else:
+        in_buf = xp.zeros(t.shape, bool)
+    tier = xp.where(t != 0, TIER_WATER,
+                    xp.where(in_buf, TIER_BUFFER, TIER_DISK)).astype(xp.int8)
+    return state, lab, tier

@@ -1,9 +1,18 @@
 """HAZY incremental classification-view maintenance (paper §3.2–3.5).
 
-Host-driven engine (NumPy): exact dynamic band sizes, measured costs — the
-faithful reproduction of the paper's single-node algorithm, used by the
-benchmarks (Fig. 4/5/6/11/12/13). The TPU-sharded twin lives in
-`core/sharded.py` (static band capacities, pjit/shard_map).
+Host-driven engine (NumPy): the k = 1 stateful shell over the functional
+core in `core/engine.py` — exact dynamic band sizes, measured wall-time
+costs, and a *materialized* clustered table `F_sorted` (the paper's
+single-view storage layout: the clustering gather is the dominant
+reorganization cost the benchmarks measure). Every algorithm rule — the
+Lemma 3.1 partition (`band_partition` / `probe_partition`), the Eq. 2
+waters update (via `Waters` → `engine.waters_update`), the SKIING charge
+rule (via `Skiing` → `engine.skiing_charge`/`skiing_due`), sign labels
+(`classify`) and the §3.5.2 hot-buffer window — is imported from
+`core/engine.py`; this module owns only storage, timing and policy
+sequencing. The vectorized k-view shell lives in `core/multiview.py`, the
+TPU-sharded twin in `core/sharded.py` (static band capacities,
+pjit/shard_map) — all three share the same engine core.
 
 Engine state (mirrors §3.2.2):
   * F_sorted / eps_sorted / labels_sorted — the eps-clustered scratch table H
@@ -23,7 +32,7 @@ catch-up — a pending model only needs a waters update (Eq. 2 is monotone)
 for the short-circuit to stay exact. Boundary convention (Lemma 3.1):
 eps ≥ hw is certainly positive, eps < lw certainly negative, and the band
 [lw, hw) is what reclassification must touch — the probe and the band
-search use the same partition.
+search use the same partition because both call the same engine helper.
 """
 from __future__ import annotations
 
@@ -33,21 +42,11 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.core.engine import (band_partition, classify, hot_buffer_window,
+                               probe_partition)
 from repro.core.linear_model import LinearModel, zero_model
 from repro.core.skiing import Skiing, alpha_star
 from repro.core.waters import Waters, holder_M
-
-
-def hot_buffer_window(eps_sorted: np.ndarray, cap: int) -> Tuple[int, int]:
-    """[lo, hi) positions of the §3.5.2 hot buffer: `cap` eps-sorted slots
-    centered on the zero boundary (the tuples most likely to flip). Shared
-    by the single-view engine and the per-view windows of `MultiViewEngine`."""
-    n = eps_sorted.shape[0]
-    cap = max(1, min(int(cap), n))
-    boundary = int(np.searchsorted(eps_sorted, 0.0))
-    lo = max(0, boundary - cap // 2)
-    hi = min(n, lo + cap)
-    return lo, hi
 
 
 @dataclasses.dataclass
@@ -107,7 +106,7 @@ class HazyEngine:
         self.inv_perm[self.perm] = np.arange(self.n)
         self.eps_sorted = eps[self.perm]
         self.F_sorted = self.F[self.perm]          # the clustering gather (dominant cost)
-        self.labels_sorted = np.where(self.eps_sorted >= 0, 1, -1).astype(np.int8)
+        self.labels_sorted = classify(self.eps_sorted)
         self.pos_count = int(np.count_nonzero(self.labels_sorted == 1))
         self.stored = self.model.copy()
         self.waters.reset()
@@ -128,12 +127,11 @@ class HazyEngine:
     # ------------------------------------------------------------------
 
     def _band(self) -> Tuple[int, int]:
-        # [lw, hw): eps ≥ hw is certainly positive (equality included, since
-        # z ≥ 0 labels +1), eps < lw certainly negative — the same partition
-        # `hybrid_label` short-circuits on.
-        lo = int(np.searchsorted(self.eps_sorted, self.waters.lw, side="left"))
-        hi = int(np.searchsorted(self.eps_sorted, self.waters.hw, side="left"))
-        return lo, hi
+        # [lw, hw) via THE shared Lemma 3.1 partition — the same helper
+        # `hybrid_label` short-circuits with (engine.probe_partition).
+        lo, hi = band_partition(self.eps_sorted, self.waters.lw,
+                                self.waters.hw)
+        return int(lo), int(hi)
 
     def _incremental_step(self) -> float:
         """Reclassify the band under the *current* model. Returns cost."""
@@ -142,7 +140,7 @@ class HazyEngine:
         width = hi - lo
         if width > 0:
             z = self.F_sorted[lo:hi] @ self.model.w - self.model.b
-            new_lab = np.where(z >= 0, 1, -1).astype(np.int8)
+            new_lab = classify(z)
             old = self.labels_sorted[lo:hi]
             self.pos_count += int(np.count_nonzero(new_lab == 1)) - int(np.count_nonzero(old == 1))
             self.labels_sorted[lo:hi] = new_lab
@@ -191,7 +189,7 @@ class HazyEngine:
         t0 = time.perf_counter()
         if width:
             z = self.F_sorted[lo:hi] @ self.model.w - self.model.b
-            new_lab = np.where(z >= 0, 1, -1).astype(np.int8)
+            new_lab = classify(z)
             old = self.labels_sorted[lo:hi]
             self.pos_count += int(np.count_nonzero(new_lab == 1)) - int(np.count_nonzero(old == 1))
             self.labels_sorted[lo:hi] = new_lab
@@ -243,20 +241,17 @@ class HazyEngine:
             self.waters.update(self.model, self.stored)
         pos = self.inv_perm[entity_id]
         e = self.eps_sorted[pos]
-        # Lemma 3.1 partition, aligned with _band(): eps ≥ hw certainly
-        # positive (z == 0 labels +1, so equality short-circuits high);
-        # eps < lw certainly negative — eps == lw may sit exactly on the
-        # boundary (z == 0 ⇒ +1) and must be classified, not short-circuited.
-        if e >= self.waters.hw:
-            return 1, "water"
-        if e < self.waters.lw:
-            return -1, "water"
+        # THE Lemma 3.1 partition, point-probe form — shared with _band()
+        # so probe and band search can never disagree (PR 2's bug class).
+        t = int(probe_partition(e, self.waters.lw, self.waters.hw))
+        if t != 0:
+            return t, "water"
         if self._buffer_lo <= pos < self._buffer_hi:
             z = self.F_sorted[pos] @ self.model.w - self.model.b
-            return (1 if z >= 0 else -1), "buffer"
+            return int(classify(z)), "buffer"
         z = self.F[entity_id] @ self.model.w - self.model.b   # "go to disk"
         self.disk_touches += 1     # charged as disk_touches * touch_ns by
-        return (1 if z >= 0 else -1), "disk"   # callers (sleep is too coarse)
+        return int(classify(z)), "disk"   # callers (sleep is too coarse)
 
     # ------------------------------------------------------------------
 
@@ -271,8 +266,8 @@ class HazyEngine:
         (after lazy catch-up)."""
         if self._defers:
             self._lazy_catch_up()
-        truth = np.where(self.F_sorted @ self.model.w - self.model.b >= 0, 1, -1)
-        return bool(np.array_equal(truth.astype(np.int8), self.labels_sorted))
+        truth = classify(self.F_sorted @ self.model.w - self.model.b)
+        return bool(np.array_equal(truth, self.labels_sorted))
 
 
 class NaiveEngine:
@@ -290,7 +285,7 @@ class NaiveEngine:
 
     def _relabel(self):
         z = self.F @ self.model.w - self.model.b
-        self.labels = np.where(z >= 0, 1, -1).astype(np.int8)
+        self.labels = classify(z)
         if self.touch_ns:
             time.sleep(self.touch_ns * 1e-9 * self.n)
 
@@ -307,5 +302,5 @@ class NaiveEngine:
     def label(self, entity_id: int) -> int:
         if self.policy == "lazy":
             z = self.F[entity_id] @ self.model.w - self.model.b
-            return 1 if z >= 0 else -1
+            return int(classify(z))
         return int(self.labels[entity_id])

@@ -22,6 +22,12 @@ single-entity reads through the per-view eps-map/waters/hot-buffer tier;
 `predict_via_views` turns those per-view hybrid reads into a multiclass
 argmax without a full-table scan — in the common one-positive-view case
 without touching the feature table at all.
+
+Architecture (PR 3): this view is a thin training + read shell; the
+engines it drives (`MultiViewEngine`, the legacy `HazyEngine` loop, and
+`ShardedMultiViewHazy` on device) are themselves stateful shells over the
+single functional core in `core/engine.py`, so all execution paths share
+one implementation of the maintenance rules.
 """
 from __future__ import annotations
 

@@ -44,6 +44,16 @@ Cost accounting mirrors `hazy.py`: `cost_mode="measured"` splits the round's
 wall time across views by band width; `"modeled"` charges `S_v · width_v/n`
 (deterministic, used by the equivalence tests). Each view keeps its own
 SKIING accumulator, so per-view reorg cadence matches the k-engine seed.
+
+This class is a stateful shell over the functional core in
+`core/engine.py`: it owns storage (rows-of-arrays layout), wall-clock
+timing and the per-tier instrumentation counters, while every algorithm
+rule — the Lemma 3.1 partition (`band_partition`/`probe_partition`), the
+Eq. 2 waters update (`waters_update`), the SKIING charge rule
+(`skiing_charge`/`skiing_due`), sign labels (`classify`) and the hot-buffer
+window — is imported from `core/engine.py`. The pure `EngineState` steps in
+engine.py are the executable specification of this shell's modeled-cost
+behaviour; the property tests assert the two trajectories are identical.
 """
 from __future__ import annotations
 
@@ -52,24 +62,13 @@ from typing import Optional, Tuple
 
 import numpy as np
 
-from repro.core.hazy import Stats, hot_buffer_window
+from repro.core.engine import (HYBRID_TIERS, TIER_BUFFER, TIER_DISK,
+                               TIER_WATER, band_partition, classify,
+                               hot_buffer_window, probe_partition, row_norms,
+                               skiing_charge, skiing_due, waters_update)
+from repro.core.hazy import Stats
 from repro.core.skiing import alpha_star
 from repro.core.waters import holder_M
-
-# hybrid tier codes returned by `hybrid_labels_of` (index into HYBRID_TIERS)
-HYBRID_TIERS = ("water", "buffer", "disk")
-TIER_WATER, TIER_BUFFER, TIER_DISK = 0, 1, 2
-
-
-def row_norms(X: np.ndarray, p: float) -> np.ndarray:
-    """`vector_norm` over rows: (k, d) -> (k,)."""
-    if X.size == 0:
-        return np.zeros(X.shape[0], np.float32)
-    if np.isinf(p):
-        return np.max(np.abs(X), axis=1)
-    if p == 1.0:
-        return np.sum(np.abs(X), axis=1)
-    return np.sum(np.abs(X) ** p, axis=1) ** (1.0 / p)
 
 
 class MultiViewEngine:
@@ -155,7 +154,7 @@ class MultiViewEngine:
             self.perm[v] = order
             self.inv_perm[v, order] = np.arange(self.n)
             self.eps_sorted[v] = e[order]
-            lab = np.where(self.eps_sorted[v] >= 0, 1, -1).astype(np.int8)
+            lab = classify(self.eps_sorted[v])
             self.labels_sorted[v] = lab
             self.pos_count[v] = int(np.count_nonzero(lab == 1))
             if self.buffer_cap:
@@ -199,34 +198,33 @@ class MultiViewEngine:
                 # charging the expected probe miss rate (band fraction).
                 self._update_waters(np.arange(self.k))
                 lo, hi = self._bands(np.arange(self.k))
-                self.acc += self.S * ((hi - lo) / max(1, self.n))
-                due = self.acc >= self.alpha * self.S
+                self.acc = skiing_charge(
+                    self.acc, self.S * ((hi - lo) / max(1, self.n)))
+                due = skiing_due(self.acc, self.alpha, self.S)
                 self._reorganize_views(due)   # clears pending for due views
             return
         # SKIING, check-first (Fig. 7), independently per view.
-        due = self.acc >= self.alpha * self.S
+        due = skiing_due(self.acc, self.alpha, self.S)
         self._reorganize_views(due)
         self._incremental_step(~due)
 
     def _update_waters(self, views: np.ndarray):
-        """Vectorized Eq. 2 for the given views (monotone, idempotent)."""
-        dw = row_norms(self.W[views] - self.W_stored[views], self.p)
-        db = self.b[views] - self.b_stored[views]
-        self.lw[views] = np.minimum(self.lw[views], -self.M * dw + db)
-        self.hw[views] = np.maximum(self.hw[views], self.M * dw + db)
+        """Vectorized Eq. 2 for the given views via the shared engine core
+        (monotone, idempotent)."""
+        self.lw[views], self.hw[views] = waters_update(
+            self.lw[views], self.hw[views], self.W[views], self.b[views],
+            self.W_stored[views], self.b_stored[views], self.M, self.p)
         self._waters_stale[views] = False
         self._waters_dirty = bool(self._waters_stale.any())
 
     def _bands(self, views: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
-        # [lw, hw) per view — same Lemma 3.1 partition as the hybrid probe
-        # (eps ≥ hw certainly positive incl. equality, eps < lw negative).
+        # [lw, hw) per view — THE shared Lemma 3.1 partition, the same
+        # helper the hybrid probe short-circuits with (probe_partition).
         lo = np.empty(views.size, np.int64)
         hi = np.empty(views.size, np.int64)
         eps, lw, hw = self.eps_sorted, self.lw, self.hw
         for j, v in enumerate(views):
-            row = eps[v]
-            lo[j] = row.searchsorted(lw[v], "left")    # ndarray method: the
-            hi[j] = row.searchsorted(hw[v], "left")    # hot path, no wrapper
+            lo[j], hi[j] = band_partition(eps[v], lw[v], hw[v])
         return lo, hi
 
     def _relabel_bands(self, views: np.ndarray):
@@ -247,8 +245,8 @@ class MultiViewEngine:
             for j, v in enumerate(views):
                 if widths[j] == 0:
                     continue
-                z = Z[np.searchsorted(uids, band_ids[j]), j]
-                new = np.where(z >= 0, 1, -1).astype(np.int8)
+                z = Z[np.searchsorted(uids, band_ids[j]), j]  # union-id lookup
+                new = classify(z)
                 old = self.labels_sorted[v, lo[j]:hi[j]]
                 self.pos_count[v] += (int(np.count_nonzero(new == 1))
                                       - int(np.count_nonzero(old == 1)))
@@ -267,7 +265,7 @@ class MultiViewEngine:
             costs = self.S[views] * (widths / max(1, self.n))
         else:
             costs = wall * (widths / max(1, total))
-        self.acc[views] += costs
+        self.acc[views] = skiing_charge(self.acc[views], costs)
         self.stats.band_fraction_last = float(widths.mean()) / max(1, self.n)
         self.stats.incremental_seconds += wall
 
@@ -294,10 +292,10 @@ class MultiViewEngine:
             costs = self.S[todo] * waste
         else:
             costs = wall * (widths / max(1, total))
-        self.acc[todo] += costs
+        self.acc[todo] = skiing_charge(self.acc[todo], costs)
         self.stats.incremental_seconds += wall
         due = np.zeros(self.k, bool)
-        due[todo] = self.acc[todo] >= self.alpha * self.S[todo]
+        due[todo] = skiing_due(self.acc[todo], self.alpha, self.S[todo])
         self._reorganize_views(due)
 
     # ------------------------------------------------------------------
@@ -345,21 +343,20 @@ class MultiViewEngine:
             self._update_waters(np.flatnonzero(self._waters_stale))
         pos = self.inv_perm[view, entity_id]
         e = self.eps_sorted[view, pos]
-        if e >= self.hw[view]:
+        # THE Lemma 3.1 point-probe (shared with _bands / band_partition)
+        t = int(probe_partition(e, self.lw[view], self.hw[view]))
+        if t != 0:
             self.hybrid_hits[TIER_WATER] += 1
-            return 1, "water"
-        if e < self.lw[view]:
-            self.hybrid_hits[TIER_WATER] += 1
-            return -1, "water"
+            return t, "water"
         if self.buffer_cap and self.buffer_lo[view] <= pos < self.buffer_hi[view]:
             f = self.buffer_F[view, pos - self.buffer_lo[view]]
             z = f @ self.W[view] - np.float32(self.b[view])
             self.hybrid_hits[TIER_BUFFER] += 1
-            return (1 if z >= 0 else -1), "buffer"
+            return int(classify(z)), "buffer"
         z = self.F[entity_id] @ self.W[view] - np.float32(self.b[view])
         self.disk_touches += 1     # charged as disk_touches * touch_ns by
         self.hybrid_hits[TIER_DISK] += 1   # callers; time.sleep granularity
-        return (1 if z >= 0 else -1), "disk"  # (~100us) would swamp it
+        return int(classify(z)), "disk"  # (~100us) would swamp it
 
     def hybrid_labels_of(self, entity_id: int) -> Tuple[np.ndarray, np.ndarray]:
         """All k views' §3.5.2 reads at once: returns ((k,) int8 labels,
@@ -371,13 +368,14 @@ class MultiViewEngine:
             self._update_waters(np.flatnonzero(self._waters_stale))
         pos = self.inv_perm[:, entity_id]
         e = self.eps_sorted[self._arange_k, pos]
-        wpos = e >= self.hw
-        miss = ~wpos & (e >= self.lw)
+        # THE Lemma 3.1 point-probe, vectorized over views: ±1 resolved by
+        # the waters, 0 = in the band (classify against the current model).
+        t = probe_partition(e, self.lw, self.hw)
+        miss = t == 0
         if not miss.any():                 # every view water-short-circuited
             self.hybrid_hits[TIER_WATER] += self.k
-            return (np.where(wpos, 1, -1).astype(np.int8),
-                    np.zeros(self.k, np.int8))
-        labels = np.where(wpos, 1, -1).astype(np.int8)
+            return t.copy(), np.zeros(self.k, np.int8)
+        labels = t.copy()
         how = np.zeros(self.k, np.int8)
         if self.buffer_cap:
             in_buf = miss & (self.buffer_lo <= pos) & (pos < self.buffer_hi)
@@ -386,7 +384,7 @@ class MultiViewEngine:
                 rows = self.buffer_F[bviews, pos[bviews] - self.buffer_lo[bviews]]
                 z = np.einsum("vd,vd->v", rows, self.W[bviews]) \
                     - self.b[bviews].astype(np.float32)
-                labels[bviews] = np.where(z >= 0, 1, -1)
+                labels[bviews] = classify(z)
                 how[bviews] = TIER_BUFFER
                 miss = miss & ~in_buf
         dviews = np.flatnonzero(miss)
@@ -394,7 +392,7 @@ class MultiViewEngine:
             f = self.F[entity_id]          # the ONE shared feature touch
             self.disk_touches += 1         # callers charge touch_ns per touch
             z = self.W[dviews] @ f - self.b[dviews].astype(np.float32)
-            labels[dviews] = np.where(z >= 0, 1, -1)
+            labels[dviews] = classify(z)
             how[dviews] = TIER_DISK
         n_disk = dviews.size
         n_buffer = int(np.count_nonzero(how == TIER_BUFFER))
@@ -411,7 +409,7 @@ class MultiViewEngine:
         self._catch_up()
         Z = self.F @ self.W.T - self.b.astype(np.float32)
         for v in range(self.k):
-            truth = np.where(Z[self.perm[v], v] >= 0, 1, -1).astype(np.int8)
+            truth = classify(Z[self.perm[v], v])
             if not np.array_equal(truth, self.labels_sorted[v]):
                 return False
         return True

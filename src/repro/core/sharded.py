@@ -1,7 +1,15 @@
 """Pod-scale sharded HAZY view maintenance (jit/shard_map twin of hazy.py).
 
-Layout (DESIGN.md §2): entity rows sharded over ("pod","data"), feature dim
-over ("model",). All three maintenance steps are expressible with *zero
+Stateful-shell #3 over the functional core in `core/engine.py`: every
+algorithm rule — the Lemma 3.1 partition (`band_partition` inside the
+single-view step, `covering_windows`/`band_mask` inside the multi-view
+step, `probe_partition` inside the hybrid probe), the Eq. 2 waters update
+(host-side in the drivers, via `waters_update`) and the SKIING charge rule
+(via `Skiing`) — is imported from engine.py; this module owns sharding
+layout, shard_map plumbing and the kernel launch.
+
+Single-view layout (DESIGN.md §2): entity rows sharded over ("pod","data"),
+feature dim over ("model",). All three maintenance steps need *zero
 cross-shard data movement* except a psum of per-shard eps partials over the
 model axis and scalar metric reductions:
 
@@ -13,16 +21,28 @@ model axis and scalar metric reductions:
                          embarrassingly parallel — see DESIGN.md on why
                          shard-local clustering preserves correctness)
 
-The multi-view twin additionally exposes the §3.5.2 hybrid read pair:
-`make_multiview_hybrid_probe_step` (eps-map lookup + waters short-circuit —
-a pure (k,) compare, zero feature bytes) and
-`make_multiview_entity_margin_step` (ONE shared feature-row gather that
-classifies every view the waters cannot resolve).
+Multi-view layout: k one-vs-all views share ONE scratch table whose rows
+are kept in a shard-local SHARED clustering order (sorted by
+min_v |eps_v|, the distance to the nearest view's decision boundary, so
+every view's band is clustered near the front of the shard). The order is
+maintained entirely device-side: the reorganize step re-sorts it, the
+update step computes per-view covering windows of the Lemma 3.1 band in
+that order (`engine.covering_windows`) and relabels the union of the k
+windows with ONE `multiview_band_reclassify` Pallas launch — no vmapped
+per-view dynamic slices. The kernel computes sign(w_v·f − b_v) from whole
+feature rows, so the scratch table is row-sharded and model-REPLICATED
+(the (k, d) models are tiny; the big model-sharded training jobs live in
+models/steps.py). The §3.5.2 hybrid read pair rides the same state:
+`make_multiview_hybrid_probe_step` (eps-map lookup + waters short-circuit,
+zero feature bytes) and `make_multiview_entity_margin_step` (ONE shared
+feature-row gather for the views the waters cannot resolve).
 
-Static band capacity: jit needs static shapes, so the band is processed
-through a `cap`-row window per shard (cap = n_shard * cap_frac). The host
-wrapper checks the true width and triggers reorganization if the window
-overflows — SKIING would usually have reorganized long before that.
+Static band capacity: jit needs static shapes, so bands are processed
+through a `cap`-row window per shard (cap ≈ n_shard * cap_frac, tile
+aligned). The kernel reports per-view window overflow
+(`with_overflow=True`) and the host driver triggers reorganization instead
+of shipping the stale labels a truncated window would leave behind —
+SKIING would usually have reorganized long before that.
 """
 from __future__ import annotations
 
@@ -34,6 +54,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.engine import (band_partition, classify, covering_windows,
+                               probe_partition, waters_update)
+from repro.kernels.band_reclassify.ops import multiview_band_reclassify
 
 try:                                   # jax >= 0.6 exports it at top level
     shard_map = jax.shard_map
@@ -97,8 +121,7 @@ def make_naive_update_step(mesh: Mesh):
         if model_ax:
             z = jax.lax.psum(z, model_ax)
         z = z - b
-        labels = jnp.where(z >= 0, 1, -1).astype(jnp.int8)
-        return labels
+        return classify(z, xp=jnp)
 
     fn = shard_map(
         local, mesh=mesh,
@@ -123,10 +146,10 @@ def make_hazy_update_step(mesh: Mesh, n: int, cap_frac: float = 1 / 64):
 
     def local(F, eps, labels, perm, w_s, b_s, lw, hw, w, b):
         # Hölder waters were updated on the host (scalars); locate the band
-        # [lw, hw) — the same Lemma 3.1 partition the hybrid probe uses
-        # (eps ≥ hw certainly positive incl. equality, eps < lw negative).
-        lo = jnp.searchsorted(eps, lw, side="left").astype(jnp.int32)
-        hi = jnp.searchsorted(eps, hw, side="left").astype(jnp.int32)
+        # [lw, hw) via THE shared Lemma 3.1 partition (engine.band_partition
+        # — the same helper the host engines and the hybrid probe use).
+        lo, hi = band_partition(eps, lw, hw, xp=jnp)
+        lo, hi = lo.astype(jnp.int32), hi.astype(jnp.int32)
         width = hi - lo
         start = jnp.clip(lo, 0, jnp.maximum(0, eps.shape[0] - cap))
         Fb = jax.lax.dynamic_slice(F, (start, 0), (cap, F.shape[1]))
@@ -134,7 +157,7 @@ def make_hazy_update_step(mesh: Mesh, n: int, cap_frac: float = 1 / 64):
         if model_ax:
             z = jax.lax.psum(z, model_ax)
         z = z - b
-        new = jnp.where(z >= 0, 1, -1).astype(jnp.int8)
+        new = classify(z, xp=jnp)
         old = jax.lax.dynamic_slice(labels, (start,), (cap,))
         idx = jnp.arange(cap) + start
         in_band = (idx >= lo) & (idx < hi)
@@ -175,7 +198,7 @@ def make_reorganize_step(mesh: Mesh):
         eps_new = z[order]
         F_new = jnp.take(F, order, axis=0)
         perm_new = jnp.take(perm, order)
-        labels_new = jnp.where(eps_new >= 0, 1, -1).astype(jnp.int8)
+        labels_new = classify(eps_new, xp=jnp)
         return F_new, eps_new, labels_new, perm_new
 
     fn = shard_map(
@@ -248,16 +271,15 @@ class ShardedHazy:
 
     def apply_model(self, state: ShardedHazyState, w, b) -> ShardedHazyState:
         """One eager round under SKIING (modeled costs: bytes ∝ rows touched)."""
-        from repro.core.waters import vector_norm
         if self.skiing.should_reorganize():
             state = self._reorg(state, w, b)
             self.skiing.record_reorg()
             self.lw = self.hw = 0.0
             return state
-        dw = vector_norm(np.asarray(w) - np.asarray(state.w_stored), self.p)
-        db = float(b) - float(state.b_stored)
-        self.lw = min(self.lw, -self.M * dw + db)
-        self.hw = max(self.hw, self.M * dw + db)
+        lw, hw = waters_update(self.lw, self.hw, np.asarray(w), float(b),
+                               np.asarray(state.w_stored),
+                               float(state.b_stored), self.M, self.p)
+        self.lw, self.hw = float(lw), float(hw)
         state, wsum, wmax = self._hazy(
             state._replace(lw=jnp.float32(self.lw), hw=jnp.float32(self.hw)), w, b)
         if int(wmax) > self.cap:
@@ -275,33 +297,36 @@ class ShardedHazy:
 
 
 # ---------------------------------------------------------------------------
-# Multi-view twin: k one-vs-all views over ONE shared, never-gathered table.
-# The view index is a vmapped axis — one program maintains all k views.
+# Multi-view twin: k one-vs-all views over ONE shared scratch table kept in
+# a device-resident SHARED clustering order (sorted by min_v |eps_v|). The
+# update step relabels the k covering windows with ONE Pallas kernel launch.
 # ---------------------------------------------------------------------------
 
 class ShardedMultiViewState(NamedTuple):
-    """k views sharing one feature table.
+    """k views sharing one scratch table in a shared clustering order.
 
-    F stays in FIXED entity order for the lifetime of the state (it is the
-    single shared copy — reorganization re-sorts the per-view scratch
-    arrays, never the table). Per-view state carries a leading k axis and
-    is replicated over the model axis, sharded over rows."""
-    F: jax.Array            # (n, d) — fixed entity order, shared by all views
-    ids: jax.Array          # (n,) i32 global entity id per row
-    eps: jax.Array          # (k, n) f32 — per-view eps, shard-locally sorted
-    labels: jax.Array       # (k, n) int8 aligned to eps order
-    perm: jax.Array         # (k, n) i32 shard-LOCAL row index per position
-    gids: jax.Array         # (k, n) i32 global entity id per position
-    W_stored: jax.Array     # (k, d) f32
+    The shared order is the device-resident form of the engine's clustering
+    permutation: each shard keeps its local rows sorted by min_v |eps_v|
+    (distance to the nearest view's decision boundary), so every view's
+    Lemma 3.1 band is a small covering window near the front of the shard —
+    the exact window form `multiview_band_reclassify` consumes. `gids` IS
+    the perm (position -> global entity id); reorganization re-sorts rows,
+    eps and labels together, entirely on device. F rows are kept whole
+    (row-sharded, model-replicated) because the band kernel computes
+    sign(w_v·f − b_v) per row."""
+    F: jax.Array            # (n, d) f32 — scratch rows, shared order
+    gids: jax.Array         # (n,) i32 global entity id per scratch row
+    eps: jax.Array          # (k, n) f32 stored-model margins, shared order
+    labels: jax.Array       # (k, n) int8 aligned to the shared order
+    W_stored: jax.Array     # (k, d) f32 (replicated)
     b_stored: jax.Array     # (k,) f32
     lw: jax.Array           # (k,) f32
     hw: jax.Array           # (k,) f32
 
 
 def multiview_state_specs(n: int, d: int, k: int, mesh: Mesh,
-                          dtype=jnp.bfloat16):
+                          dtype=jnp.float32):
     row_axes = _row_axes(mesh)
-    model = "model" if "model" in mesh.axis_names else None
     rows = P(row_axes)
     krows = P(None, row_axes)
 
@@ -309,13 +334,11 @@ def multiview_state_specs(n: int, d: int, k: int, mesh: Mesh,
         return jax.ShapeDtypeStruct(shape, dt, sharding=NamedSharding(mesh, spec))
 
     return ShardedMultiViewState(
-        F=sds((n, d), dtype, P(row_axes, model)),
-        ids=sds((n,), jnp.int32, rows),
+        F=sds((n, d), dtype, P(row_axes, None)),   # model-replicated rows
+        gids=sds((n,), jnp.int32, rows),
         eps=sds((k, n), jnp.float32, krows),
         labels=sds((k, n), jnp.int8, krows),
-        perm=sds((k, n), jnp.int32, krows),
-        gids=sds((k, n), jnp.int32, krows),
-        W_stored=sds((k, d), jnp.float32, P(None, model)),
+        W_stored=sds((k, d), jnp.float32, P()),
         b_stored=sds((k,), jnp.float32, P()),
         lw=sds((k,), jnp.float32, P()),
         hw=sds((k,), jnp.float32, P()),
@@ -324,94 +347,95 @@ def multiview_state_specs(n: int, d: int, k: int, mesh: Mesh,
 
 def _mv_specs(mesh: Mesh):
     rows = _row_axes(mesh)
-    model = "model" if "model" in mesh.axis_names else None
-    return (P(rows, model), P(rows), P(None, rows), P(None, model))
+    return (P(rows, None), P(rows), P(None, rows))
 
 
-def make_multiview_hazy_update_step(mesh: Mesh, n: int, k: int,
-                                    cap_frac: float = 1 / 64):
-    """Banded incremental step for all k views in one launch; the view axis
-    is vmapped so XLA fuses the k band matmuls over the shared table.
-    Returns (state', widths_sum (k,), widths_max (k,))."""
-    pf, pr, pkr, pkw = _mv_specs(mesh)
-    model_ax = "model" if "model" in mesh.axis_names else None
+def _mv_tiles(mesh: Mesh, n: int, cap_frac: float):
+    """Per-shard (n_local, block_n, cap) for the band kernel: block_n must
+    divide n_local, cap is tile-aligned in [block_n, n_local]."""
     rows = _row_axes(mesh)
     n_shards = int(np.prod([mesh.shape[a] for a in rows])) if rows else 1
     n_local = n // n_shards
-    cap = max(64, int(n_local * cap_frac))
+    block_n = 512
+    while block_n > 8 and n_local % block_n:
+        block_n //= 2
+    if n_local % block_n:
+        block_n = n_local
+    cap = -(-max(block_n, int(n_local * cap_frac)) // block_n) * block_n
+    return n_local, block_n, min(cap, n_local)
 
-    def local(F, ids, eps, labels, perm, gids, W_s, b_s, lw, hw, W, b):
-        Ff = F.astype(jnp.float32)
 
-        def one_view(eps_v, labels_v, perm_v, lw_v, hw_v, w_v, b_v):
-            lo = jnp.searchsorted(eps_v, lw_v, side="left").astype(jnp.int32)
-            hi = jnp.searchsorted(eps_v, hw_v, side="left").astype(jnp.int32)
-            width = hi - lo
-            start = jnp.clip(lo, 0, jnp.maximum(0, eps_v.shape[0] - cap))
-            idx = jax.lax.dynamic_slice(perm_v, (start,), (cap,))
-            Fb = jnp.take(Ff, idx, axis=0)     # gather cap rows of the ONE table
-            z = jnp.einsum("nd,d->n", Fb, w_v)
-            if model_ax:
-                z = jax.lax.psum(z, model_ax)
-            z = z - b_v
-            new = jnp.where(z >= 0, 1, -1).astype(jnp.int8)
-            old = jax.lax.dynamic_slice(labels_v, (start,), (cap,))
-            pos = jnp.arange(cap) + start
-            in_band = (pos >= lo) & (pos < hi)
-            merged = jnp.where(in_band, new, old)
-            return jax.lax.dynamic_update_slice(labels_v, merged, (start,)), width
+def make_multiview_update_step(mesh: Mesh, n: int, k: int,
+                               cap_frac: float = 1 / 64,
+                               interpret: Optional[bool] = None):
+    """Banded incremental step for all k views in ONE Pallas launch.
 
-        labels, widths = jax.vmap(one_view)(eps, labels, perm, lw, hw, W, b)
-        wsum, wmax = widths, widths
+    Per shard: `engine.covering_windows` locates each view's covering
+    window of the Lemma 3.1 band in the shared order (pure device compute,
+    no per-view dynamic slices), then `multiview_band_reclassify` streams
+    only the union of the k windows HBM->VMEM and relabels them under the
+    stacked models. Returns (state', true band widths (k,), overflow flag
+    () i32 — nonzero when some view's window exceeded the kernel capacity
+    on some shard, i.e. rows past the capacity kept stale labels and the
+    driver must reorganize)."""
+    pf, pr, pkr = _mv_specs(mesh)
+    rows = _row_axes(mesh)
+    n_local, block_n, cap = _mv_tiles(mesh, n, cap_frac)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+
+    def local(F, gids, eps, labels, W_s, b_s, lw, hw, W, b):
+        start, end, width = covering_windows(eps, lw, hw, xp=jnp)
+        labels, overflow = multiview_band_reclassify(
+            F, labels, W, b, start, end, cap=cap, block_n=block_n,
+            interpret=interpret, with_overflow=True)
+        wsum = width
+        ov = jnp.any(overflow).astype(jnp.int32)
         for ax in rows:
             wsum = jax.lax.psum(wsum, ax)
-            wmax = jax.lax.pmax(wmax, ax)
-        return labels, wsum, wmax
+            ov = jax.lax.pmax(ov, ax)
+        return labels, wsum, ov
 
     fn = shard_map(
         local, mesh=mesh,
-        in_specs=(pf, pr, pkr, pkr, pkr, pkr, pkw, P(), P(), P(), pkw, P()),
-        out_specs=(pkr, P(), P()))
+        in_specs=(pf, pr, pkr, pkr, P(), P(), P(), P(), P(), P()),
+        out_specs=(pkr, P(), P()),
+        check_rep=False)     # no replication rule for pallas_call (jax#21400)
 
     def step(state: ShardedMultiViewState, W, b):
-        labels, wsum, wmax = fn(*state, W, b)
-        return state._replace(labels=labels), wsum, wmax
+        labels, wsum, ov = fn(*state, W, b)
+        return state._replace(labels=labels), wsum, ov
 
     return step, cap
 
 
 def make_multiview_reorganize_step(mesh: Mesh):
-    """Re-sort every view's scratch arrays from ONE `F @ W.T` product.
+    """Re-sort the SHARED clustering order from one `F @ W.T` product: the
+    new order sorts shard-local rows by min_v |eps_v| so that every view's
+    band clusters near the front of the shard. Rows, gids, eps and labels
+    move together; no collectives at all (shard-local clustering, and F
+    rows are whole so there is no model-axis psum either)."""
+    pf, pr, pkr = _mv_specs(mesh)
 
-    Because the table itself is never permuted, reorganization does NOT
-    gather F rows at all — it is strictly cheaper than the single-view
-    reorganize (whose dominant cost is the row gather), and still needs no
-    collectives beyond the model-axis eps psum."""
-    pf, pr, pkr, pkw = _mv_specs(mesh)
-    model_ax = "model" if "model" in mesh.axis_names else None
-
-    def local(F, ids, eps, labels, perm, gids, W_s, b_s, lw, hw, W, b):
-        Z = jnp.einsum("nd,kd->kn", F.astype(jnp.float32), W)
-        if model_ax:
-            Z = jax.lax.psum(Z, model_ax)
-        Z = Z - b[:, None]
-        order = jnp.argsort(Z, axis=1).astype(jnp.int32)
-        eps_new = jnp.take_along_axis(Z, order, axis=1)
-        gids_new = jax.vmap(lambda o: jnp.take(ids, o))(order)
-        labels_new = jnp.where(eps_new >= 0, 1, -1).astype(jnp.int8)
-        return eps_new, labels_new, order, gids_new
+    def local(F, gids, eps, labels, W_s, b_s, lw, hw, W, b):
+        Z = jnp.einsum("nd,kd->kn", F.astype(jnp.float32), W) - b[:, None]
+        key = jnp.min(jnp.abs(Z), axis=0)          # nearest-boundary distance
+        order = jnp.argsort(key).astype(jnp.int32)
+        F_new = jnp.take(F, order, axis=0)
+        gids_new = jnp.take(gids, order)
+        eps_new = jnp.take(Z, order, axis=1)
+        labels_new = classify(eps_new, xp=jnp)
+        return F_new, gids_new, eps_new, labels_new
 
     fn = shard_map(
         local, mesh=mesh,
-        in_specs=(pf, pr, pkr, pkr, pkr, pkr, pkw, P(), P(), P(), pkw, P()),
-        out_specs=(pkr, pkr, pkr, pkr))
+        in_specs=(pf, pr, pkr, pkr, P(), P(), P(), P(), P(), P()),
+        out_specs=(pf, pr, pkr, pkr))
 
     def step(state: ShardedMultiViewState, W, b):
-        eps, labels, perm, gids = fn(*state, W, b)
-        k = b.shape[0]
-        zeros = jnp.zeros((k,), jnp.float32)
-        return ShardedMultiViewState(state.F, state.ids, eps, labels, perm,
-                                     gids, W, b, zeros, zeros)
+        F, gids, eps, labels = fn(*state, W, b)
+        zeros = jnp.zeros(b.shape, jnp.float32)
+        return ShardedMultiViewState(F, gids, eps, labels, W, b, zeros, zeros)
 
     return step
 
@@ -419,27 +443,24 @@ def make_multiview_reorganize_step(mesh: Mesh):
 def make_multiview_hybrid_probe_step(mesh: Mesh):
     """§3.5.2 waters short-circuit for ONE entity across all k views with
     ZERO feature-table bytes: the entity's stored eps per view comes from
-    the eps-map (masked row-shard sum over `gids`, psum'd), and the waters
-    test itself is a pure (k,) compare vmapped over views. Returns
-    (labels (k,) int8 with 0 = unresolved, resolved (k,) bool, eps_e (k,))."""
-    pf, pr, pkr, pkw = _mv_specs(mesh)
+    the eps-map (masked row-shard sum over the shared `gids`, psum'd), and
+    the waters test is THE shared Lemma 3.1 point-probe
+    (engine.probe_partition). Returns (labels (k,) int8 with 0 =
+    unresolved, resolved (k,) bool, eps_e (k,))."""
+    pf, pr, pkr = _mv_specs(mesh)
     rows = _row_axes(mesh)
 
-    def local(F, ids, eps, labels, perm, gids, W_s, b_s, lw, hw, eid):
-        def one_view(eps_v, gids_v):
-            hit = gids_v == eid                  # entity appears once globally
-            return jnp.sum(jnp.where(hit, eps_v, 0.0))
-
-        e = jax.vmap(one_view)(eps, gids)        # (k,) shard-local partial
+    def local(F, gids, eps, labels, W_s, b_s, lw, hw, eid):
+        hit = gids == eid                    # entity appears once globally
+        e = jnp.sum(jnp.where(hit[None, :], eps, 0.0), axis=1)
         for ax in rows:
             e = jax.lax.psum(e, ax)
-        # the waters test: a pure (k,) compare, no feature bytes touched
-        lab = jnp.where(e >= hw, 1, jnp.where(e < lw, -1, 0)).astype(jnp.int8)
+        lab = probe_partition(e, lw, hw, xp=jnp)
         return lab, lab != 0, e
 
     fn = shard_map(
         local, mesh=mesh,
-        in_specs=(pf, pr, pkr, pkr, pkr, pkr, pkw, P(), P(), P(), P()),
+        in_specs=(pf, pr, pkr, pkr, P(), P(), P(), P(), P()),
         out_specs=(P(), P(), P()))
 
     def step(state: ShardedMultiViewState, entity_id):
@@ -452,24 +473,21 @@ def make_multiview_entity_margin_step(mesh: Mesh):
     """The "disk" fallback for views the waters cannot short-circuit: ONE
     gather of the entity's feature row (masked row-shard sum), then every
     view's margin from the stacked models — one shared F touch for all k
-    views that miss. Returns z (k,) f32 (margins, bias already subtracted)."""
-    pf, pr, pkr, pkw = _mv_specs(mesh)
-    model_ax = "model" if "model" in mesh.axis_names else None
+    views that miss. Returns z (k,) f32 (margins, bias subtracted)."""
+    pf, pr, pkr = _mv_specs(mesh)
     rows = _row_axes(mesh)
 
-    def local(F, ids, eps, labels, perm, gids, W_s, b_s, lw, hw, W, b, eid):
-        hit = (ids == eid).astype(jnp.float32)            # (n_local,)
+    def local(F, gids, eps, labels, W_s, b_s, lw, hw, W, b, eid):
+        hit = (gids == eid).astype(jnp.float32)           # (n_local,)
         f = jnp.einsum("n,nd->d", hit, F.astype(jnp.float32))
         z = jnp.einsum("kd,d->k", W, f)
-        if model_ax:
-            z = jax.lax.psum(z, model_ax)
         for ax in rows:            # other row shards contribute exact zeros
             z = jax.lax.psum(z, ax)
         return z - b
 
     fn = shard_map(
         local, mesh=mesh,
-        in_specs=(pf, pr, pkr, pkr, pkr, pkr, pkw, P(), P(), P(), pkw, P(), P()),
+        in_specs=(pf, pr, pkr, pkr, P(), P(), P(), P(), P(), P(), P()),
         out_specs=P())
 
     def step(state: ShardedMultiViewState, W, b, entity_id):
@@ -479,7 +497,7 @@ def make_multiview_entity_margin_step(mesh: Mesh):
 
 
 def make_multiview_all_members_step(mesh: Mesh):
-    _, _, pkr, _ = _mv_specs(mesh)
+    _, _, pkr = _mv_specs(mesh)
     rows = _row_axes(mesh)
 
     def local(labels):
@@ -494,9 +512,13 @@ def make_multiview_all_members_step(mesh: Mesh):
 
 @dataclasses.dataclass
 class ShardedMultiViewHazy:
-    """Host driver for k views: pooled SKIING (a reorganization re-sorts all
-    views from one fused matmul, so the strategy treats it as one global
-    op), per-view Hölder waters kept host-side as arrays."""
+    """Host driver for k views: pooled SKIING (a reorganization re-sorts the
+    one shared order for all views, so the strategy treats it as one global
+    op), per-view Hölder waters kept host-side via `engine.waters_update`.
+    `apply_models` reclassifies the union band through the
+    `multiview_band_reclassify` kernel against the device-resident shared
+    clustering order, and falls back to reorganization whenever the kernel
+    reports a covering-window overflow (stale labels would ship otherwise)."""
     mesh: Mesh
     n: int
     d: int
@@ -505,11 +527,12 @@ class ShardedMultiViewHazy:
     p: float = 2.0
     alpha: float = 1.0
     cap_frac: float = 1 / 64
+    interpret: Optional[bool] = None
 
     def __post_init__(self):
-        hz, self.cap = make_multiview_hazy_update_step(
-            self.mesh, self.n, self.k, self.cap_frac)
-        self._hazy = jax.jit(hz)
+        up, self.cap = make_multiview_update_step(
+            self.mesh, self.n, self.k, self.cap_frac, interpret=self.interpret)
+        self._update = jax.jit(up)
         self._reorg = jax.jit(make_multiview_reorganize_step(self.mesh))
         self._count = jax.jit(make_multiview_all_members_step(self.mesh))
         self._probe = jax.jit(make_multiview_hybrid_probe_step(self.mesh))
@@ -518,19 +541,17 @@ class ShardedMultiViewHazy:
         self.skiing = Skiing(S=1.0, alpha=self.alpha)
         self.lw = np.zeros(self.k, np.float64)
         self.hw = np.zeros(self.k, np.float64)
+        self.overflows = 0        # kernel-capacity overflow -> forced reorg
 
     def init_state(self, F: np.ndarray) -> ShardedMultiViewState:
-        specs = multiview_state_specs(self.n, self.d, self.k, self.mesh,
-                                      dtype=jnp.bfloat16)
+        specs = multiview_state_specs(self.n, self.d, self.k, self.mesh)
         put = lambda x, s: jax.device_put(x, s.sharding)
         k, n = self.k, self.n
         state = ShardedMultiViewState(
             F=put(F.astype(np.float32), specs.F),
-            ids=put(np.arange(n, dtype=np.int32), specs.ids),
+            gids=put(np.arange(n, dtype=np.int32), specs.gids),
             eps=put(np.zeros((k, n), np.float32), specs.eps),
             labels=put(np.ones((k, n), np.int8), specs.labels),
-            perm=put(np.tile(np.arange(n, dtype=np.int32), (k, 1)), specs.perm),
-            gids=put(np.tile(np.arange(n, dtype=np.int32), (k, 1)), specs.gids),
             W_stored=put(np.zeros((k, self.d), np.float32), specs.W_stored),
             b_stored=put(np.zeros(k, np.float32), specs.b_stored),
             lw=put(np.zeros(k, np.float32), specs.lw),
@@ -548,19 +569,23 @@ class ShardedMultiViewHazy:
 
     def apply_models(self, state: ShardedMultiViewState, W, b):
         """One eager round for all k views (modeled costs ∝ rows touched)."""
-        from repro.core.multiview import row_norms
+        W = jnp.asarray(W, jnp.float32)
+        b32 = jnp.asarray(b, jnp.float32)
         if self.skiing.should_reorganize():
-            return self._do_reorg(state, W, b)
-        dw = row_norms(np.asarray(W) - np.asarray(state.W_stored), self.p)
-        db = np.asarray(b, np.float64) - np.asarray(state.b_stored, np.float64)
-        self.lw = np.minimum(self.lw, -self.M * dw + db)
-        self.hw = np.maximum(self.hw, self.M * dw + db)
-        state, wsum, wmax = self._hazy(
+            return self._do_reorg(state, W, b32)
+        self.lw, self.hw = waters_update(
+            self.lw, self.hw, np.asarray(W), np.asarray(b, np.float64),
+            np.asarray(state.W_stored),
+            np.asarray(state.b_stored, np.float64), self.M, self.p)
+        state, wsum, overflow = self._update(
             state._replace(lw=jnp.asarray(self.lw, jnp.float32),
-                           hw=jnp.asarray(self.hw, jnp.float32)), W, b)
-        if int(np.max(np.asarray(wmax))) > self.cap:
-            # some view's capacity window overflowed on some shard
-            return self._do_reorg(state, W, b)
+                           hw=jnp.asarray(self.hw, jnp.float32)), W, b32)
+        if int(overflow):
+            # some view's covering window outgrew the kernel capacity on
+            # some shard: its labels past the capacity are stale — rebuild
+            # the shared order instead of shipping them
+            self.overflows += 1
+            return self._do_reorg(state, W, b32)
         self.skiing.record_incremental(
             float(np.sum(np.asarray(wsum))) / (self.n * self.k))
         return state
@@ -580,7 +605,8 @@ class ShardedMultiViewHazy:
         lab = np.asarray(lab).copy()
         resolved = np.asarray(resolved)
         if not resolved.all():
-            z = np.asarray(self._margin(st, W, jnp.asarray(b, jnp.float32),
+            z = np.asarray(self._margin(st, jnp.asarray(W, jnp.float32),
+                                        jnp.asarray(b, jnp.float32),
                                         jnp.int32(entity_id)))
-            lab = np.where(resolved, lab, np.where(z >= 0, 1, -1)).astype(np.int8)
+            lab = np.where(resolved, lab, classify(z)).astype(np.int8)
         return lab, resolved

@@ -16,6 +16,8 @@ import dataclasses
 import math
 from typing import Callable, List, Sequence, Tuple
 
+from repro.core.engine import skiing_charge, skiing_due
+
 
 def alpha_star(sigma: float) -> float:
     """Positive root of x² + σx − 1."""
@@ -31,11 +33,11 @@ class Skiing:
     total_incremental: float = 0.0
 
     def should_reorganize(self) -> bool:
-        return self.a >= self.alpha * self.S
+        return bool(skiing_due(self.a, self.alpha, self.S))
 
     def record_incremental(self, c: float) -> bool:
         """Add one incremental-step cost; returns True if a reorg is due."""
-        self.a += c
+        self.a = skiing_charge(self.a, c)
         self.total_incremental += c
         return self.should_reorganize()
 
@@ -62,7 +64,7 @@ def skiing_schedule(costs: Callable[[int, int], float], n: int, S: float,
     for i in range(1, n + 1):
         c = costs(s, i)
         # decision per Fig. 7: reorganize when accumulated cost has reached αS
-        if sk.a >= alpha * S:
+        if skiing_due(sk.a, alpha, S):
             schedule.append(i)
             sk.record_reorg()
             s = i

@@ -4,6 +4,12 @@ Ties together: a corpus of entities (raw features or an encoder feature
 function = any assigned backbone), an incrementally-trained linear model,
 and a HazyEngine per §3. Reads are always exact w.r.t. the current model —
 policy only moves *when* maintenance work happens (eager/lazy/hybrid).
+
+Architecture (PR 3): this is the top of a three-layer stack. The view owns
+training (SGD on the example stream) and the SQL-ish read API; the engine
+shell (`HazyEngine`, k = 1) owns storage layout and cost accounting; every
+algorithm rule the shell executes — Lemma 3.1 partition, Eq. 2 waters,
+SKIING — lives once in `core/engine.py`.
 """
 from __future__ import annotations
 

@@ -11,6 +11,11 @@ eps ≥ hw is certainly positive under the current model (equality included:
 z ≥ 0 labels +1); eps < lw certainly negative (at eps == lw the current
 margin can be exactly 0, which labels +1); only eps ∈ [lw, hw) needs
 reclassification — the partition every band search and hybrid probe uses.
+
+The update itself lives ONCE in `core/engine.py` (`waters_update` /
+`waters_bounds`, the functional core shared by every backend); this module
+keeps the scalar `Waters` convenience wrapper the single-view host engine
+carries, plus `holder_M` for data preparation.
 """
 from __future__ import annotations
 
@@ -19,37 +24,32 @@ from typing import Tuple
 
 import numpy as np
 
+from repro.core.engine import row_norms, waters_bounds, waters_update
 from repro.core.linear_model import LinearModel
 
 
 def vector_norm(x: np.ndarray, p: float) -> float:
-    if np.isinf(p):
-        return float(np.max(np.abs(x))) if x.size else 0.0
-    if p == 1.0:
-        return float(np.sum(np.abs(x)))
-    return float(np.sum(np.abs(x) ** p) ** (1.0 / p))
+    """Scalar p-norm of one vector (thin wrapper over the shared
+    `engine.row_norms`)."""
+    return float(row_norms(np.asarray(x), p))
 
 
 def holder_M(F: np.ndarray, q: float) -> float:
     """M = max row q-norm of the entity features."""
-    if np.isinf(q):
-        return float(np.max(np.abs(F)))
-    if q == 1.0:
-        return float(np.max(np.sum(np.abs(F), axis=1)))
-    return float(np.max(np.sum(np.abs(F) ** q, axis=1) ** (1.0 / q)))
+    return float(np.max(row_norms(np.asarray(F), q)))
 
 
 def eps_bounds(current: LinearModel, stored: LinearModel, M: float,
                p: float) -> Tuple[float, float]:
     """(eps_low, eps_high) of Lemma 3.1 for this round."""
-    dw = vector_norm(current.w - stored.w, p)
-    db = current.b - stored.b
-    return (-M * dw + db, M * dw + db)
+    lo, hi = waters_bounds(current.w, current.b, stored.w, stored.b, M, p)
+    return float(lo), float(hi)
 
 
 @dataclasses.dataclass
 class Waters:
-    """Running (lw, hw) per Eq. 2 — monotone between reorganizations."""
+    """Running (lw, hw) per Eq. 2 — monotone between reorganizations.
+    Scalar stateful shell over `engine.waters_update`."""
     p: float
     M: float
     lw: float = 0.0
@@ -60,7 +60,7 @@ class Waters:
         self.hw = 0.0
 
     def update(self, current: LinearModel, stored: LinearModel) -> Tuple[float, float]:
-        lo, hi = eps_bounds(current, stored, self.M, self.p)
-        self.lw = min(self.lw, lo)
-        self.hw = max(self.hw, hi)
+        lw, hw = waters_update(self.lw, self.hw, current.w, current.b,
+                               stored.w, stored.b, self.M, self.p)
+        self.lw, self.hw = float(lw), float(hw)
         return self.lw, self.hw

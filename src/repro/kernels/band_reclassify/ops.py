@@ -13,23 +13,31 @@ from repro.kernels.band_reclassify.ref import band_reclassify_ref  # noqa: F401
 
 def multiview_band_reclassify(F, labels, W, b, start_rows, end_rows, *,
                               cap: int = 4096, block_n: int = 512,
-                              interpret: bool = False):
+                              interpret: bool = False,
+                              with_overflow: bool = False):
     """Relabel rows [start_rows[v], end_rows[v]) of the shared scratch
     table under each view's model (W[v], b[v]) in ONE kernel launch.
 
     labels: (k, n) int8, rows aligned to F's row order. Windows are
-    tile-aligned and capacity-clamped per view; the caller (the multi-view
-    SKIING driver) must ensure end_rows[v] − aligned_start[v] ≤ cap for
-    every view, or trigger reorganization."""
+    tile-aligned and capacity-clamped per view: a view whose aligned window
+    end_rows[v] − aligned_start[v] exceeds `cap` is silently truncated, so
+    rows past the capacity keep STALE labels. `with_overflow=True`
+    additionally returns the per-view (k,) bool truncation flag so the
+    SKIING driver can trigger reorganization instead of shipping those
+    stale labels (the sharded multi-view update step does exactly that)."""
     n, d = F.shape
     start_rows = jnp.asarray(start_rows, jnp.int32)
     end_rows = jnp.asarray(end_rows, jnp.int32)
     start_blocks = jnp.clip(start_rows // block_n, 0,
                             max(0, (n - cap) // block_n))
-    widths = jnp.clip(end_rows - start_blocks * block_n, 0, cap)
-    return _mv_kernel(F, labels, W, jnp.asarray(b, jnp.float32),
-                      start_blocks, widths, cap=cap, block_n=block_n,
-                      interpret=interpret)
+    requested = end_rows - start_blocks * block_n
+    widths = jnp.clip(requested, 0, cap)
+    out = _mv_kernel(F, labels, W, jnp.asarray(b, jnp.float32),
+                     start_blocks, widths, cap=cap, block_n=block_n,
+                     interpret=interpret)
+    if with_overflow:
+        return out, requested > cap
+    return out
 
 
 def band_reclassify(F_sorted, labels, w, b, start_row, end_row, *,

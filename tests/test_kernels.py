@@ -89,6 +89,35 @@ def test_multiview_band_reclassify_sweep(k, n, d):
         assert np.array_equal(np.asarray(out[v]), expect), v
 
 
+def test_multiview_band_reclassify_overflow_flag():
+    """A band wider than the kernel capacity is truncated — rows past the
+    capacity keep STALE labels — and the per-view overflow flag must say so
+    (the SKIING driver reorganizes on it instead of shipping those labels)."""
+    k, n, d, cap, block_n = 3, 2048, 32, 512, 256
+    F = jnp.asarray(R.normal(size=(n, d)), jnp.float32)
+    labels = jnp.asarray(R.integers(0, 2, (k, n)) * 2 - 1, jnp.int8)
+    W = jnp.asarray(R.normal(size=(k, d)), jnp.float32)
+    b = jnp.asarray(R.normal(size=k), jnp.float32)
+    # view 0: band wider than cap; view 1: exactly cap from an aligned
+    # start (no overflow); view 2: empty band
+    starts = jnp.asarray([256, 256, 0], jnp.int32)
+    ends = jnp.asarray([256 + cap + 1, 256 + cap, 0], jnp.int32)
+    out, overflow = multiview_band_reclassify(
+        F, labels, W, b, starts, ends, cap=cap, block_n=block_n,
+        interpret=True, with_overflow=True)
+    assert np.array_equal(np.asarray(overflow), [True, False, False])
+    # overflowed view: the cap-window rows WERE relabeled, the rest stale
+    z0 = np.asarray(F[256:256 + cap]) @ np.asarray(W[0]) - float(b[0])
+    expect0 = np.asarray(labels[0]).copy()
+    expect0[256:256 + cap] = np.where(z0 >= 0, 1, -1)
+    assert np.array_equal(np.asarray(out[0]), expect0)
+    assert np.array_equal(np.asarray(out[2]), np.asarray(labels[2]))
+    # default call keeps the legacy single-return signature
+    out2 = multiview_band_reclassify(F, labels, W, b, starts, ends,
+                                     cap=cap, block_n=block_n, interpret=True)
+    assert np.array_equal(np.asarray(out2), np.asarray(out))
+
+
 def test_multiview_band_reclassify_matches_single_view():
     """k=1 multi-view launch == the original single-view kernel."""
     n, d = 2048, 64
