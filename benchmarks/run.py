@@ -28,6 +28,7 @@ MODULES = [
     "benchmarks.multiclass",        # App. B.5.4 / C.3 (multi-view engine)
     "benchmarks.hybrid",            # §3.5.2 hybrid tier on the multi-view engine
     "benchmarks.scale",             # paper-scale CS/FC on the multi-view engine
+    "benchmarks.sql_serve",         # relational front-end overhead vs direct
     "benchmarks.kernel_bench",      # framework kernels
 ]
 

@@ -1,101 +1,15 @@
 """End-to-end serving driver (the paper's kind of workload): a classification
 view over a corpus of documents *encoded by an LM backbone*, serving batched
-mixed read/update traffic — Single-Entity reads, All-Members scans, and
-streaming training examples — with the HAZY engine maintaining the view and
-SKIING deciding reorganizations.
+mixed read/update traffic.
+
+The driver itself lives in `repro.launch.view_driver` (importable — also
+reachable as `python -m repro.launch.serve --mode view`); this example is a
+thin entry point. For the same workload through the SQL front-end, see
+`examples/sql_quickstart.py` or pass `--sql`.
 
 Run:  PYTHONPATH=src python examples/serve_view.py [--requests 3000]
 """
-import argparse
-import time
-
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.configs import smoke_config
-from repro.core import ClassificationView
-from repro.models import build
-from repro.models.steps import init_train_state
-
-
-def make_backbone_encoder(arch: str = "tinyllama-1.1b", batch: int = 32):
-    """A reduced assigned-arch backbone as the HAZY feature function."""
-    cfg = smoke_config(arch)
-    mdl = build(cfg)
-    state = init_train_state(mdl)
-    params = state["params"]
-
-    @jax.jit
-    def encode_batch(tokens):
-        hidden, _ = mdl.forward(params, {"tokens": tokens}, return_hidden=True)
-        emb = jnp.mean(jnp.take(params["tok"]["embedding"], tokens, axis=0), axis=1)
-        # mean-pooled final hidden + mean-pooled token embeddings
-        return jnp.concatenate([jnp.mean(hidden, axis=1), emb.astype(hidden.dtype)], -1)
-
-    def encode(docs_tokens: np.ndarray) -> np.ndarray:
-        out = []
-        for i in range(0, docs_tokens.shape[0], batch):
-            out.append(np.asarray(encode_batch(
-                jnp.asarray(docs_tokens[i:i + batch])), np.float32))
-        F = np.concatenate(out)
-        return F / np.maximum(np.linalg.norm(F, axis=1, keepdims=True), 1e-9)
-
-    return encode, cfg
-
-
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--requests", type=int, default=3000)
-    ap.add_argument("--docs", type=int, default=4000)
-    ap.add_argument("--doc-len", type=int, default=32)
-    args = ap.parse_args()
-
-    r = np.random.default_rng(0)
-    encode, cfg = make_backbone_encoder()
-    # two "topics": docs drawn from distinct topical vocabularies (with some
-    # shared common words mixed in)
-    topic = r.random(args.docs) < 0.5
-    v8 = cfg.vocab_size // 8
-    topical = np.where(topic[:, None],
-                       r.integers(0, v8, (args.docs, args.doc_len)),
-                       r.integers(4 * v8, 5 * v8, (args.docs, args.doc_len)))
-    common = r.integers(6 * v8, 8 * v8, (args.docs, args.doc_len))
-    use_common = r.random((args.docs, args.doc_len)) < 0.3
-    docs = np.where(use_common, common, topical).astype(np.int32)
-    t0 = time.perf_counter()
-    F = encode(docs)
-    print(f"encoded {args.docs} docs with {cfg.name} backbone "
-          f"in {time.perf_counter()-t0:.1f}s -> features {F.shape}")
-
-    view = ClassificationView(F, method="svm", policy="hybrid",
-                              norm=(2.0, 2.0), lr=0.1, buffer_frac=0.01)
-
-    labels = np.where(topic, 1.0, -1.0)
-    kinds = r.choice(["read", "members", "update"], size=args.requests,
-                     p=[0.55, 0.05, 0.40])
-    served = {"read": 0, "members": 0, "update": 0}
-    t0 = time.perf_counter()
-    for kind in kinds:
-        if kind == "read":
-            view.label(int(r.integers(0, args.docs)))
-        elif kind == "members":
-            view.all_members()
-        else:
-            i = int(r.integers(0, args.docs))
-            view.insert_example(i, float(labels[i]))
-        served[kind] += 1
-    dt = time.perf_counter() - t0
-    print(f"served {args.requests} requests in {dt:.2f}s "
-          f"({args.requests/dt:.0f} req/s): {served}")
-    eng = view.engine
-    print(f"SKIING reorgs: {eng.skiing.reorgs}, "
-          f"band now: {eng.band_fraction():.4f}")
-    acc = np.mean([view.label(i) == labels[i] for i in range(0, args.docs, 7)])
-    print(f"classification agreement with topic labels: {acc:.3f}")
-    assert eng.check_consistent()
-    print("view exact ✓")
-
+from repro.launch.view_driver import main
 
 if __name__ == "__main__":
     main()

@@ -1,0 +1,484 @@
+"""`EngineFacade` — ONE serving interface over the three engine shells.
+
+The relational front-end (`repro.rdbms`) plans and executes SQL against
+whatever engine a view was created with; this module is the seam between
+the two layers. Each facade adapts one stateful shell —
+
+  * `SingleViewFacade`   — `ClassificationView` over `HazyEngine` (k = 1)
+  * `MultiViewFacade`    — `MulticlassView` over the vectorized
+                           `MultiViewEngine` (k one-vs-all views, ONE table)
+  * `ShardedFacade`      — `ShardedMultiViewHazy` (device-resident shared
+                           clustering order + the Pallas band kernel)
+
+— to the same contract: batched training inserts that amortize into one
+maintenance round (`insert_examples`, what the WAL group commit feeds),
+tier-instrumented point reads (`point_label` / `point_labels_of` report
+which §3.5.2 tier answered: waters short-circuit, hot buffer, or the
+feature-table "disk" row), label-predicate scans that ride the Lemma 3.1
+partition (`members`), counter reads (`counts`), and the §3.4/§3.5
+cost-model inputs the planner's EXPLAIN needs (`band_info` — prospective,
+never mutating — and `top_margins` with its touched-tuple count).
+
+`top_margins` is exact under model drift: stored eps bound the current
+margin to z ∈ [eps + lw, eps + hw] (Eq. 2), so the candidate set only needs
+stored eps ≥ c − (hw − lw) where c is the limit-th largest stored eps —
+the same slack argument as the Lemma 3.1 band, applied to ranking.
+
+Every facade keeps a uniform `tier_hits` counter dict ("water" / "buffer" /
+"disk" / "map") so the executor can expose — and the tests can assert —
+that hybrid point reads never touch the feature table except on probe
+misses.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.engine import (band_partition, covering_windows,
+                               waters_update)
+from repro.core.multiclass import MulticlassView, sgd_all_views
+from repro.core.view import ClassificationView
+
+TIERS = ("water", "buffer", "disk", "map")
+
+
+def _new_tier_hits() -> Dict[str, int]:
+    return {t: 0 for t in TIERS}
+
+
+class EngineFacade:
+    """Shared contract + shared helpers; subclasses bind one engine shell."""
+
+    num_views: int
+    n: int
+    d: int
+    policy: str
+    supports_delete = False     # footnote-2 retrain; single-view only
+
+    def __init__(self):
+        self.tier_hits = _new_tier_hits()
+        # consumed only by the footnote-2 retrain; facades with
+        # supports_delete=False leave it empty (unbounded growth otherwise)
+        self.example_log: List[Tuple[int, float]] = []
+
+    # -- updates -------------------------------------------------------
+    def insert_examples(self, ids: Sequence[int], labels: Sequence[float]):
+        raise NotImplementedError
+
+    def force_round(self):
+        """UPDATE MODEL: one maintenance round under the current model."""
+        raise NotImplementedError
+
+    def delete_examples(self, entity_id: int) -> int:
+        raise NotImplementedError(
+            "DELETE retrains from scratch (paper footnote 2); only "
+            "single-view views support it")
+
+    # -- reads ---------------------------------------------------------
+    def label(self, entity_id: int, view: int = 0) -> int:
+        raise NotImplementedError
+
+    def point_label(self, entity_id: int, view: int = 0) -> Tuple[int, str]:
+        raise NotImplementedError
+
+    def point_labels_of(self, entity_id: int) -> Tuple[np.ndarray, List[str]]:
+        raise NotImplementedError
+
+    def labels_of(self, entity_id: int) -> np.ndarray:
+        raise NotImplementedError
+
+    def counts(self) -> np.ndarray:
+        raise NotImplementedError
+
+    def members(self, view: int = 0, positive: bool = True) -> np.ndarray:
+        raise NotImplementedError
+
+    def predict(self, entity_id: int) -> int:
+        raise NotImplementedError
+
+    def margin(self, entity_id: int, view: int = 0) -> float:
+        """Current-model margin of one entity (touches its feature row)."""
+        raise NotImplementedError
+
+    # -- state the planner reads --------------------------------------
+    def waters(self) -> Tuple[np.ndarray, np.ndarray]:
+        raise NotImplementedError
+
+    def pending(self) -> np.ndarray:
+        raise NotImplementedError
+
+    def band_info(self, view: int = 0) -> Tuple[int, int, int]:
+        """(band width, certainly-positive count, n) under PROSPECTIVE
+        waters (what the next read would see) — pure, never mutates."""
+        raise NotImplementedError
+
+    @property
+    def disk_touches(self) -> int:
+        raise NotImplementedError
+
+    def top_margins(self, view: int = 0, limit: int = 10,
+                    descending: bool = True
+                    ) -> Tuple[np.ndarray, np.ndarray, int]:
+        """Top-`limit` entities of `view` by CURRENT-model margin, exact via
+        the Eq. 2 candidate slack; returns (ids, margins, tuples_touched)."""
+        raise NotImplementedError
+
+    # shared Eq.2-slack candidate selection over one stored-eps-sorted row
+    def _topk_from_sorted(self, eps_sorted, perm, lw, hw, limit, descending,
+                          margin_of_ids):
+        n = eps_sorted.shape[0]
+        limit = max(1, min(int(limit), n))
+        slack = max(0.0, float(hw) - float(lw))
+        if descending:
+            c = eps_sorted[n - limit]
+            lo = int(np.searchsorted(eps_sorted, c - slack, side="left"))
+            cand = np.arange(lo, n)
+        else:
+            c = eps_sorted[limit - 1]
+            hi = int(np.searchsorted(eps_sorted, c + slack, side="right"))
+            cand = np.arange(0, hi)
+        ids = np.asarray(perm)[cand]
+        z = margin_of_ids(ids)
+        order = np.argsort(-z if descending else z, kind="stable")[:limit]
+        return ids[order], z[order], int(cand.size)
+
+
+class SingleViewFacade(EngineFacade):
+    """k = 1: `ClassificationView` over `HazyEngine`."""
+
+    num_views = 1
+    supports_delete = True
+
+    def __init__(self, view: ClassificationView):
+        super().__init__()
+        self.view = view
+        self.n, self.d = view.F.shape
+        self.policy = view.engine.policy
+
+    @property
+    def engine(self):
+        return self.view.engine
+
+    def insert_examples(self, ids, labels):
+        self.example_log.extend(
+            (int(i), float(y)) for i, y in zip(ids, labels))
+        self.view.insert_examples(list(ids), list(labels), batched=True)
+
+    def force_round(self):
+        self.view.engine.apply_model(self.view.model)
+
+    def delete_examples(self, entity_id: int) -> int:
+        """Footnote 2: drop every example of this entity and retrain
+        non-incrementally (zero model -> replay the surviving stream)."""
+        keep = [(i, y) for i, y in self.example_log if i != int(entity_id)]
+        dropped = len(self.example_log) - len(keep)
+        self.example_log = keep
+        self.view.examples = [(self.view.F[i], y) for i, y in keep]
+        self.view.retrain_from_scratch()
+        return dropped
+
+    def label(self, entity_id, view=0):
+        return int(self.view.engine.label(int(entity_id)))
+
+    def point_label(self, entity_id, view=0):
+        eng = self.view.engine
+        if self.policy == "hybrid":
+            lab, how = eng.hybrid_label(int(entity_id))
+        else:
+            lab, how = eng.label(int(entity_id)), "map"
+        self.tier_hits[how] += 1
+        return int(lab), how
+
+    def point_labels_of(self, entity_id):
+        lab, how = self.point_label(entity_id)
+        return np.array([lab], np.int8), [how]
+
+    def labels_of(self, entity_id):
+        return np.array([self.label(entity_id)], np.int8)
+
+    def counts(self):
+        return np.array([self.view.engine.all_members()], np.int64)
+
+    def members(self, view=0, positive=True):
+        eng = self.view.engine
+        pos = eng.members()          # catches up under lazy/hybrid
+        if positive:
+            return pos
+        return eng.perm[eng.labels_sorted == -1]
+
+    def predict(self, entity_id):
+        return self.point_label(entity_id)[0]
+
+    def margin(self, entity_id, view=0):
+        m = self.view.model
+        return float(self.view.F[int(entity_id)] @ m.w - m.b)
+
+    def waters(self):
+        w = self.view.engine.waters
+        return (np.array([w.lw], np.float64), np.array([w.hw], np.float64))
+
+    def pending(self):
+        return np.array([self.view.engine._pending is not None])
+
+    def _prospective_waters(self):
+        """Eq. 2 waters covering any PENDING model too — pure, not
+        committed. Under lazy/hybrid a deferred model has not updated the
+        engine's waters yet; every bound derived from stored eps (band
+        width, top-k candidate slack) must use these, not the stale pair."""
+        eng = self.view.engine
+        lw, hw = eng.waters.lw, eng.waters.hw
+        if eng._pending is not None:
+            lw, hw = waters_update(lw, hw, eng.model.w, eng.model.b,
+                                   eng.stored.w, eng.stored.b, eng.M,
+                                   eng.waters.p)
+        return float(lw), float(hw)
+
+    def band_info(self, view=0):
+        eng = self.view.engine
+        lw, hw = self._prospective_waters()
+        lo, hi = band_partition(eng.eps_sorted, lw, hw)
+        return int(hi - lo), int(self.n - hi), self.n
+
+    @property
+    def disk_touches(self):
+        return int(self.view.engine.disk_touches)
+
+    def top_margins(self, view=0, limit=10, descending=True):
+        eng = self.view.engine
+        m = self.view.model
+        lw, hw = self._prospective_waters()   # pending drift widens slack
+        return self._topk_from_sorted(
+            eng.eps_sorted, eng.perm, lw, hw, limit, descending,
+            lambda ids: np.asarray(self.view.F[ids] @ m.w - m.b, np.float64))
+
+
+class MultiViewFacade(EngineFacade):
+    """k one-vs-all views: `MulticlassView` over `MultiViewEngine`."""
+
+    def __init__(self, mc: MulticlassView):
+        super().__init__()
+        assert mc.vectorized, "MultiViewFacade requires the vectorized engine"
+        self.mc = mc
+        self.num_views = mc.k
+        self.n, self.d = mc.F.shape
+        self.policy = mc.engine.policy
+
+    @property
+    def engine(self):
+        return self.mc.engine
+
+    def insert_examples(self, ids, labels):
+        # no example_log here: only the footnote-2 retrain (single-view
+        # DELETE) consumes it, and k-view facades don't support that —
+        # logging would just grow memory forever on a long insert stream
+        self.mc.insert_examples([int(i) for i in ids],
+                                [int(c) for c in labels])
+
+    def force_round(self):
+        self.mc.engine.apply_models(self.mc.W, self.mc.b)
+
+    def label(self, entity_id, view=0):
+        return int(self.mc.engine.label(int(view), int(entity_id)))
+
+    def point_label(self, entity_id, view=0):
+        eng = self.mc.engine
+        if self.policy == "hybrid":
+            lab, how = eng.hybrid_label(int(view), int(entity_id))
+        else:
+            lab, how = eng.label(int(view), int(entity_id)), "map"
+        self.tier_hits[how] += 1
+        return int(lab), how
+
+    def point_labels_of(self, entity_id):
+        eng = self.mc.engine
+        if self.policy == "hybrid":
+            labels, codes = eng.hybrid_labels_of(int(entity_id))
+            hows = [("water", "buffer", "disk")[c] for c in codes]
+        else:
+            labels = eng.labels_of(int(entity_id))
+            hows = ["map"] * self.num_views
+        for h in hows:
+            self.tier_hits[h] += 1
+        return labels, hows
+
+    def labels_of(self, entity_id):
+        return self.mc.engine.labels_of(int(entity_id))
+
+    def counts(self):
+        return self.mc.engine.all_members().astype(np.int64)
+
+    def members(self, view=0, positive=True):
+        eng = self.mc.engine
+        pos = eng.members(int(view))     # per-view lazy catch-up
+        if positive:
+            return pos
+        return eng.perm[view, eng.labels_sorted[view] == -1]
+
+    def predict(self, entity_id):
+        if self.policy == "hybrid":
+            return int(self.mc.predict_via_views(int(entity_id)))
+        return int(self.mc.predict(int(entity_id)))
+
+    def margin(self, entity_id, view=0):
+        return float(self.mc.F[int(entity_id)] @ self.mc.W[view]
+                     - self.mc.b[view])
+
+    def waters(self):
+        eng = self.mc.engine
+        return eng.lw.copy(), eng.hw.copy()
+
+    def pending(self):
+        return self.mc.engine.pending.copy()
+
+    def _prospective_waters(self, v: int):
+        """Per-view Eq. 2 waters covering any pending model — pure (see
+        `SingleViewFacade._prospective_waters`)."""
+        eng = self.mc.engine
+        lw, hw = float(eng.lw[v]), float(eng.hw[v])
+        if eng._waters_stale[v]:
+            lw, hw = waters_update(lw, hw, eng.W[v], eng.b[v],
+                                   eng.W_stored[v], eng.b_stored[v],
+                                   eng.M, eng.p)
+        return float(lw), float(hw)
+
+    def band_info(self, view=0):
+        eng = self.mc.engine
+        v = int(view)
+        lw, hw = self._prospective_waters(v)
+        lo, hi = band_partition(eng.eps_sorted[v], lw, hw)
+        return int(hi - lo), int(self.n - hi), self.n
+
+    @property
+    def disk_touches(self):
+        return int(self.mc.engine.disk_touches)
+
+    def top_margins(self, view=0, limit=10, descending=True):
+        eng = self.mc.engine
+        v = int(view)
+        lw, hw = self._prospective_waters(v)  # pending drift widens slack
+        return self._topk_from_sorted(
+            eng.eps_sorted[v], eng.perm[v], lw, hw, limit, descending,
+            lambda ids: np.asarray(
+                self.mc.F[ids] @ eng.W[v] - eng.b[v], np.float64))
+
+
+class ShardedFacade(EngineFacade):
+    """`ShardedMultiViewHazy`: device-resident shared clustering order,
+    union-band relabels through the Pallas kernel, host-side stacked SGD
+    (the same math as `MulticlassView._sgd_all_views`)."""
+
+    policy = "eager"
+
+    def __init__(self, driver, features: np.ndarray, *, lr: float = 0.1,
+                 l2: float = 1e-4):
+        super().__init__()
+        self.driver = driver
+        self.F = np.ascontiguousarray(features, np.float32)
+        self.n, self.d = self.F.shape
+        self.num_views = driver.k
+        self.lr, self.l2 = lr, l2
+        self.W = np.zeros((driver.k, self.d), np.float32)
+        self.b = np.zeros(driver.k, np.float64)
+        self.state = driver.init_state(self.F)
+        self._disk = 0
+
+    def insert_examples(self, ids, labels):
+        for i, c in zip(ids, labels):
+            self.W, self.b = sgd_all_views(self.W, self.b, self.F[int(i)],
+                                           int(c), lr=self.lr, l2=self.l2)
+        self.state = self.driver.apply_models(self.state, self.W, self.b)
+
+    def force_round(self):
+        self.state = self.driver.apply_models(self.state, self.W, self.b)
+
+    def point_labels_of(self, entity_id):
+        labels, resolved = self.driver.hybrid_labels_of(
+            self.state, self.W, self.b, int(entity_id))
+        hows = ["water" if r else "disk" for r in resolved]
+        if not bool(np.asarray(resolved).all()):
+            self._disk += 1            # ONE shared feature-row gather
+        for h in hows:
+            self.tier_hits[h] += 1
+        return labels, hows
+
+    def point_label(self, entity_id, view=0):
+        labels, hows = self.point_labels_of(entity_id)
+        return int(labels[int(view)]), hows[int(view)]
+
+    def labels_of(self, entity_id):
+        gids = np.asarray(self.state.gids)
+        pos = int(np.flatnonzero(gids == int(entity_id))[0])
+        return np.asarray(self.state.labels)[:, pos].astype(np.int8)
+
+    def label(self, entity_id, view=0):
+        return int(self.labels_of(entity_id)[int(view)])
+
+    def counts(self):
+        return self.driver.all_members(self.state).astype(np.int64)
+
+    def members(self, view=0, positive=True):
+        gids = np.asarray(self.state.gids)
+        lab = np.asarray(self.state.labels)[int(view)]
+        want = 1 if positive else -1
+        return np.sort(gids[lab == want])
+
+    def predict(self, entity_id):
+        labels, _ = self.point_labels_of(entity_id)
+        pos = np.flatnonzero(labels == 1)
+        if pos.size == 1:
+            return int(pos[0])
+        f = self.F[int(entity_id)]
+        cand = pos if pos.size > 1 else np.arange(self.num_views)
+        z = self.W[cand] @ f - self.b[cand].astype(np.float32)
+        return int(cand[np.argmax(z)])
+
+    def margin(self, entity_id, view=0):
+        return float(self.F[int(entity_id)] @ self.W[view] - self.b[view])
+
+    def waters(self):
+        return self.driver.lw.copy(), self.driver.hw.copy()
+
+    def pending(self):
+        return np.zeros(self.num_views, bool)      # eager: nothing deferred
+
+    def band_info(self, view=0):
+        eps = np.asarray(self.state.eps)           # (k, n), SHARED order
+        lw = self.driver.lw.astype(np.float32)
+        hw = self.driver.hw.astype(np.float32)
+        _, _, width = covering_windows(eps, lw, hw)
+        v = int(view)
+        certain_pos = int(np.count_nonzero(eps[v] >= hw[v]))
+        return int(width[v]), certain_pos, self.n
+
+    @property
+    def disk_touches(self):
+        return self._disk
+
+    def top_margins(self, view=0, limit=10, descending=True):
+        v = int(view)
+        eps = np.asarray(self.state.eps)[v]        # stored-model margins
+        gids = np.asarray(self.state.gids)
+        order = np.argsort(eps, kind="stable")
+        return self._topk_from_sorted(
+            eps[order], gids[order], self.driver.lw[v], self.driver.hw[v],
+            limit, descending,
+            lambda ids: np.asarray(
+                self.F[ids] @ self.W[v] - self.b[v], np.float64))
+
+
+def make_sharded_facade(features: np.ndarray, k: int, *, p: float = 2.0,
+                        q: float = 2.0, lr: float = 0.1, l2: float = 1e-4,
+                        alpha: float = 1.0, cap_frac: float = 0.5,
+                        mesh=None) -> ShardedFacade:
+    """Build a `ShardedFacade` on `mesh` (default: single-host (1, 1))."""
+    from repro.core.sharded import ShardedMultiViewHazy
+    from repro.core.waters import holder_M
+    if mesh is None:
+        from repro.launch.mesh import make_host_mesh
+        mesh = make_host_mesh((1, 1))
+    F = np.ascontiguousarray(features, np.float32)
+    driver = ShardedMultiViewHazy(
+        mesh=mesh, n=F.shape[0], d=F.shape[1], k=int(k),
+        M=holder_M(F, q), p=p, alpha=alpha, cap_frac=cap_frac)
+    return ShardedFacade(driver, F, lr=lr, l2=l2)

@@ -40,6 +40,22 @@ from repro.core.linear_model import LinearModel, sgd_step, zero_model
 from repro.core.multiview import MultiViewEngine
 
 
+def sgd_all_views(W: np.ndarray, b: np.ndarray, f: np.ndarray, cls: int, *,
+                  lr: float, l2: float):
+    """One training example against all k one-vs-all hinge models at once —
+    the stacked twin of k sequential `sgd_step` calls (bit-for-bit: same
+    f32 accumulation order per view, bias kept in f64). THE one
+    implementation: `MulticlassView` and `ShardedFacade` both train
+    through it, so their model trajectories can never drift apart."""
+    k = W.shape[0]
+    y = np.where(np.arange(k) == cls, 1.0, -1.0)
+    z = W @ f - b.astype(np.float32)          # (k,) f32 margins
+    g = np.where(y * z.astype(np.float64) < 1.0, -y, 0.0)
+    W = W * (1.0 - lr * l2)
+    W -= (lr * g).astype(np.float32)[:, None] * f[None, :]
+    return W, b - lr * (-g)
+
+
 class MulticlassView:
     def __init__(self, features: np.ndarray, num_classes: int, *,
                  engine: str = "hazy", policy: str = "eager", lr: float = 0.1,
@@ -91,15 +107,8 @@ class MulticlassView:
         return self._models
 
     def _sgd_all_views(self, f: np.ndarray, cls: int):
-        """One training example against all k one-vs-all models at once —
-        the stacked twin of k sequential `sgd_step` calls (bit-for-bit:
-        same f32 accumulation order per view, bias kept in f64)."""
-        y = np.where(np.arange(self.k) == cls, 1.0, -1.0)
-        z = self.W @ f - self.b.astype(np.float32)       # (k,) f32 margins
-        g = np.where(y * z.astype(np.float64) < 1.0, -y, 0.0)
-        self.W = self.W * (1.0 - self.lr * self.l2)
-        self.W -= (self.lr * g).astype(np.float32)[:, None] * f[None, :]
-        self.b = self.b - self.lr * (-g)
+        self.W, self.b = sgd_all_views(self.W, self.b, f, cls,
+                                       lr=self.lr, l2=self.l2)
 
     # ------------------------------------------------------------------
     # Updates

@@ -131,7 +131,11 @@ class MultiViewEngine:
         scan = max(time.perf_counter() - t0, 1e-12)
         self.sigma = min(1.0, scan / S0)
         self.alpha = alpha if alpha else alpha_star(self.sigma)
-        self.S = np.full(k, S0, np.float64)       # per-view reorg cost
+        # modeled mode pins S to 1.0 (S-invariant dimensionless charges,
+        # exactly the Layer 2 pure-step contract) so SKIING trajectories
+        # are bitwise deterministic; measured mode uses wall-time S.
+        self.S = np.full(k, 1.0 if cost_mode == "modeled" else S0,
+                         np.float64)              # per-view reorg cost
         self.acc = np.zeros(k, np.float64)        # SKIING accumulators
         self.stats = Stats()
         self.reorg_counts = np.zeros(k, np.int64)
@@ -170,7 +174,8 @@ class MultiViewEngine:
         wall = (time.perf_counter() - t0
                 + self.touch_ns * 1e-9 * self.n * views.size)
         if hasattr(self, "S"):   # absent only during the free init round
-            self.S[views] = wall / views.size
+            if self.cost_mode != "modeled":   # modeled: S stays pinned at 1.0
+                self.S[views] = wall / views.size
             self.acc[views] = 0.0
             self.stats.reorgs += int(views.size)
             self.reorg_counts[views] += 1

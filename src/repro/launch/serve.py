@@ -1,21 +1,26 @@
 """Serving launcher: classification-view service over an LM-encoded corpus
-(the paper's workload) — thin CLI over examples/serve_view.py logic, plus a
+(the paper's workload), a SQL front-end over the same engines, and a
 pure-LM decode mode for the decode-shape configs.
 
   PYTHONPATH=src python -m repro.launch.serve --mode view --requests 2000
+  PYTHONPATH=src python -m repro.launch.serve --mode sql            # REPL
+  PYTHONPATH=src python -m repro.launch.serve --mode sql --script demo.sql
+  PYTHONPATH=src python -m repro.launch.serve --mode sql \
+      --execute "SHOW TABLES"
   PYTHONPATH=src python -m repro.launch.serve --mode decode --arch tinyllama-1.1b
+
+The view driver is an importable module (`repro.launch.view_driver`)
+shared with `examples/serve_view.py` — no file-path loading hacks.
 """
 from __future__ import annotations
 
 import argparse
 import time
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
 
 def serve_decode(arch: str, steps: int, batch: int, cache_len: int):
+    import jax
+    import jax.numpy as jnp
     from repro.configs import smoke_config
     from repro.models import build
     from repro.models.steps import init_cache, init_train_state, make_decode_step
@@ -34,27 +39,39 @@ def serve_decode(arch: str, steps: int, batch: int, cache_len: int):
           f"{steps*batch/dt:.0f} tok/s ({dt/steps*1e3:.1f} ms/step)")
 
 
+def serve_sql(script: str = None, execute: str = None):
+    from repro.rdbms.executor import Executor
+    from repro.rdbms.repl import repl, run_script
+    ex = Executor()
+    if script:
+        with open(script) as fh:
+            run_script(fh.read(), ex)
+    elif execute:
+        run_script(execute, ex)
+    else:
+        repl(ex)
+
+
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--mode", default="view", choices=["view", "decode"])
+    ap.add_argument("--mode", default="view", choices=["view", "sql", "decode"])
     ap.add_argument("--arch", default="tinyllama-1.1b")
     ap.add_argument("--requests", type=int, default=2000)
     ap.add_argument("--steps", type=int, default=64)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--cache-len", type=int, default=256)
+    ap.add_argument("--script", default=None,
+                    help="sql mode: run this .sql file instead of the REPL")
+    ap.add_argument("--execute", default=None,
+                    help="sql mode: run these ;-separated statements")
     args = ap.parse_args()
     if args.mode == "decode":
         serve_decode(args.arch, args.steps, args.batch, args.cache_len)
+    elif args.mode == "sql":
+        serve_sql(args.script, args.execute)
     else:
-        import sys
-        sys.argv = ["serve_view", "--requests", str(args.requests)]
-        import importlib.util, os
-        path = os.path.join(os.path.dirname(__file__), "..", "..", "..",
-                            "examples", "serve_view.py")
-        spec = importlib.util.spec_from_file_location("serve_view", path)
-        mod = importlib.util.module_from_spec(spec)
-        spec.loader.exec_module(mod)
-        mod.main()
+        from repro.launch.view_driver import main as view_main
+        view_main(["--requests", str(args.requests)])
 
 
 if __name__ == "__main__":

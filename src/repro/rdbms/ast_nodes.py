@@ -1,0 +1,97 @@
+"""Statement AST of the SQL dialect (and the front-end error hierarchy).
+
+One dataclass per statement kind; the parser builds these, the planner
+prices them, the executor runs them. `Where` is deliberately tiny — the
+dialect supports exactly the predicates the paper's workloads need (point
+lookups, label/class membership scans, top-k margins), so the planner can
+always route to a §3.5 tier instead of a generic filter scan.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple, Union
+
+
+class SqlError(Exception):
+    """Base of every front-end error (lex, parse, plan, execution)."""
+
+
+@dataclasses.dataclass
+class Where:
+    """Conjunction of the supported predicates (any subset may be set)."""
+    ids: Optional[List[int]] = None        # id = n  /  id IN (...)
+    label: Optional[int] = None            # label = ±1
+    cls: Optional[int] = None              # class = c (multiclass views)
+    view: Optional[int] = None             # view = v (selects one o-v-a view)
+
+    def is_point(self) -> bool:
+        return self.ids is not None
+
+
+@dataclasses.dataclass
+class CreateTable:
+    name: str
+    corpus: str                            # repro.data corpus factory name
+    options: dict
+
+
+@dataclasses.dataclass
+class CreateView:
+    name: str
+    table: str
+    model: str                             # "svm" | "logistic"
+    options: dict                          # policy=, k=, engine=, buffer_frac=, ...
+
+
+@dataclasses.dataclass
+class Insert:
+    table: str
+    rows: List[Tuple[int, float]]          # (entity_id, label/class)
+
+
+@dataclasses.dataclass
+class Update:
+    table: str
+    entity_id: int
+    label: float                           # SET label = y WHERE id = i
+
+
+@dataclasses.dataclass
+class Delete:
+    table: str
+    entity_id: int
+
+
+@dataclasses.dataclass
+class UpdateModel:
+    view: str                              # UPDATE MODEL ON v
+
+
+@dataclasses.dataclass
+class Commit:
+    pass
+
+
+@dataclasses.dataclass
+class Select:
+    view: str
+    columns: List[str]                     # id/view/label/margin/class, or *
+    count: bool = False                    # SELECT COUNT(*)
+    where: Optional[Where] = None
+    order_by: Optional[str] = None         # only "margin"
+    descending: bool = True
+    limit: Optional[int] = None
+
+
+@dataclasses.dataclass
+class Explain:
+    stmt: Statement
+
+
+@dataclasses.dataclass
+class Show:
+    what: str                              # "tables" | "views"
+
+
+Statement = Union[CreateTable, CreateView, Insert, Update, Delete,
+                  UpdateModel, Commit, Select, Explain, Show]

@@ -1,0 +1,180 @@
+"""Catalog: base entity tables + registered classification views.
+
+A *base table* is an entity relation — the (n, d) feature rows plus the
+ground-truth labels/classes a corpus carries (used only by examples and
+benchmarks; the engines never see them). A *classification view* is a
+model-based view registered on a base table: `CREATE CLASSIFICATION VIEW`
+builds one of the three engine shells behind an `EngineFacade` —
+
+  engine=hazy       k = 1 `ClassificationView` over `HazyEngine`
+  engine=multiview  k one-vs-all views over ONE `MultiViewEngine` (default
+                    whenever k > 1)
+  engine=sharded    `ShardedMultiViewHazy` (device-resident shared order,
+                    Pallas band kernel; eager only)
+
+WITH-options map straight onto the engine ctor knobs: policy (eager/lazy/
+hybrid), k, buffer_frac, p, q, alpha, lr, l2, cost_mode (measured/modeled),
+touch_ns. Unknown options raise instead of being silently dropped.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core.facade import (EngineFacade, MultiViewFacade,
+                               SingleViewFacade, make_sharded_facade)
+from repro.core.multiclass import MulticlassView
+from repro.core.view import ClassificationView
+from repro.rdbms.ast_nodes import SqlError
+
+
+class PlanError(SqlError):
+    pass
+
+
+@dataclasses.dataclass
+class BaseTable:
+    name: str
+    features: np.ndarray                      # (n, d) float32
+    truth: Optional[np.ndarray] = None        # ground-truth labels/classes
+    num_classes: int = 2                      # 2 = binary (±1 labels)
+
+    @property
+    def n(self) -> int:
+        return self.features.shape[0]
+
+
+@dataclasses.dataclass
+class ViewDef:
+    name: str
+    table: str
+    model: str
+    facade: EngineFacade
+    options: dict
+
+
+_VIEW_OPTIONS = {"policy", "k", "engine", "buffer_frac", "p", "q", "alpha",
+                 "lr", "l2", "cost_mode", "touch_ns", "cap_frac"}
+
+
+class Catalog:
+    def __init__(self):
+        self.tables: Dict[str, BaseTable] = {}
+        self.views: Dict[str, ViewDef] = {}
+
+    # -- base tables ---------------------------------------------------
+    def register_table(self, name: str, features: np.ndarray, *,
+                       truth: Optional[np.ndarray] = None,
+                       num_classes: int = 2) -> BaseTable:
+        if name in self.tables:
+            raise PlanError(f"table {name!r} already exists")
+        t = BaseTable(name, np.ascontiguousarray(features, np.float32),
+                      truth=truth, num_classes=int(num_classes))
+        self.tables[name] = t
+        return t
+
+    def create_table_from_corpus(self, name: str, corpus: str,
+                                 options: Optional[dict] = None) -> BaseTable:
+        """`CREATE TABLE t FROM CORPUS c` — c is a repro.data factory."""
+        import repro.data as data
+        opts = dict(options or {})
+        scale = float(opts.pop("scale", 0.1))
+        seed = int(opts.pop("seed", 0))
+        if opts:
+            raise PlanError(f"unknown CREATE TABLE options: {sorted(opts)}")
+        if corpus in ("forest_like", "dblife_like", "citeseer_like"):
+            c = getattr(data, corpus)(scale=scale)
+            return self.register_table(name, c.features, truth=c.labels)
+        if corpus == "cora_like":
+            c = data.cora_like(scale=scale)
+            return self.register_table(name, c.features, truth=c.classes,
+                                       num_classes=c.num_classes)
+        if corpus == "synthetic":
+            c = data.synthetic_corpus("synthetic", max(256, int(4000 * scale)),
+                                      64, seed=seed)
+            return self.register_table(name, c.features, truth=c.labels)
+        raise PlanError(f"unknown corpus {corpus!r}; have forest_like, "
+                        f"dblife_like, citeseer_like, cora_like, synthetic")
+
+    # -- classification views ------------------------------------------
+    def create_view(self, name: str, table: str, model: str = "svm",
+                    options: Optional[dict] = None) -> ViewDef:
+        if name in self.views:
+            raise PlanError(f"view {name!r} already exists")
+        if table not in self.tables:
+            raise PlanError(f"unknown table {table!r}")
+        if model not in ("svm", "logistic"):
+            raise PlanError(f"USING MODEL must be svm or logistic, "
+                            f"got {model!r}")
+        t = self.tables[table]
+        opts = dict(options or {})
+        unknown = set(opts) - _VIEW_OPTIONS
+        if unknown:
+            raise PlanError(f"unknown view options: {sorted(unknown)}")
+        k = int(opts.pop("k", t.num_classes if t.num_classes > 2 else 1))
+        engine = opts.pop("engine", "multiview" if k > 1 else "hazy")
+        policy = opts.pop("policy", "eager")
+        if policy not in ("eager", "lazy", "hybrid"):
+            raise PlanError(f"policy must be eager/lazy/hybrid, got "
+                            f"{policy!r}")
+        p = float(opts.pop("p", 2.0))
+        q = float(opts.pop("q", 2.0))
+        alpha = float(opts.pop("alpha", 1.0))
+        lr = float(opts.pop("lr", 0.1))
+        l2 = float(opts.pop("l2", 1e-4))
+        buffer_frac = float(opts.pop("buffer_frac",
+                                     0.01 if policy == "hybrid" else 0.0))
+        cost_mode = opts.pop("cost_mode", "measured")
+        touch_ns = float(opts.pop("touch_ns", 0.0))
+        cap_frac = float(opts.pop("cap_frac", 0.5))
+
+        if model == "logistic" and engine != "hazy":
+            # MulticlassView/ShardedFacade train hinge SVM only; a view
+            # silently trained with the wrong loss is worse than an error
+            raise PlanError("USING MODEL logistic requires engine=hazy "
+                            "(k = 1); the multiview/sharded engines train "
+                            "svm only")
+        if engine == "hazy":
+            if k != 1:
+                raise PlanError("engine=hazy is single-view; use "
+                                "engine=multiview for k > 1")
+            cv = ClassificationView(
+                t.features, method=model, policy=policy, norm=(p, q),
+                lr=lr, l2=l2, alpha=alpha, buffer_frac=buffer_frac,
+                cost_mode=cost_mode, touch_ns=touch_ns)
+            facade: EngineFacade = SingleViewFacade(cv)
+        elif engine == "multiview":
+            mc = MulticlassView(
+                t.features, k, policy=policy, lr=lr, l2=l2, alpha=alpha,
+                p=p, q=q, cost_mode=cost_mode, touch_ns=touch_ns,
+                buffer_frac=buffer_frac, vectorized=True)
+            facade = MultiViewFacade(mc)
+        elif engine == "sharded":
+            if policy != "eager":
+                raise PlanError("engine=sharded maintains eagerly; "
+                                "policy must be eager")
+            facade = make_sharded_facade(t.features, k, p=p, q=q, lr=lr,
+                                         l2=l2, alpha=alpha,
+                                         cap_frac=cap_frac)
+        else:
+            raise PlanError(f"engine must be hazy/multiview/sharded, "
+                            f"got {engine!r}")
+        vd = ViewDef(name, table, model, facade, dict(options or {}))
+        self.views[name] = vd
+        return vd
+
+    # -- lookups -------------------------------------------------------
+    def table(self, name: str) -> BaseTable:
+        if name not in self.tables:
+            raise PlanError(f"unknown table {name!r}")
+        return self.tables[name]
+
+    def view(self, name: str) -> ViewDef:
+        if name not in self.views:
+            raise PlanError(f"unknown view {name!r}")
+        return self.views[name]
+
+    def views_on(self, table: str) -> List[ViewDef]:
+        return [v for v in self.views.values() if v.table == table]

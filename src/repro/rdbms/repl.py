@@ -1,0 +1,69 @@
+"""SQL entry point: interactive REPL and scripted execution.
+
+Used by `python -m repro.launch.serve --mode sql` (interactive), with
+`--script f.sql` (run a file) or `--execute "stmt; stmt"` (one-shot).
+"""
+from __future__ import annotations
+
+import sys
+import time
+from typing import Optional
+
+from repro.rdbms.ast_nodes import SqlError
+from repro.rdbms.executor import Executor
+
+BANNER = """HAZY SQL — classification views inside the relational front-end.
+Statements end with ';'.  Try:
+  CREATE TABLE papers FROM CORPUS cora_like WITH (scale = 0.1);
+  CREATE CLASSIFICATION VIEW topics ON papers USING MODEL svm
+      WITH (policy = hybrid, k = 7);
+  INSERT INTO papers (id, class) VALUES (0, 3), (1, 0);
+  SELECT id, view, label FROM topics WHERE id = 0;
+  EXPLAIN SELECT label FROM topics WHERE id = 0 AND view = 3;
+Ctrl-D to exit."""
+
+
+def run_script(sql: str, executor: Optional[Executor] = None, *,
+               echo: bool = True, out=sys.stdout) -> Executor:
+    """Execute a `;`-separated script, printing each result table."""
+    ex = executor or Executor()
+    for result in ex.execute(sql):
+        if echo:
+            print(result.pretty(), file=out)
+    return ex
+
+
+def repl(executor: Optional[Executor] = None, *, stdin=sys.stdin,
+         out=sys.stdout) -> Executor:
+    ex = executor or Executor()
+    print(BANNER, file=out)
+    buf = ""
+    while True:
+        try:
+            prompt = "sql> " if not buf else "...> "
+            if stdin is sys.stdin and sys.stdin.isatty():
+                line = input(prompt)
+            else:
+                line = stdin.readline()
+                if not line:
+                    break
+        except EOFError:
+            break
+        buf += line.rstrip("\n") + "\n"
+        if ";" not in buf:
+            if buf.strip().lower() in ("quit", "exit"):
+                break
+            continue
+        t0 = time.perf_counter()
+        try:
+            for result in ex.execute(buf):
+                print(result.pretty(), file=out)
+                if result.plan is not None:
+                    p = result.plan
+                    print(f"-- plan: {p.kind} via {p.tier} "
+                          f"(est {p.est_touched} tuples)", file=out)
+            print(f"-- {1e3 * (time.perf_counter() - t0):.2f} ms", file=out)
+        except SqlError as e:
+            print(f"error: {e}", file=out)
+        buf = ""
+    return ex

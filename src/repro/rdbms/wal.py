@@ -1,0 +1,143 @@
+"""Group-commit update log (WAL-style, replayable).
+
+Heavy write traffic must not pay one engine maintenance round per DML
+statement — the batched `insert_examples` path exists precisely so k
+training inserts amortize into ONE `apply_model` round. The log is the
+relational face of that amortization:
+
+  * every INSERT/UPDATE/DELETE appends a `WalRecord` (monotone LSNs) to a
+    per-table pending group and to the durable history;
+  * a group commits when it reaches `group_size`, when a read arrives on
+    one of the table's views (read-your-writes: SELECTs always observe all
+    submitted DML), on `COMMIT` / `UPDATE MODEL`, or on explicit `flush`;
+  * a commit feeds each view of the table one batched
+    `facade.insert_examples` call (DELETE breaks the batch: it retrains
+    non-incrementally per paper footnote 2, so order is preserved around
+    it) and appends a commit marker to the history;
+  * the history (optionally mirrored to a JSONL file) replays into a fresh
+    catalog with identical commit boundaries — `replay_into` is the
+    recovery path, and the equivalence tests replay it against direct
+    engine calls.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Dict, List, Optional
+
+from repro.rdbms.ast_nodes import SqlError
+
+
+@dataclasses.dataclass
+class WalRecord:
+    lsn: int
+    op: str                    # insert | update | delete | commit
+    table: str
+    entity_id: int = -1
+    label: float = 0.0
+
+    def to_json(self) -> str:
+        return json.dumps(dataclasses.asdict(self))
+
+    @staticmethod
+    def from_json(line: str) -> "WalRecord":
+        return WalRecord(**json.loads(line))
+
+
+class UpdateLog:
+    def __init__(self, group_size: int = 64, path: Optional[str] = None):
+        assert group_size >= 1
+        self.group_size = int(group_size)
+        self.path = path
+        self._fh = open(path, "a") if path else None
+        self.history: List[WalRecord] = []
+        self.pending: Dict[str, List[WalRecord]] = {}
+        self.lsn = 0
+        self.commits = 0
+
+    # -- append --------------------------------------------------------
+    def _record(self, op: str, table: str, entity_id: int = -1,
+                label: float = 0.0) -> WalRecord:
+        self.lsn += 1
+        rec = WalRecord(self.lsn, op, table, int(entity_id), float(label))
+        self.history.append(rec)
+        if self._fh:
+            self._fh.write(rec.to_json() + "\n")
+            self._fh.flush()
+        return rec
+
+    def append(self, op: str, table: str, entity_id: int, label: float,
+               catalog) -> int:
+        """Log one DML record; auto-commits the table's group when it
+        reaches `group_size`. Returns the number of commits triggered."""
+        if op not in ("insert", "update", "delete"):
+            raise SqlError(f"bad WAL op {op!r}")
+        self.pending.setdefault(table, []).append(
+            self._record(op, table, entity_id, label))
+        if len(self.pending[table]) >= self.group_size:
+            return self.flush(catalog, table)
+        return 0
+
+    # -- commit --------------------------------------------------------
+    def flush(self, catalog, table: Optional[str] = None) -> int:
+        """Commit pending groups (one table, or all). Each commit is ONE
+        batched engine round per view; DELETEs preserve statement order by
+        splitting the batch around the retrain."""
+        tables = [table] if table is not None else list(self.pending)
+        commits = 0
+        for t in tables:
+            group = self.pending.pop(t, [])
+            if not group:
+                continue
+            views = catalog.views_on(t)
+            batch: List[WalRecord] = []
+
+            def feed(batch: List[WalRecord]):
+                if not batch:
+                    return
+                ids = [r.entity_id for r in batch]
+                ys = [r.label for r in batch]
+                for vd in views:
+                    vd.facade.insert_examples(ids, ys)
+
+            for rec in group:
+                if rec.op == "delete":
+                    feed(batch)
+                    batch = []
+                    for vd in views:
+                        vd.facade.delete_examples(rec.entity_id)
+                else:                        # insert/update: one example
+                    batch.append(rec)
+            feed(batch)
+            self._record("commit", t)
+            self.commits += 1
+            commits += 1
+        return commits
+
+    # -- recovery ------------------------------------------------------
+    @staticmethod
+    def replay_into(history: List[WalRecord], catalog,
+                    group_size: int = 64) -> "UpdateLog":
+        """Re-apply a history against a fresh catalog (tables and views
+        already created). Commit markers in the history reproduce the
+        original commit boundaries exactly, whatever `group_size` was."""
+        log = UpdateLog(group_size=max(group_size, len(history) + 1))
+        for rec in history:
+            if rec.op == "commit":
+                log.pending.setdefault(rec.table, [])
+                log.flush(catalog, rec.table)
+            else:
+                log.pending.setdefault(rec.table, []).append(
+                    log._record(rec.op, rec.table, rec.entity_id, rec.label))
+        return log
+
+    @staticmethod
+    def load(path: str) -> List[WalRecord]:
+        with open(path) as fh:
+            return [WalRecord.from_json(line) for line in fh
+                    if line.strip()]
+
+    def close(self):
+        if self._fh:
+            self._fh.close()
+            self._fh = None
