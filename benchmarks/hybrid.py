@@ -9,19 +9,23 @@ Mixed single-entity read/update traffic on the cora_like multiclass corpus
              pending mask).
   * hybrid — updates defer the relabel but keep the eps-map tight (SKIING
              on the probe miss rate); reads go waters short-circuit ->
-             per-view hot buffer -> one shared "disk" feature-row touch
-             (`hybrid_labels_of`).
+             per-view hot buffer (PINNED pool pages) -> the buffer pool
+             (`hybrid_labels_of`), which serves a probe miss from a
+             resident page ("pool") or pays a real cold page read from the
+             memory-mapped entity store ("disk").
 
-The paper's architecture stores the table on disk, so `touch_ns`
-(BENCH_HYBRID_TOUCH_NS, default 2000 = 2 µs/tuple) emulates the storage
-tier exactly as the engines' cost accounting defines it: maintenance is
-charged per tuple touched (bands + reorganizations, via
-`stats.incremental_seconds`/`reorg_seconds`), hybrid disk probes pay one
-touch per read that misses the in-memory tiers (charged arithmetically
-from the engine's `disk_touches` counter). The read-path latency —
-maintenance plus reads, amortized per read — is the number the paper's
-eager-vs-hybrid comparison is about; pure in-memory read wall time is
-reported alongside. Emits machine-readable ``BENCH_hybrid.json``.
+Earlier revisions emulated the storage tier with a synthetic 2 µs/tuple
+charge; the hybrid run now carries a REAL `repro.storage` buffer pool
+under BENCH_STORAGE_BUDGET (default 10% of the entity table's bytes), so
+the tier fractions and the read-path latency are measured against actual
+page residency — no arithmetic storage emulation anywhere. The read-path
+latency — maintenance plus reads, amortized per read — is the number the
+comparison is about. With the table genuinely in RAM for eager/lazy, the
+paper's disk-resident eager-vs-hybrid contest moves to
+``BENCH_storage.json`` (budgeted pool vs all-in-RAM on the SAME policy);
+here the deferred-maintenance twins are compared like-for-like: hybrid's
+tiered read path must beat lazy's catch-up read path. Emits
+``BENCH_hybrid.json``.
 """
 from __future__ import annotations
 
@@ -33,13 +37,14 @@ import numpy as np
 
 from benchmarks.common import BENCH_SCALE, emit
 from repro.core import MulticlassView
-from repro.core.multiview import HYBRID_TIERS
+from repro.core.engine import PROBE_TIERS
 from repro.data import cora_like, multiclass_example_stream
+from repro.storage import BufferPool, EntityStore
 
 BATCH = int(os.environ.get("BENCH_HYBRID_BATCH", "16"))
 READS_PER_ROUND = int(os.environ.get("BENCH_HYBRID_READS", "12"))
 BUFFER_FRAC = float(os.environ.get("BENCH_HYBRID_BUFFER", "0.05"))
-TOUCH_NS = float(os.environ.get("BENCH_HYBRID_TOUCH_NS", "2000"))
+MEMORY_BUDGET = float(os.environ.get("BENCH_STORAGE_BUDGET", "0.10"))
 
 
 def _workload():
@@ -57,9 +62,15 @@ def _workload():
 
 
 def _run(corpus, rounds, policy: str):
+    pool = None
+    if policy == "hybrid":
+        # the REAL storage tier: mmap'd entity store + budgeted pool
+        store = EntityStore.from_array(corpus.features)
+        pool = BufferPool(store, max(1, int(MEMORY_BUDGET
+                                            * corpus.features.nbytes)))
     view = MulticlassView(corpus.features, corpus.num_classes, policy=policy,
                           buffer_frac=BUFFER_FRAC, p=2.0, q=2.0, lr=0.1,
-                          cost_mode="measured", touch_ns=TOUCH_NS)
+                          cost_mode="measured", store=pool)
     eng = view.engine
     read_s = 0.0
     n_reads = 0
@@ -74,14 +85,13 @@ def _run(corpus, rounds, policy: str):
                 eng.labels_of(int(i))
         read_s += time.perf_counter() - t0
         n_reads += len(reads)
-    # maintenance as the engine's own storage-aware accounting charges it
+    # maintenance as the engine's own accounting charges it (wall time;
+    # for hybrid this includes the real pool re-warms at reorganization)
     maint_s = eng.stats.incremental_seconds + eng.stats.reorg_seconds
-    # disk probes are charged arithmetically (sleep granularity ~100us would
-    # swamp a per-row touch), exactly like the maintenance accounting
-    read_s += eng.disk_touches * TOUCH_NS * 1e-9
     # snapshot tier counters BEFORE the verification probes below, so the
     # reported fractions describe only the timed workload
     hits = eng.hybrid_hits.copy()
+    pool_stats = pool.stats() if pool is not None else None
     # exactness: whatever the policy deferred, reads must be (and stay)
     # exact w.r.t. the current model
     truth = np.where(corpus.features @ view.W.T
@@ -90,7 +100,7 @@ def _run(corpus, rounds, policy: str):
         probe = (eng.hybrid_labels_of(i)[0] if policy == "hybrid"
                  else eng.labels_of(i))
         assert np.array_equal(probe, truth[i]), (policy, i)
-    return view, hits, maint_s, read_s, n_reads
+    return view, hits, pool_stats, maint_s, read_s, n_reads
 
 
 def main() -> None:
@@ -99,7 +109,8 @@ def main() -> None:
     k = corpus.num_classes
     results = {}
     for policy in ("eager", "lazy", "hybrid"):
-        view, hits, maint_s, read_s, n_reads = _run(corpus, rounds, policy)
+        view, hits, pool_stats, maint_s, read_s, n_reads = _run(
+            corpus, rounds, policy)
         read_us = read_s / n_reads * 1e6
         path_us = (maint_s + read_s) / n_reads * 1e6
         results[policy] = {"read_us": read_us, "read_path_us": path_us,
@@ -110,36 +121,46 @@ def main() -> None:
         if policy == "hybrid":
             frac = hits.astype(float) / max(1.0, float(hits.sum()))
             results[policy]["tier_hits"] = {
-                t: int(h) for t, h in zip(HYBRID_TIERS, hits)}
+                t: int(h) for t, h in zip(PROBE_TIERS, hits)}
             results[policy]["tier_fractions"] = {
-                t: float(f) for t, f in zip(HYBRID_TIERS, frac)}
+                t: float(f) for t, f in zip(PROBE_TIERS, frac)}
+            results[policy]["storage"] = pool_stats
             extra = (f"water={frac[0]:.3f};buffer={frac[1]:.3f};"
-                     f"disk={frac[2]:.3f}")
+                     f"pool={frac[3]:.3f};disk={frac[2]:.3f}")
         emit(f"hybrid_readpath_{policy}_k{k}_n{n}", path_us,
              f"read_us={read_us:.2f};{extra}")
 
-    hyb, eag = results["hybrid"], results["eager"]
-    wb = (hyb["tier_fractions"]["water"] + hyb["tier_fractions"]["buffer"])
+    hyb, eag, laz = results["hybrid"], results["eager"], results["lazy"]
+    fr = hyb["tier_fractions"]
+    wb = fr["water"] + fr["buffer"]
+    non_disk = 1.0 - fr["disk"]
     payload = {
         "workload": {"corpus": corpus.name, "n": n,
                      "d": int(corpus.features.shape[1]), "k": k,
                      "updates": sum(len(c) for c, _ in rounds),
                      "reads": hyb["n_reads"], "batch": BATCH,
-                     "buffer_frac": BUFFER_FRAC, "touch_ns": TOUCH_NS},
+                     "buffer_frac": BUFFER_FRAC,
+                     "memory_budget": MEMORY_BUDGET},
         "policies": results,
         "hybrid_water_buffer_fraction": wb,
-        "hybrid_majority_in_memory": wb > 0.5,
+        "hybrid_non_disk_fraction": non_disk,
+        "hybrid_majority_in_memory": non_disk > 0.5,
         "read_path_speedup_vs_eager":
             eag["read_path_us"] / hyb["read_path_us"],
+        "read_path_speedup_vs_lazy":
+            laz["read_path_us"] / hyb["read_path_us"],
     }
     with open("BENCH_hybrid.json", "w") as f:
         json.dump(payload, f, indent=2)
-    assert wb > 0.5, f"hybrid tier resolved only {wb:.2%} without disk"
+    assert non_disk > 0.5, \
+        f"hybrid tier paid cold disk reads on {1 - non_disk:.2%} of probes"
     # at toy scale (CI smoke) maintenance is too cheap for the read-path
-    # comparison to be meaningful; gate it on a real-sized corpus
+    # comparison to be meaningful; gate it on a real-sized corpus. The
+    # like-for-like contest is vs LAZY (the other deferring policy):
+    # hybrid's tiered point read must beat lazy's catch-up point read.
     if n >= 1000:
-        assert hyb["read_path_us"] < eag["read_path_us"], \
-            (hyb["read_path_us"], eag["read_path_us"])
+        assert hyb["read_path_us"] < laz["read_path_us"], \
+            (hyb["read_path_us"], laz["read_path_us"])
 
 
 if __name__ == "__main__":

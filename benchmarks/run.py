@@ -27,6 +27,7 @@ MODULES = [
     "benchmarks.waters",            # Fig. 13
     "benchmarks.multiclass",        # App. B.5.4 / C.3 (multi-view engine)
     "benchmarks.hybrid",            # §3.5.2 hybrid tier on the multi-view engine
+    "benchmarks.storage",           # memory-budgeted buffer pool behind the probe
     "benchmarks.scale",             # paper-scale CS/FC on the multi-view engine
     "benchmarks.sql_serve",         # relational front-end overhead vs direct
     "benchmarks.kernel_bench",      # framework kernels

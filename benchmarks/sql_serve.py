@@ -18,7 +18,9 @@ comparison measures routing overhead only. Timing is PAIRED (each
 operation's two sides measured back-to-back in one loop) and each phase
 reports the median of `BENCH_SQL_REPS` repetitions, so scheduler noise
 mostly cancels out of the ratio. Emits `BENCH_sql.json`; the batched-insert
-overhead must stay ≤ 2x (ISSUE 4 acceptance).
+overhead must stay ≤ 2x (ISSUE 4 acceptance), and the PREPARE/EXECUTE
+point-read path must beat the raw point SELECT's overhead (ISSUE 5: the
+cached plan route amortizes parse+plan across repeated reads).
 """
 from __future__ import annotations
 
@@ -137,6 +139,23 @@ def main() -> None:
     emit(f"sql_point_select_k{k}_n{n}", sql_s / POINT_READS * 1e6,
          f"direct_us={dir_s / POINT_READS * 1e6:.2f};overhead={over:.2f}x")
 
+    # -- prepared point SELECTs (PREPARE once, EXECUTE per read) -------
+    # the EXECUTE path binds into the CACHED plan route: repeated point
+    # reads skip the SELECT parse AND the planner entirely, which is most
+    # of the front-end overhead the raw point SELECT pays
+    ex.execute_one(
+        "PREPARE pt AS SELECT label FROM topics WHERE id = ? AND view = ?")
+    sql_s, dir_s, over = pooled(
+        [(f"EXECUTE pt ({i}, {v})",
+          lambda i=i, v=v: direct.engine.hybrid_label(v, i))
+         for i, v in reads])
+    results["prepared_point"] = {
+        "sql_stmt_per_s": POINT_READS / sql_s,
+        "direct_calls_per_s": POINT_READS / dir_s,
+        "overhead_x": over, "reads": POINT_READS}
+    emit(f"sql_prepared_point_k{k}_n{n}", sql_s / POINT_READS * 1e6,
+         f"direct_us={dir_s / POINT_READS * 1e6:.2f};overhead={over:.2f}x")
+
     # -- band scans (label-predicate membership) -----------------------
     sql_s, dir_s, over = pooled(
         [(f"SELECT id FROM topics WHERE class = {c}",
@@ -176,6 +195,11 @@ def main() -> None:
     assert np.array_equal(facade.counts(), direct.engine.all_members())
     # acceptance: batched-insert front-end overhead stays ≤ 2x direct
     assert results["insert"]["overhead_x"] <= 2.0, results["insert"]
+    # acceptance (ISSUE 5): PREPARE/EXECUTE amortizes parse+plan — the
+    # prepared point-read overhead must beat the raw SELECT's
+    assert (results["prepared_point"]["overhead_x"]
+            < results["point_select"]["overhead_x"]), \
+        (results["prepared_point"], results["point_select"])
 
 
 if __name__ == "__main__":

@@ -1,0 +1,218 @@
+"""Storage-tier sweep: memory_budget vs hit rate / read-path latency.
+
+The §3.5.2/Fig. 8 claim this measures: with the entity table on disk
+(mmap'd `EntityStore`) and only a FRACTION of it allowed in memory
+(`BufferPool` budget), hybrid point reads still answer almost entirely
+from the in-memory tiers, because (a) the waters short-circuit resolves
+most probes with no row access at all and (b) reorganization re-warms the
+pool along the eps clustering order, so the band rows — the only rows
+probes can miss on — are exactly the resident ones.
+
+Two corpora, per the paper's experimental families:
+  * cora_like  — the multiclass corpus (k one-vs-all views over ONE
+                 table, `MultiViewEngine`), swept over
+                 memory_budget ∈ {5%, 10%, 25%, 100%} of the table bytes;
+  * FC         — the paper-scale forest corpus family (binary, k = 1
+                 `HazyEngine`), same sweep.
+
+Each budgeted run is compared against an all-in-RAM twin on the SAME
+insert/read stream (read latency ratio), and against an eager all-in-RAM
+twin for label exactness — the acceptance bar: at the 10% budget on
+cora_like, >= 90% of probes answer from waters/buffer/pool (<= 10% cold
+disk reads) and labels are BIT-IDENTICAL to the eager path. Emits
+``BENCH_storage.json`` (gated by benchmarks/check_regress.py).
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from benchmarks.common import BENCH_SCALE, corpus as bench_corpus, emit
+from repro.core import MulticlassView, sgd_step, zero_model
+from repro.core.engine import PROBE_TIERS
+from repro.core.hazy import HazyEngine
+from repro.data import cora_like, example_stream, multiclass_example_stream
+from repro.storage import BufferPool, EntityStore
+
+BATCH = int(os.environ.get("BENCH_STORAGE_BATCH", "16"))
+READS_PER_ROUND = int(os.environ.get("BENCH_STORAGE_READS", "12"))
+BUFFER_FRAC = float(os.environ.get("BENCH_STORAGE_BUFFER", "0.05"))
+BUDGETS = (0.05, 0.10, 0.25, 1.00)
+ACCEPT_BUDGET = 0.10          # the ISSUE 5 acceptance point
+ACCEPT_NON_DISK = 0.90
+
+
+def _pool(F, frac):
+    return BufferPool(EntityStore.from_array(F), max(1, int(frac * F.nbytes)))
+
+
+# ---------------------------------------------------------------------------
+# cora_like sweep: k one-vs-all views on MultiViewEngine
+# ---------------------------------------------------------------------------
+
+def _cora_workload():
+    c = cora_like(scale=BENCH_SCALE / 0.1)
+    n = c.features.shape[0]
+    n_updates = max(160, int(2000 * (BENCH_SCALE / 0.1)))
+    stream = multiclass_example_stream(c, seed=13)
+    inserts = [next(stream) for _ in range(n_updates)]
+    r = np.random.default_rng(17)
+    rounds = [(inserts[j:j + BATCH], r.integers(0, n, READS_PER_ROUND))
+              for j in range(0, len(inserts), BATCH)]
+    return c, rounds
+
+
+def _run_cora(c, rounds, policy, pool=None):
+    view = MulticlassView(c.features, c.num_classes, policy=policy,
+                          buffer_frac=BUFFER_FRAC, p=2.0, q=2.0, lr=0.1,
+                          cost_mode="measured", store=pool)
+    eng = view.engine
+    read_s, n_reads = 0.0, 0
+    for chunk, reads in rounds:
+        view.insert_examples([i for i, _ in chunk], [cl for _, cl in chunk])
+        t0 = time.perf_counter()
+        for i in reads:
+            eng.hybrid_labels_of(int(i)) if policy == "hybrid" \
+                else eng.labels_of(int(i))
+        read_s += time.perf_counter() - t0
+        n_reads += len(reads)
+    return view, read_s, n_reads
+
+
+def _sweep_cora():
+    c, rounds = _cora_workload()
+    n, k = c.features.shape[0], c.num_classes
+    base_view, base_read_s, n_reads = _run_cora(c, rounds, "hybrid")
+    eager_view, _, _ = _run_cora(c, rounds, "eager")
+    base_read_us = base_read_s / n_reads * 1e6
+    out = {"n": n, "d": int(c.features.shape[1]), "k": k,
+           "table_bytes": int(c.features.nbytes),
+           "reads": n_reads, "buffer_frac": BUFFER_FRAC,
+           "baseline_in_ram": {"read_us": base_read_us},
+           "budgets": {}}
+    accept = None
+    for frac in BUDGETS:
+        pool = _pool(c.features, frac)
+        view, read_s, _ = _run_cora(c, rounds, "hybrid", pool=pool)
+        eng = view.engine
+        hits = eng.hybrid_hits.copy()        # snapshot before verification
+        stats = pool.stats()
+        total = float(max(1, hits.sum()))
+        fr = {t: float(h) / total for t, h in zip(PROBE_TIERS, hits)}
+        non_disk = 1.0 - fr["disk"]
+        # exactness: bit-identical to the eager all-in-RAM path
+        identical = True
+        for i in range(n):
+            labs, _ = eng.hybrid_labels_of(i)
+            if not np.array_equal(labs, eager_view.engine.labels_of(i)):
+                identical = False
+                break
+        read_us = read_s / n_reads * 1e6
+        out["budgets"][f"{frac:.2f}"] = {
+            "budget_bytes": stats["budget_bytes"],
+            "read_us": read_us,
+            "read_us_vs_in_ram": read_us / max(base_read_us, 1e-9),
+            "tier_fractions": fr,
+            "non_disk_fraction": non_disk,
+            "hit_rate": stats["hit_rate"],
+            "evictions": stats["evictions"],
+            "cold_page_reads": stats["misses"],
+            "labels_bit_identical_to_eager": identical,
+        }
+        emit(f"storage_cora_budget{int(frac * 100)}_k{k}_n{n}", read_us,
+             f"non_disk={non_disk:.3f};hit_rate={stats['hit_rate']:.3f};"
+             f"evictions={stats['evictions']}")
+        assert identical, f"budget {frac}: labels diverged from eager"
+        if frac == ACCEPT_BUDGET:
+            accept = non_disk
+    return out, accept
+
+
+# ---------------------------------------------------------------------------
+# FC sweep: the paper-scale binary corpus family on HazyEngine (k = 1)
+# ---------------------------------------------------------------------------
+
+def _sweep_fc():
+    c, _pq = bench_corpus("FC")
+    n = c.features.shape[0]
+    n_updates = max(160, int(1200 * (BENCH_SCALE / 0.1)))
+    stream = example_stream(c, seed=31, label_noise=0.0)
+    updates = [next(stream) for _ in range(n_updates)]
+    r = np.random.default_rng(37)
+    read_ids = r.integers(0, n, max(200, n_updates))
+    out = {"n": n, "d": int(c.features.shape[1]), "k": 1,
+           "table_bytes": int(c.features.nbytes), "budgets": {}}
+
+    def run(pool):
+        eng = HazyEngine(c.features, p=2.0, q=2.0, policy="hybrid",
+                         buffer_frac=BUFFER_FRAC, store=pool)
+        model = zero_model(c.features.shape[1])
+        for j, (_, f, y) in enumerate(updates):
+            model = sgd_step(model, f, y, lr=0.05, l2=1e-3)
+            if (j + 1) % BATCH == 0 or j + 1 == len(updates):
+                eng.apply_model(model)
+        t0 = time.perf_counter()
+        tiers = np.zeros(len(PROBE_TIERS), np.int64)
+        names = list(PROBE_TIERS)
+        for i in read_ids:
+            _, how = eng.hybrid_label(int(i))
+            tiers[names.index(how)] += 1
+        return eng, model, tiers, time.perf_counter() - t0
+
+    _, _, _, base_s = run(None)
+    base_read_us = base_s / len(read_ids) * 1e6
+    out["baseline_in_ram"] = {"read_us": base_read_us}
+    for frac in BUDGETS:
+        pool = _pool(c.features, frac)
+        eng, model, tiers, dt = run(pool)
+        stats = pool.stats()
+        total = float(max(1, tiers.sum()))
+        fr = {t: float(h) / total for t, h in zip(PROBE_TIERS, tiers)}
+        non_disk = 1.0 - fr["disk"]
+        truth = np.where(c.features @ model.w - model.b >= 0, 1, -1)
+        sample = np.arange(0, n, max(1, n // 500))
+        identical = all(eng.hybrid_label(int(i))[0] == truth[i]
+                        for i in sample)
+        read_us = dt / len(read_ids) * 1e6
+        out["budgets"][f"{frac:.2f}"] = {
+            "budget_bytes": stats["budget_bytes"],
+            "read_us": read_us,
+            "read_us_vs_in_ram": read_us / max(base_read_us, 1e-9),
+            "tier_fractions": fr,
+            "non_disk_fraction": non_disk,
+            "hit_rate": stats["hit_rate"],
+            "evictions": stats["evictions"],
+            "cold_page_reads": stats["misses"],
+            "labels_bit_identical_to_eager": identical,
+        }
+        emit(f"storage_fc_budget{int(frac * 100)}_n{n}", read_us,
+             f"non_disk={non_disk:.3f};hit_rate={stats['hit_rate']:.3f}")
+        assert identical, f"FC budget {frac}: labels diverged"
+    return out
+
+
+def main() -> None:
+    cora, accept_non_disk = _sweep_cora()
+    fc = _sweep_fc()
+    payload = {
+        "workload": {"n": cora["n"], "k": cora["k"], "scale": BENCH_SCALE,
+                     "batch": BATCH, "reads_per_round": READS_PER_ROUND,
+                     "budgets": list(BUDGETS)},
+        "corpora": {"cora_like": cora, "FC": fc},
+        "acceptance": {"budget": ACCEPT_BUDGET,
+                       "non_disk_fraction": accept_non_disk,
+                       "required": ACCEPT_NON_DISK},
+    }
+    with open("BENCH_storage.json", "w") as f:
+        json.dump(payload, f, indent=2)
+    # ISSUE 5 acceptance: at 10% of the table in memory, >= 90% of hybrid
+    # point reads answer without a cold disk read
+    assert accept_non_disk is not None and accept_non_disk >= ACCEPT_NON_DISK, \
+        f"non-disk fraction {accept_non_disk} < {ACCEPT_NON_DISK} at 10% budget"
+
+
+if __name__ == "__main__":
+    main()

@@ -53,9 +53,17 @@ from typing import NamedTuple, Tuple
 
 import numpy as np
 
-# hybrid tier codes returned by the §3.5.2 probes (index into HYBRID_TIERS)
+# hybrid tier codes returned by the §3.5.2 probes (index into HYBRID_TIERS).
+# The pure algorithm knows three tiers: waters short-circuit, hot buffer,
+# and "the feature row was touched" (disk). When a shell backs that touch
+# with a real `repro.storage.BufferPool`, the touch subdivides physically
+# into a pool hit (page resident in the budgeted pool) vs a cold disk
+# read — code TIER_POOL, name PROBE_TIERS[3]. The functional core never
+# models storage, so HYBRID_TIERS stays 3-long.
 HYBRID_TIERS = ("water", "buffer", "disk")
 TIER_WATER, TIER_BUFFER, TIER_DISK = 0, 1, 2
+TIER_POOL = 3
+PROBE_TIERS = HYBRID_TIERS + ("pool",)
 
 
 # ---------------------------------------------------------------------------

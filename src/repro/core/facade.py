@@ -31,16 +31,20 @@ misses.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.engine import (band_partition, covering_windows,
+from repro.core.engine import (PROBE_TIERS, band_partition, covering_windows,
                                waters_update)
 from repro.core.multiclass import MulticlassView, sgd_all_views
 from repro.core.view import ClassificationView
 
-TIERS = ("water", "buffer", "disk", "map")
+# "pool" = probe miss answered by a resident page of the memory-budgeted
+# storage tier (repro.storage.BufferPool); "disk" = a COLD page read. For
+# views without a storage tier the pool counter simply stays at zero and
+# "disk" keeps meaning "touched the in-RAM feature table".
+TIERS = ("water", "buffer", "pool", "disk", "map")
 
 
 def _new_tier_hits() -> Dict[str, int]:
@@ -116,6 +120,12 @@ class EngineFacade:
     @property
     def disk_touches(self) -> int:
         raise NotImplementedError
+
+    def storage_stats(self) -> Optional[dict]:
+        """Buffer-pool residency/counter snapshot of the view's storage
+        tier (`BufferPool.stats()`), or None when the feature table is
+        fully in RAM. `SHOW STORAGE` renders this."""
+        return None
 
     def top_margins(self, view: int = 0, limit: int = 10,
                     descending: bool = True
@@ -244,6 +254,10 @@ class SingleViewFacade(EngineFacade):
     def disk_touches(self):
         return int(self.view.engine.disk_touches)
 
+    def storage_stats(self):
+        store = getattr(self.view.engine, "store", None)
+        return store.stats() if store is not None else None
+
     def top_margins(self, view=0, limit=10, descending=True):
         eng = self.view.engine
         m = self.view.model
@@ -294,7 +308,7 @@ class MultiViewFacade(EngineFacade):
         eng = self.mc.engine
         if self.policy == "hybrid":
             labels, codes = eng.hybrid_labels_of(int(entity_id))
-            hows = [("water", "buffer", "disk")[c] for c in codes]
+            hows = [PROBE_TIERS[c] for c in codes]
         else:
             labels = eng.labels_of(int(entity_id))
             hows = ["map"] * self.num_views
@@ -352,6 +366,10 @@ class MultiViewFacade(EngineFacade):
     @property
     def disk_touches(self):
         return int(self.mc.engine.disk_touches)
+
+    def storage_stats(self):
+        store = getattr(self.mc.engine, "store", None)
+        return store.stats() if store is not None else None
 
     def top_margins(self, view=0, limit=10, descending=True):
         eng = self.mc.engine

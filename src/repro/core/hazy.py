@@ -66,7 +66,7 @@ class HazyEngine:
     def __init__(self, features: np.ndarray, *, p: float = float("inf"),
                  q: float = 1.0, alpha: float = 1.0, policy: str = "eager",
                  cost_mode: str = "measured", touch_ns: float = 0.0,
-                 buffer_frac: float = 0.0):
+                 buffer_frac: float = 0.0, store=None):
         assert policy in ("eager", "lazy", "hybrid")
         self.F = np.ascontiguousarray(features, np.float32)
         self.n, self.d = self.F.shape
@@ -82,7 +82,14 @@ class HazyEngine:
         self.buffer_frac = buffer_frac
         self._buffer_lo = 0
         self._buffer_hi = 0
-        self.disk_touches = 0      # hybrid probes that read a feature row
+        # optional memory-budgeted storage tier (repro.storage.BufferPool):
+        # when set, every probe the waters cannot resolve reads through the
+        # pool ("pool" = page resident, "disk" = cold page read) and the
+        # hot buffer is served from PINNED pool pages. Maintenance scans
+        # (reorg/relabel) stream F directly — the budget governs the
+        # §3.5.2 point-read path, exactly the paper's Fig. 8 economics.
+        self.store = store
+        self.disk_touches = 0      # probes that paid a COLD feature-row read
         # initial organization (free S estimate)
         t0 = time.perf_counter()
         self._do_reorganize()
@@ -120,6 +127,18 @@ class HazyEngine:
         if self.buffer_frac:
             self._buffer_lo, self._buffer_hi = hot_buffer_window(
                 self.eps_sorted, int(self.buffer_frac * self.n))
+        if self.store is not None:
+            self._rewarm_store()
+
+    def _rewarm_store(self):
+        """Re-warm the pool along the NEW clustering order (the paper's
+        index idea: the eps order is the locality order). The hot-buffer
+        window's pages are pinned; then pages are prefetched in
+        boundary-outward eps order — the rows most likely to miss the
+        waters short-circuit (the band) — until the budget is full."""
+        self.store.repin_rows(self.perm[self._buffer_lo:self._buffer_hi])
+        order = self.perm[np.argsort(np.abs(self.eps_sorted), kind="stable")]
+        self.store.warm(order)
 
     def reorganize(self):
         t0 = time.perf_counter()
@@ -255,9 +274,22 @@ class HazyEngine:
         t = int(probe_partition(e, self.waters.lw, self.waters.hw))
         if t != 0:
             return t, "water"
-        if self._buffer_lo <= pos < self._buffer_hi:
-            z = self.F_sorted[pos] @ self.model.w - self.model.b
+        if self._buffer_lo <= pos < self._buffer_hi and (
+                self.store is None or self.store.resident(entity_id)):
+            # hot buffer: with a storage tier this is a PINNED pool page
+            # (never a separately materialized copy). A window wider than
+            # the budget leaves its tail unpinned — those rows are not "in
+            # the buffer" and fall through to the pool/disk tiers below.
+            f = (self.store.get_row(entity_id) if self.store is not None
+                 else self.F_sorted[pos])
+            z = f @ self.model.w - self.model.b
             return int(classify(z)), "buffer"
+        if self.store is not None:            # "go to disk" via the pool
+            f, how = self.store.touch(entity_id)
+            if how == "disk":
+                self.disk_touches += 1        # cold page reads only
+            z = f @ self.model.w - self.model.b
+            return int(classify(z)), how
         z = self.F[entity_id] @ self.model.w - self.model.b   # "go to disk"
         self.disk_touches += 1     # charged as disk_touches * touch_ns by
         return int(classify(z)), "disk"   # callers (sleep is too coarse)

@@ -62,13 +62,17 @@ class MulticlassView:
                  l2: float = 1e-4, alpha: float = 1.0,
                  p: float = float("inf"), q: float = 1.0,
                  cost_mode: str = "measured", touch_ns: float = 0.0,
-                 buffer_frac: float = 0.0, vectorized: bool = True):
+                 buffer_frac: float = 0.0, vectorized: bool = True,
+                 store=None):
         self.F = np.asarray(features, np.float32)
         self.k = num_classes
         self.lr, self.l2 = lr, l2
         if policy == "hybrid" and not buffer_frac:
             buffer_frac = 0.01            # paper §4.2 default: 1% in memory
         self.vectorized = bool(vectorized) and engine == "hazy"
+        if store is not None and not self.vectorized:
+            raise ValueError("the storage tier (store=) requires the "
+                             "vectorized MultiViewEngine")
         if self.vectorized:
             self.W = np.zeros((num_classes, self.F.shape[1]), np.float32)
             self.b = np.zeros(num_classes, np.float64)
@@ -76,7 +80,8 @@ class MulticlassView:
                                           alpha=alpha, policy=policy,
                                           cost_mode=cost_mode,
                                           touch_ns=touch_ns,
-                                          buffer_frac=buffer_frac)
+                                          buffer_frac=buffer_frac,
+                                          store=store)
             self.engines = None
         else:
             self._models = [zero_model(self.F.shape[1])

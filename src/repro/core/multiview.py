@@ -62,10 +62,11 @@ from typing import Optional, Tuple
 
 import numpy as np
 
-from repro.core.engine import (HYBRID_TIERS, TIER_BUFFER, TIER_DISK,
-                               TIER_WATER, band_partition, classify,
-                               hot_buffer_window, probe_partition, row_norms,
-                               skiing_charge, skiing_due, waters_update)
+from repro.core.engine import (HYBRID_TIERS, PROBE_TIERS, TIER_BUFFER,
+                               TIER_DISK, TIER_POOL, TIER_WATER,
+                               band_partition, classify, hot_buffer_window,
+                               probe_partition, row_norms, skiing_charge,
+                               skiing_due, waters_update)
 from repro.core.hazy import Stats
 from repro.core.skiing import alpha_star
 from repro.core.waters import holder_M
@@ -77,7 +78,8 @@ class MultiViewEngine:
     def __init__(self, features: np.ndarray, num_views: int, *,
                  p: float = float("inf"), q: float = 1.0, alpha: float = 1.0,
                  policy: str = "eager", cost_mode: str = "measured",
-                 touch_ns: float = 0.0, buffer_frac: float = 0.0):
+                 touch_ns: float = 0.0, buffer_frac: float = 0.0,
+                 store=None):
         assert policy in ("eager", "lazy", "hybrid")
         self.F = np.ascontiguousarray(features, np.float32)
         self.n, self.d = self.F.shape
@@ -112,11 +114,16 @@ class MultiViewEngine:
         self.buffer_cap = max(1, int(buffer_frac * n)) if buffer_frac else 0
         self.buffer_lo = np.zeros(k, np.int64)
         self.buffer_hi = np.zeros(k, np.int64)
+        # optional memory-budgeted storage tier (repro.storage.BufferPool):
+        # when set, the hot buffers are PINNED pool pages (no materialized
+        # buffer_F copies) and probe misses read through the pool, which
+        # subdivides the "disk" touch into pool hit vs cold page read.
+        self.store = store
         self.buffer_F: Optional[np.ndarray] = (
             np.zeros((k, self.buffer_cap, self.d), np.float32)
-            if self.buffer_cap else None)
-        self.hybrid_hits = np.zeros(3, np.int64)  # cumulative per-tier probes
-        self.disk_touches = 0                     # shared F-row reads by probes
+            if self.buffer_cap and store is None else None)
+        self.hybrid_hits = np.zeros(len(PROBE_TIERS), np.int64)  # per-tier probes
+        self.disk_touches = 0        # COLD shared F-row reads by probes
         self._arange_k = np.arange(k)
 
         # Initial organization of all k views; the measured wall time seeds
@@ -164,7 +171,10 @@ class MultiViewEngine:
             if self.buffer_cap:
                 blo, bhi = hot_buffer_window(self.eps_sorted[v], self.buffer_cap)
                 self.buffer_lo[v], self.buffer_hi[v] = blo, bhi
-                self.buffer_F[v, :bhi - blo] = self.F[order[blo:bhi]]
+                if self.buffer_F is not None:
+                    self.buffer_F[v, :bhi - blo] = self.F[order[blo:bhi]]
+        if self.store is not None:
+            self._rewarm_store()
         self.W_stored[views] = self.W[views]
         self.b_stored[views] = self.b[views]
         self.lw[views] = 0.0
@@ -180,6 +190,23 @@ class MultiViewEngine:
             self.stats.reorgs += int(views.size)
             self.reorg_counts[views] += 1
             self.stats.reorg_seconds += wall
+
+    def _rewarm_store(self):
+        """Re-warm the pool along the new clustering order: pin the pages
+        of every view's hot-buffer window, then prefetch pages of entities
+        in the SHARED boundary-outward order (ascending min_v |eps_v| —
+        the same locality order the sharded scratch table clusters by)
+        until the budget is full."""
+        if self.buffer_cap:
+            hot = np.concatenate(
+                [self.perm[v, self.buffer_lo[v]:self.buffer_hi[v]]
+                 for v in range(self.k)])
+        else:
+            hot = np.empty(0, np.int64)
+        self.store.repin_rows(hot)
+        eps_entity = np.take_along_axis(self.eps_sorted, self.inv_perm, axis=1)
+        order = np.argsort(np.min(np.abs(eps_entity), axis=0), kind="stable")
+        self.store.warm(order)
 
     # ------------------------------------------------------------------
     # One maintenance round (all k views)
@@ -353,11 +380,25 @@ class MultiViewEngine:
         if t != 0:
             self.hybrid_hits[TIER_WATER] += 1
             return t, "water"
-        if self.buffer_cap and self.buffer_lo[view] <= pos < self.buffer_hi[view]:
-            f = self.buffer_F[view, pos - self.buffer_lo[view]]
+        if self.buffer_cap \
+                and self.buffer_lo[view] <= pos < self.buffer_hi[view] \
+                and (self.store is None or self.store.resident(entity_id)):
+            # with a storage tier the hot buffer is a PINNED pool page; a
+            # window wider than the budget leaves its tail unpinned — those
+            # rows are NOT "in the buffer" and fall to the pool/disk tiers
+            f = (self.store.get_row(entity_id) if self.store is not None
+                 else self.buffer_F[view, pos - self.buffer_lo[view]])
             z = f @ self.W[view] - np.float32(self.b[view])
             self.hybrid_hits[TIER_BUFFER] += 1
             return int(classify(z)), "buffer"
+        if self.store is not None:           # probe miss -> the buffer pool
+            f, how = self.store.touch(entity_id)
+            tier = TIER_POOL if how == "pool" else TIER_DISK
+            if tier == TIER_DISK:
+                self.disk_touches += 1       # cold page reads only
+            z = f @ self.W[view] - np.float32(self.b[view])
+            self.hybrid_hits[tier] += 1
+            return int(classify(z)), PROBE_TIERS[tier]
         z = self.F[entity_id] @ self.W[view] - np.float32(self.b[view])
         self.disk_touches += 1     # charged as disk_touches * touch_ns by
         self.hybrid_hits[TIER_DISK] += 1   # callers; time.sleep granularity
@@ -382,28 +423,44 @@ class MultiViewEngine:
             return t.copy(), np.zeros(self.k, np.int8)
         labels = t.copy()
         how = np.zeros(self.k, np.int8)
-        if self.buffer_cap:
+        if self.buffer_cap and (self.store is None
+                                or self.store.resident(entity_id)):
             in_buf = miss & (self.buffer_lo <= pos) & (pos < self.buffer_hi)
             bviews = np.flatnonzero(in_buf)
             if bviews.size:
-                rows = self.buffer_F[bviews, pos[bviews] - self.buffer_lo[bviews]]
-                z = np.einsum("vd,vd->v", rows, self.W[bviews]) \
-                    - self.b[bviews].astype(np.float32)
+                if self.store is not None:
+                    # ONE pinned-pool-page read serves every buffered view
+                    f = self.store.get_row(entity_id)
+                    z = self.W[bviews] @ f - self.b[bviews].astype(np.float32)
+                else:
+                    rows = self.buffer_F[bviews,
+                                         pos[bviews] - self.buffer_lo[bviews]]
+                    z = np.einsum("vd,vd->v", rows, self.W[bviews]) \
+                        - self.b[bviews].astype(np.float32)
                 labels[bviews] = classify(z)
                 how[bviews] = TIER_BUFFER
                 miss = miss & ~in_buf
         dviews = np.flatnonzero(miss)
         if dviews.size:
-            f = self.F[entity_id]          # the ONE shared feature touch
-            self.disk_touches += 1         # callers charge touch_ns per touch
+            if self.store is not None:     # the ONE shared touch, via the pool
+                f, how_s = self.store.touch(entity_id)
+                code = TIER_POOL if how_s == "pool" else TIER_DISK
+                if code == TIER_DISK:
+                    self.disk_touches += 1        # cold page reads only
+            else:
+                f = self.F[entity_id]      # the ONE shared feature touch
+                code = TIER_DISK
+                self.disk_touches += 1     # callers charge touch_ns per touch
             z = self.W[dviews] @ f - self.b[dviews].astype(np.float32)
             labels[dviews] = classify(z)
-            how[dviews] = TIER_DISK
-        n_disk = dviews.size
+            how[dviews] = code
+        n_disk = int(np.count_nonzero(how == TIER_DISK))
+        n_pool = int(np.count_nonzero(how == TIER_POOL))
         n_buffer = int(np.count_nonzero(how == TIER_BUFFER))
-        self.hybrid_hits[TIER_WATER] += self.k - n_buffer - n_disk
+        self.hybrid_hits[TIER_WATER] += self.k - n_buffer - n_disk - n_pool
         self.hybrid_hits[TIER_BUFFER] += n_buffer
         self.hybrid_hits[TIER_DISK] += n_disk
+        self.hybrid_hits[TIER_POOL] += n_pool
         return labels, how
 
     # ------------------------------------------------------------------

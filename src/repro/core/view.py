@@ -29,7 +29,8 @@ class ClassificationView:
                  norm: Tuple[float, float] = (float("inf"), 1.0),
                  lr: float = 0.1, l2: float = 1e-4, alpha: float = 1.0,
                  buffer_frac: float = 0.01, engine: str = "hazy",
-                 cost_mode: str = "measured", touch_ns: float = 0.0):
+                 cost_mode: str = "measured", touch_ns: float = 0.0,
+                 store=None):
         self.feature_fn = feature_fn
         F = feature_fn(entities) if feature_fn is not None else entities
         self.F = np.asarray(F, np.float32)
@@ -48,8 +49,12 @@ class ClassificationView:
             self._engine_kwargs = dict(
                 p=p, q=q, alpha=alpha, policy=policy, cost_mode=cost_mode,
                 touch_ns=touch_ns,
-                buffer_frac=buffer_frac if self.hybrid else 0.0)
+                buffer_frac=buffer_frac if self.hybrid else 0.0,
+                store=store)
         else:
+            if store is not None:
+                raise ValueError("the storage tier (store=) requires "
+                                 "engine='hazy'")
             self._engine_kwargs = dict(
                 policy="lazy" if self.hybrid else policy, touch_ns=touch_ns)
         self.engine = self._make_engine()
@@ -109,6 +114,21 @@ class ClassificationView:
             self._entities = entities
         F = self.feature_fn(self._entities) if self.feature_fn else self._entities
         self.F = np.asarray(F, np.float32)
+        old_pool = self._engine_kwargs.get("store")
+        if old_pool is not None:
+            # the storage tier mirrors F on disk: rebuild it over the new
+            # rows at the SAME budget/page geometry. Only the POOL is
+            # dropped here — its EntityStore may be shared with sibling
+            # views on the same base table (the catalog hands every
+            # budgeted view one store per table), so closing it is the
+            # owner's job; an orphaned temp-file store cleans itself up
+            # when garbage-collected.
+            from repro.storage import BufferPool, EntityStore
+            self._engine_kwargs["store"] = BufferPool(
+                EntityStore.from_array(self.F,
+                                       page_bytes=old_pool.store.page_bytes),
+                old_pool.budget_bytes)
+            old_pool.close()
         self.engine = self._make_engine()   # same ctor kwargs: q, touch_ns,
         self.engine.apply_model(self.model)  # alpha … all survive the rebuild
 

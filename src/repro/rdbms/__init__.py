@@ -17,8 +17,9 @@ surface for our engines:
                  (`python -m repro.launch.serve --mode sql`)
 """
 from repro.rdbms.ast_nodes import (Commit, CreateTable, CreateView, Delete,
-                                   Explain, Insert, Select, Show, Update,
-                                   UpdateModel, Where)
+                                   ExecutePrepared, Explain, Insert, Param,
+                                   Prepare, Select, Show, Update, UpdateModel,
+                                   Where)
 from repro.rdbms.catalog import Catalog, PlanError, SqlError
 from repro.rdbms.executor import Executor, Result
 from repro.rdbms.lexer import LexError

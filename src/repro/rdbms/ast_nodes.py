@@ -16,6 +16,13 @@ class SqlError(Exception):
     """Base of every front-end error (lex, parse, plan, execution)."""
 
 
+@dataclasses.dataclass(frozen=True)
+class Param:
+    """A `?` placeholder inside a PREPAREd statement, numbered in parse
+    order; EXECUTE binds positional values over these."""
+    index: int
+
+
 @dataclasses.dataclass
 class Where:
     """Conjunction of the supported predicates (any subset may be set)."""
@@ -90,8 +97,25 @@ class Explain:
 
 @dataclasses.dataclass
 class Show:
-    what: str                              # "tables" | "views"
+    what: str                              # "tables" | "views" | "storage"
+
+
+@dataclasses.dataclass
+class Prepare:
+    """PREPARE name AS <statement with ? placeholders>."""
+    name: str
+    stmt: Statement
+    n_params: int = 0
+
+
+@dataclasses.dataclass
+class ExecutePrepared:
+    """EXECUTE name (v1, v2, ...) — binds and runs a prepared statement,
+    reusing its cached plan route (point reads skip parse AND plan)."""
+    name: str
+    params: List[float] = dataclasses.field(default_factory=list)
 
 
 Statement = Union[CreateTable, CreateView, Insert, Update, Delete,
-                  UpdateModel, Commit, Select, Explain, Show]
+                  UpdateModel, Commit, Select, Explain, Show, Prepare,
+                  ExecutePrepared]

@@ -15,6 +15,14 @@ builds one of the three engine shells behind an `EngineFacade` —
 WITH-options map straight onto the engine ctor knobs: policy (eager/lazy/
 hybrid), k, buffer_frac, p, q, alpha, lr, l2, cost_mode (measured/modeled),
 touch_ns. Unknown options raise instead of being silently dropped.
+
+`memory_budget` attaches the real storage tier (§3.5.2/Fig. 8 economics):
+the base table's feature rows live in an on-disk `EntityStore` (one
+memory-mapped file per table, SHARED by every budgeted view on it) and
+the view gets its own `BufferPool` over those pages — values in (0, 1]
+are a fraction of the entity table's bytes, values > 1 are bytes.
+`page_bytes` picks the page geometry (default 8 KiB). `SHOW STORAGE`
+renders each view's pool residency and hit/miss/eviction counters.
 """
 from __future__ import annotations
 
@@ -40,10 +48,21 @@ class BaseTable:
     features: np.ndarray                      # (n, d) float32
     truth: Optional[np.ndarray] = None        # ground-truth labels/classes
     num_classes: int = 2                      # 2 = binary (±1 labels)
+    # on-disk entity stores, keyed by page_bytes — built lazily on the
+    # first memory-budgeted view and SHARED by every pool on this table
+    stores: Dict[int, object] = dataclasses.field(default_factory=dict)
 
     @property
     def n(self) -> int:
         return self.features.shape[0]
+
+    def entity_store(self, page_bytes: int):
+        from repro.storage import EntityStore
+        es = self.stores.get(int(page_bytes))
+        if es is None:
+            es = EntityStore.from_array(self.features, page_bytes=page_bytes)
+            self.stores[int(page_bytes)] = es
+        return es
 
 
 @dataclasses.dataclass
@@ -56,7 +75,8 @@ class ViewDef:
 
 
 _VIEW_OPTIONS = {"policy", "k", "engine", "buffer_frac", "p", "q", "alpha",
-                 "lr", "l2", "cost_mode", "touch_ns", "cap_frac"}
+                 "lr", "l2", "cost_mode", "touch_ns", "cap_frac",
+                 "memory_budget", "page_bytes"}
 
 
 class Catalog:
@@ -129,6 +149,25 @@ class Catalog:
         cost_mode = opts.pop("cost_mode", "measured")
         touch_ns = float(opts.pop("touch_ns", 0.0))
         cap_frac = float(opts.pop("cap_frac", 0.5))
+        memory_budget = opts.pop("memory_budget", None)
+        page_bytes = int(opts.pop("page_bytes", 0)) or None
+
+        store = None
+        if memory_budget is not None:
+            if engine == "sharded":
+                raise PlanError("memory_budget requires engine=hazy or "
+                                "engine=multiview (the sharded engine keeps "
+                                "its scratch table device-resident)")
+            mb = float(memory_budget)
+            if mb <= 0:
+                raise PlanError("memory_budget must be positive (a fraction "
+                                "in (0, 1] of the entity table, or bytes)")
+            budget = int(mb * t.features.nbytes) if mb <= 1.0 else int(mb)
+            from repro.storage import PAGE_BYTES, BufferPool
+            store = BufferPool(t.entity_store(page_bytes or PAGE_BYTES),
+                               budget)
+        elif page_bytes is not None:
+            raise PlanError("page_bytes only applies with memory_budget")
 
         if model == "logistic" and engine != "hazy":
             # MulticlassView/ShardedFacade train hinge SVM only; a view
@@ -143,13 +182,13 @@ class Catalog:
             cv = ClassificationView(
                 t.features, method=model, policy=policy, norm=(p, q),
                 lr=lr, l2=l2, alpha=alpha, buffer_frac=buffer_frac,
-                cost_mode=cost_mode, touch_ns=touch_ns)
+                cost_mode=cost_mode, touch_ns=touch_ns, store=store)
             facade: EngineFacade = SingleViewFacade(cv)
         elif engine == "multiview":
             mc = MulticlassView(
                 t.features, k, policy=policy, lr=lr, l2=l2, alpha=alpha,
                 p=p, q=q, cost_mode=cost_mode, touch_ns=touch_ns,
-                buffer_frac=buffer_frac, vectorized=True)
+                buffer_frac=buffer_frac, vectorized=True, store=store)
             facade = MultiViewFacade(mc)
         elif engine == "sharded":
             if policy != "eager":

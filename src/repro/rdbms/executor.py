@@ -23,8 +23,9 @@ from typing import List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.rdbms.ast_nodes import (Commit, CreateTable, CreateView, Delete,
-                                   Explain, Insert, Select, Show, SqlError,
-                                   Statement, Update, UpdateModel, Where)
+                                   ExecutePrepared, Explain, Insert, Param,
+                                   Prepare, Select, Show, SqlError, Statement,
+                                   Update, UpdateModel, Where)
 from repro.rdbms.catalog import Catalog, PlanError
 from repro.rdbms.parser import parse
 from repro.rdbms.planner import Plan, _resolve_view_index, plan_statement
@@ -53,11 +54,53 @@ class Result:
         return "\n".join(lines) + f"\n({len(self.rows)} rows)"
 
 
+@dataclasses.dataclass
+class _Prepared:
+    """A PREPAREd template plus its cached route: the first EXECUTE plans
+    once; later EXECUTEs bind parameters and go straight to the physical
+    operator — point reads skip parse AND plan."""
+    stmt: Statement
+    n_params: int
+    plan: Optional[Plan] = None
+
+
+def _bind(stmt: Statement, params: Sequence[float]) -> Statement:
+    """Substitute positional parameters for the `?` placeholders of a
+    prepared template (the template itself is never mutated)."""
+    def val(x, as_int=False):
+        if isinstance(x, Param):
+            v = params[x.index]
+            return int(v) if as_int else v
+        return x
+
+    if isinstance(stmt, Select):
+        w = stmt.where
+        if w is not None:
+            label = val(w.label, True) if w.label is not None else None
+            if label is not None and label not in (1, -1):
+                raise SqlError(f"label parameter must be 1 or -1, "
+                               f"got {label}")
+            w = Where(
+                ids=None if w.ids is None else [val(i, True) for i in w.ids],
+                label=label,
+                cls=val(w.cls, True) if w.cls is not None else None,
+                view=val(w.view, True) if w.view is not None else None)
+        limit = val(stmt.limit, True) if stmt.limit is not None else None
+        return dataclasses.replace(stmt, where=w, limit=limit)
+    if isinstance(stmt, Update):
+        return dataclasses.replace(stmt, entity_id=val(stmt.entity_id, True),
+                                   label=float(val(stmt.label)))
+    if isinstance(stmt, Delete):
+        return dataclasses.replace(stmt, entity_id=val(stmt.entity_id, True))
+    return stmt
+
+
 class Executor:
     def __init__(self, catalog: Optional[Catalog] = None, *,
                  group_commit: int = 64, wal_path: Optional[str] = None):
         self.catalog = catalog if catalog is not None else Catalog()
         self.log = UpdateLog(group_size=group_commit, path=wal_path)
+        self.prepared: dict[str, _Prepared] = {}
 
     # -- entry points --------------------------------------------------
     def execute(self, sql: str) -> List[Result]:
@@ -117,13 +160,77 @@ class Executor:
                 return Result(("table", "n", "d"),
                               [(t.name, t.n, t.features.shape[1])
                                for t in self.catalog.tables.values()])
+            if stmt.what == "storage":
+                return self._show_storage()
             return Result(("view", "table", "k", "policy"),
                           [(v.name, v.table, v.facade.num_views,
                             v.facade.policy)
                            for v in self.catalog.views.values()])
+        if isinstance(stmt, Prepare):
+            if stmt.name in self.prepared:
+                raise SqlError(f"prepared statement {stmt.name!r} already "
+                               f"exists")
+            self.prepared[stmt.name] = _Prepared(stmt.stmt, stmt.n_params)
+            return Result(("prepared", "params"),
+                          [(stmt.name, stmt.n_params)])
+        if isinstance(stmt, ExecutePrepared):
+            return self._execute_prepared(stmt)
         if isinstance(stmt, Select):
             return self._select(stmt)
         raise SqlError(f"cannot execute {type(stmt).__name__}")
+
+    def _show_storage(self) -> Result:
+        """One row per view: the storage tier's residency and counters
+        (views without a memory budget report the whole table in RAM)."""
+        cols = ("view", "policy", "budget_bytes", "table_bytes",
+                "pages_resident", "pages_total", "pinned_pages", "hits",
+                "misses", "evictions", "hit_rate")
+        rows = []
+        for v in self.catalog.views.values():
+            st = v.facade.storage_stats()
+            if st is None:
+                n_bytes = self.catalog.table(v.table).features.nbytes
+                rows.append((v.name, v.facade.policy, "in-ram", n_bytes,
+                             "-", "-", "-", "-", "-", "-", "-"))
+            else:
+                rows.append((v.name, v.facade.policy, st["budget_bytes"],
+                             st["table_bytes"], st["pages_resident"],
+                             st["pages_total"], st["pinned_pages"],
+                             st["hits"], st["misses"], st["evictions"],
+                             f"{st['hit_rate']:.3f}"))
+        return Result(cols, rows)
+
+    def execute_prepared(self, name: str,
+                         params: Sequence[float] = ()) -> Result:
+        """Programmatic EXECUTE: bind + run a prepared statement without
+        any SQL text (the zero-parse path for embedders)."""
+        return self._execute_prepared(ExecutePrepared(name, list(params)))
+
+    def _execute_prepared(self, ex: ExecutePrepared) -> Result:
+        ps = self.prepared.get(ex.name)
+        if ps is None:
+            raise SqlError(f"unknown prepared statement {ex.name!r}")
+        if len(ex.params) != ps.n_params:
+            raise SqlError(f"prepared statement {ex.name!r} takes "
+                           f"{ps.n_params} parameter(s), got "
+                           f"{len(ex.params)}")
+        bound = _bind(ps.stmt, ex.params)
+        if isinstance(bound, Select) and bound.where is not None \
+                and bound.where.ids is not None and not bound.count:
+            # the amortized point route: read-your-writes flush, then the
+            # cached plan — repeated EXECUTEs skip parse AND plan, paying
+            # only a cheap id-range guard
+            vd = self.catalog.view(bound.view)
+            f = vd.facade
+            self.log.flush(self.catalog, vd.table)
+            if ps.plan is None:
+                ps.plan = plan_statement(bound, self.catalog, self.log)
+            else:
+                for i in bound.where.ids:
+                    if not (0 <= i < f.n):
+                        raise PlanError(f"id = {i} out of range (n = {f.n})")
+            return self._select_point(bound, f, bound.where, ps.plan)
+        return self.execute_statement(bound)
 
     # -- SELECT --------------------------------------------------------
     def _select(self, sel: Select) -> Result:

@@ -24,6 +24,7 @@ KEYWORDS = {
     "with", "from", "corpus", "insert", "into", "values", "update", "set",
     "where", "delete", "commit", "select", "explain", "order", "by",
     "limit", "asc", "desc", "and", "in", "count", "show", "tables", "views",
+    "storage", "prepare", "execute", "as",
 }
 
 _TOKEN_RE = re.compile(r"""
@@ -31,7 +32,7 @@ _TOKEN_RE = re.compile(r"""
   | (?P<number>[+-]?(?:\d+\.?\d*|\.\d+)(?:[eE][+-]?\d+)?|[+-]?inf(?![A-Za-z_0-9]))
   | (?P<ident>[A-Za-z_][A-Za-z_0-9]*)
   | (?P<string>'[^']*')
-  | (?P<punct>[(),=*;])
+  | (?P<punct>[(),=*;?])
 """, re.VERBOSE)
 
 

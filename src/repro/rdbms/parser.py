@@ -12,10 +12,14 @@ Grammar (keywords case-insensitive, statements `;`-separated):
   SELECT cols | COUNT(*) FROM v [WHERE pred [AND pred ...]]
          [ORDER BY margin [ASC|DESC]] [LIMIT n]
   EXPLAIN <any statement>
-  SHOW TABLES | SHOW VIEWS
+  SHOW TABLES | SHOW VIEWS | SHOW STORAGE
+  PREPARE p AS <statement with ? placeholders>
+  EXECUTE p [(v1, v2, ...)]
 
   cols: * | id | view | label | margin | class  (comma-separated)
   pred: id = i | id IN (i, ...) | label = ±1 | class = c | view = v
+  Inside PREPARE, any number position in a predicate / LIMIT / SET may be
+  a `?` placeholder (numbered left to right); EXECUTE binds them.
 """
 from __future__ import annotations
 
@@ -23,8 +27,9 @@ from math import isfinite
 from typing import List, Optional
 
 from repro.rdbms.ast_nodes import (Commit, CreateTable, CreateView, Delete,
-                                   Explain, Insert, Select, Show, SqlError,
-                                   Statement, Update, UpdateModel, Where)
+                                   ExecutePrepared, Explain, Insert, Param,
+                                   Prepare, Select, Show, SqlError, Statement,
+                                   Update, UpdateModel, Where)
 from repro.rdbms.lexer import Token, tokenize
 
 COLUMNS = ("id", "view", "label", "margin", "class")
@@ -42,6 +47,8 @@ class _Parser:
     def __init__(self, tokens: List[Token]):
         self.toks = tokens
         self.i = 0
+        self._prepare_depth = 0      # > 0 while parsing a PREPARE body
+        self._n_params = 0           # ? placeholders seen in that body
 
     # -- token helpers -------------------------------------------------
     def peek(self) -> Token:
@@ -89,6 +96,22 @@ class _Parser:
             return True
         return False
 
+    def number_or_param(self):
+        """A literal number, or (inside PREPARE only) a `?` placeholder."""
+        t = self.peek()
+        if t.kind == "PUNCT" and t.value == "?":
+            self.next()
+            if not self._prepare_depth:
+                raise ParseError(f"'?' placeholder outside PREPARE at {t.pos}")
+            p = Param(self._n_params)
+            self._n_params += 1
+            return p
+        return self.expect_number()
+
+    @staticmethod
+    def _as_int(v):
+        return v if isinstance(v, Param) else int(v)
+
     # -- grammar -------------------------------------------------------
     def statements(self) -> List[Statement]:
         out: List[Statement] = []
@@ -124,11 +147,40 @@ class _Parser:
         if t.value == "show":
             self.next()
             what = self.next()
-            if what.value not in ("tables", "views"):
-                raise ParseError(f"SHOW TABLES or SHOW VIEWS, got "
-                                 f"{what.value!r}")
+            if what.value not in ("tables", "views", "storage"):
+                raise ParseError(f"SHOW TABLES, SHOW VIEWS or SHOW STORAGE, "
+                                 f"got {what.value!r}")
             return Show(what.value)
+        if t.value == "prepare":
+            return self.prepare()
+        if t.value == "execute":
+            return self.execute_prepared()
         raise ParseError(f"unknown statement {t.value!r} at {t.pos}")
+
+    def prepare(self) -> Prepare:
+        self.expect_kw("prepare")
+        name = self.expect_name()
+        self.expect_kw("as")
+        self._prepare_depth += 1
+        self._n_params = 0
+        try:
+            inner = self.statement()
+        finally:
+            self._prepare_depth -= 1
+        if isinstance(inner, (Prepare, ExecutePrepared)):
+            raise ParseError("cannot PREPARE a PREPARE/EXECUTE statement")
+        return Prepare(name, inner, self._n_params)
+
+    def execute_prepared(self) -> ExecutePrepared:
+        self.expect_kw("execute")
+        name = self.expect_name()
+        params: List[float] = []
+        if self.maybe_punct("("):
+            params.append(self.expect_number())
+            while self.maybe_punct(","):
+                params.append(self.expect_number())
+            self.expect_punct(")")
+        return ExecutePrepared(name, params)
 
     def with_options(self) -> dict:
         opts: dict = {}
@@ -230,14 +282,15 @@ class _Parser:
         if col not in ("label", "class"):
             raise ParseError(f"can only SET label/class, got {col!r}")
         self.expect_punct("=")
-        y = self.expect_number()
+        y = self.number_or_param()
         self.expect_kw("where")
         idcol = self.expect_name()
         if idcol != "id":
             raise ParseError(f"UPDATE needs WHERE id = n, got {idcol!r}")
         self.expect_punct("=")
-        i = self.expect_number()
-        return Update(table, int(i), float(y))
+        i = self.number_or_param()
+        return Update(table, self._as_int(i),
+                      y if isinstance(y, Param) else float(y))
 
     def delete(self) -> Delete:
         self.expect_kw("delete")
@@ -248,8 +301,7 @@ class _Parser:
         if idcol != "id":
             raise ParseError(f"DELETE needs WHERE id = n, got {idcol!r}")
         self.expect_punct("=")
-        i = self.expect_number()
-        return Delete(table, int(i))
+        return Delete(table, self._as_int(self.number_or_param()))
 
     def select(self) -> Select:
         self.expect_kw("select")
@@ -291,7 +343,7 @@ class _Parser:
         limit: Optional[int] = None
         if self.at_kw("limit"):
             self.next()
-            limit = int(self.expect_number())
+            limit = self._as_int(self.number_or_param())
         return Select(view, columns, count=count, where=where,
                       order_by=order_by, descending=desc, limit=limit)
 
@@ -304,25 +356,25 @@ class _Parser:
                 if self.at_kw("in"):
                     self.next()
                     self.expect_punct("(")
-                    ids = [int(self.expect_number())]
+                    ids = [self._as_int(self.number_or_param())]
                     while self.maybe_punct(","):
-                        ids.append(int(self.expect_number()))
+                        ids.append(self._as_int(self.number_or_param()))
                     self.expect_punct(")")
                     w.ids = ids
                 else:
                     self.expect_punct("=")
-                    w.ids = [int(self.expect_number())]
+                    w.ids = [self._as_int(self.number_or_param())]
             elif col == "label":
                 self.expect_punct("=")
-                w.label = int(self.expect_number())
-                if w.label not in (1, -1):
+                w.label = self._as_int(self.number_or_param())
+                if not isinstance(w.label, Param) and w.label not in (1, -1):
                     raise ParseError("label predicate must be 1 or -1")
             elif col == "class":
                 self.expect_punct("=")
-                w.cls = int(self.expect_number())
+                w.cls = self._as_int(self.number_or_param())
             elif col == "view":
                 self.expect_punct("=")
-                w.view = int(self.expect_number())
+                w.view = self._as_int(self.number_or_param())
             else:
                 raise ParseError(f"unsupported predicate column {col!r}")
             if not self.at_kw("and"):

@@ -28,8 +28,8 @@ import dataclasses
 from typing import Optional
 
 from repro.rdbms.ast_nodes import (Commit, CreateTable, CreateView, Delete,
-                                   Explain, Insert, Select, Show, Update,
-                                   UpdateModel, Where)
+                                   ExecutePrepared, Explain, Insert, Prepare,
+                                   Select, Show, Update, UpdateModel, Where)
 from repro.rdbms.catalog import Catalog, PlanError
 
 
@@ -105,10 +105,15 @@ def plan_select(sel: Select, catalog: Catalog) -> Plan:
             return Plan("point", "margin(feature-row)", n_ids,
                         f"ids={n_ids}", view=sel.view)
         if f.policy == "hybrid":
-            # probe miss probability = band fraction; misses touch F once
+            # probe miss probability = band fraction; misses touch the
+            # storage tier once (a budgeted buffer pool when the view has
+            # one — resident page = pool hit, else a cold disk page read)
             est = max(0 if band == 0 else 1,
                       round(n_ids * band / max(1, n)))
-            return Plan("point", "probe(water->buffer->disk)", est,
+            tier = ("probe(water->buffer->pool->disk)"
+                    if f.storage_stats() is not None
+                    else "probe(water->buffer->disk)")
+            return Plan("point", tier, est,
                         f"ids={n_ids};band={band};n={n}", view=sel.view)
         pend = bool(f.pending()[v])
         return Plan("point", "eps-map" + ("+catch-up" if pend else ""),
@@ -185,6 +190,13 @@ def plan_statement(stmt, catalog: Catalog, log=None) -> Plan:
                     stmt.options.get("policy", "eager"))
     if isinstance(stmt, Show):
         return Plan("show", "catalog", 0, stmt.what)
+    if isinstance(stmt, Prepare):
+        # the template may hold ? placeholders — planning happens at the
+        # first EXECUTE, and the route is cached from then on
+        return Plan("prepare", "statement-cache", 0,
+                    f"{stmt.name};params={stmt.n_params}")
+    if isinstance(stmt, ExecutePrepared):
+        return Plan("execute", "prepared(cached-route)", 0, stmt.name)
     if isinstance(stmt, Explain):
         return plan_statement(stmt.stmt, catalog, log)
     raise PlanError(f"cannot plan {type(stmt).__name__}")

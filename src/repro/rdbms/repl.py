@@ -16,10 +16,13 @@ BANNER = """HAZY SQL — classification views inside the relational front-end.
 Statements end with ';'.  Try:
   CREATE TABLE papers FROM CORPUS cora_like WITH (scale = 0.1);
   CREATE CLASSIFICATION VIEW topics ON papers USING MODEL svm
-      WITH (policy = hybrid, k = 7);
+      WITH (policy = hybrid, k = 7, memory_budget = 0.1);
   INSERT INTO papers (id, class) VALUES (0, 3), (1, 0);
   SELECT id, view, label FROM topics WHERE id = 0;
   EXPLAIN SELECT label FROM topics WHERE id = 0 AND view = 3;
+  PREPARE pt AS SELECT label FROM topics WHERE id = ? AND view = ?;
+  EXECUTE pt (0, 3);
+  SHOW STORAGE;
 Ctrl-D to exit."""
 
 

@@ -1,0 +1,31 @@
+"""Memory-budgeted storage tier behind the §3.5.2 hybrid probe.
+
+The paper's third contribution (§3.5.2/Fig. 8) is an index structure that
+lets the system keep only a *fraction* of the entities in memory; until
+this package existed, our "disk" probe tier was backed by the fully
+in-RAM feature table, so the hit-rate numbers measured probe routing but
+not storage economics. This package supplies the missing physical layer:
+
+  * `EntityStore` (store.py) — an on-disk entity table: fixed-stride
+    float32 feature rows in one memory-mapped file, split into pages, with
+    a page directory keyed by entity id. Reading a page is the unit of
+    "disk" I/O.
+  * `BufferPool` (pool.py) — a byte-denominated memory budget over those
+    pages: clock (second-chance) eviction, pin counts (the §3.5.2 hot
+    buffers are PINNED pool pages, never separately materialized copies),
+    prefetch-warming along the eps clustering order (the paper's index
+    idea: the eps order IS the locality order), and per-tier hit / miss /
+    eviction counters that make `BENCH_storage.json` mean something
+    physical.
+
+The engine shells (`core/hazy.py`, `core/multiview.py`) take an optional
+`store=BufferPool(...)`; when present, every probe that the waters cannot
+resolve goes through `BufferPool.get_row(entity_id)` instead of an in-RAM
+`F[id]` index, and the probe reports tier "pool" (page was resident) or
+"disk" (cold page read). `CREATE CLASSIFICATION VIEW ... WITH
+(memory_budget = ...)` and `SHOW STORAGE` expose residency through SQL.
+"""
+from repro.storage.pool import BufferPool
+from repro.storage.store import PAGE_BYTES, EntityStore
+
+__all__ = ["BufferPool", "EntityStore", "PAGE_BYTES"]

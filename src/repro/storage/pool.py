@@ -1,0 +1,223 @@
+"""Buffer pool: a byte-denominated memory budget over `EntityStore` pages.
+
+Semantics (the §3.5.2 storage economics, made physical):
+
+  * `get_row(id)` / `touch(id)` — the probe read path. A resident page is
+    a HIT ("pool" tier: answered from memory); a non-resident page is a
+    MISS ("disk" tier: one `EntityStore.read_page` cold read, then the
+    page is admitted and the budget enforced by eviction).
+  * eviction — clock (second-chance): a sweep clears reference bits and
+    evicts the first unreferenced, UNPINNED frame. Pinned frames are
+    never evicted, whatever the budget says; if everything is pinned the
+    pool overcommits rather than corrupting a pin.
+  * pins — the §3.5.2 hot buffers are pinned pool pages. `repin_rows`
+    pins the pages covering the new hot-buffer window (faulting them in
+    as prefetches, not misses) before unpinning the old window, capped so
+    pins alone never exceed the budget.
+  * `warm(ids)` — prefetch pages of `ids` IN ORDER until the budget is
+    full, never evicting. Reorganization calls this with the entities in
+    boundary-outward eps order: the rows most likely to miss the waters
+    (the band) are exactly the rows made resident — the paper's index
+    idea, the eps order IS the locality order.
+
+Counters reconcile by construction: hits + misses == probes (every
+`get_row`/`touch` call is exactly one of the two); warming is counted
+separately as `prefetches`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterable, List, Tuple
+
+import numpy as np
+
+from repro.storage.store import EntityStore
+
+
+@dataclasses.dataclass
+class Frame:
+    data: np.ndarray           # (rows_in_page, d) float32, private copy
+    pin_count: int = 0
+    ref: bool = True           # clock reference bit
+
+
+class BufferPool:
+    def __init__(self, store: EntityStore, budget_bytes: int):
+        self.store = store
+        # the pool must be able to hold at least one page
+        self.budget_bytes = max(int(budget_bytes), store.page_bytes)
+        self.frames: Dict[int, Frame] = {}
+        self._clock: List[int] = []                # page ids, clock order
+        self._hand = 0
+        self.resident_bytes = 0
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+        self.prefetches = 0
+        self._hot_pins: List[int] = []             # pages pinned for hot buffers
+
+    # -- read path -----------------------------------------------------
+    @property
+    def probes(self) -> int:
+        return self.hits + self.misses
+
+    def resident(self, entity_id: int) -> bool:
+        return int(self.store.dir_page[entity_id]) in self.frames
+
+    def touch(self, entity_id: int) -> Tuple[np.ndarray, str]:
+        """Read one entity row; returns (row, "pool"|"disk")."""
+        pid = int(self.store.dir_page[entity_id])
+        slot = int(self.store.dir_slot[entity_id])
+        fr = self.frames.get(pid)
+        if fr is not None:
+            fr.ref = True
+            self.hits += 1
+            return fr.data[slot], "pool"
+        self.misses += 1
+        fr = self._admit(pid)
+        return fr.data[slot], "disk"
+
+    def get_row(self, entity_id: int) -> np.ndarray:
+        return self.touch(entity_id)[0]
+
+    # -- admission / eviction ------------------------------------------
+    def _admit(self, pid: int, *, prefetch: bool = False) -> Frame:
+        fr = Frame(self.store.read_page(pid))
+        self.frames[pid] = fr
+        self._clock.append(pid)
+        self.resident_bytes += fr.data.nbytes
+        if prefetch:
+            self.prefetches += 1
+        else:
+            self._evict_to_budget()
+        return fr
+
+    def _evict_to_budget(self):
+        """Clock sweep until resident_bytes <= budget or nothing is
+        evictable (all frames pinned -> overcommit rather than drop a pin)."""
+        skipped = 0
+        while self.resident_bytes > self.budget_bytes and self._clock:
+            if skipped > 2 * len(self._clock):
+                break                               # only pinned frames left
+            if self._hand >= len(self._clock):
+                self._hand = 0
+            pid = self._clock[self._hand]
+            fr = self.frames[pid]
+            if fr.pin_count > 0:
+                self._hand += 1
+                skipped += 1
+                continue
+            if fr.ref:
+                fr.ref = False                      # second chance
+                self._hand += 1
+                skipped += 1
+                continue
+            del self.frames[pid]
+            self._clock.pop(self._hand)             # hand now at the next frame
+            self.resident_bytes -= fr.data.nbytes
+            self.evictions += 1
+            skipped = 0
+
+    # -- pins (hot buffers) --------------------------------------------
+    def _ordered_pages(self, entity_ids: Iterable[int]) -> np.ndarray:
+        """Unique pages of `entity_ids`, in first-appearance order. Fully
+        vectorized: callers hand this the whole n-entity eps order on
+        every reorganization, so any Python-loop dedup here would put an
+        O(n) pass on the maintenance path. Consumers iterate the result
+        lazily and break as soon as the budget is spent."""
+        ids = np.asarray(entity_ids
+                         if isinstance(entity_ids, np.ndarray)
+                         else list(entity_ids), np.int64)
+        if ids.size == 0:
+            return ids
+        pages = self.store.dir_page[ids]
+        _, first = np.unique(pages, return_index=True)
+        return pages[np.sort(first)]
+
+    def pinned_bytes(self) -> int:
+        return sum(fr.data.nbytes for fr in self.frames.values()
+                   if fr.pin_count > 0)
+
+    def pin_rows(self, entity_ids: Iterable[int]) -> List[int]:
+        """Pin the pages covering `entity_ids` (in first-appearance order),
+        faulting absent ones in as prefetches. Pins are capped so that the
+        pinned set alone never exceeds the budget (at least one page is
+        always pinned if any id was given). Returns the pinned page ids."""
+        pinned: List[int] = []
+        budget_left = self.budget_bytes - self.pinned_bytes()
+        for pid in self._ordered_pages(entity_ids):
+            pid = int(pid)
+            size = self.store.page_nbytes(pid)
+            if pinned and size > budget_left:
+                break
+            fr = self.frames.get(pid)
+            if fr is None:
+                fr = self._admit(pid, prefetch=True)
+            fr.pin_count += 1
+            fr.ref = True
+            pinned.append(pid)
+            budget_left -= size
+        if pinned:
+            self._evict_to_budget()
+        return pinned
+
+    def unpin(self, page_ids: Iterable[int]):
+        for pid in page_ids:
+            fr = self.frames.get(pid)
+            if fr is not None and fr.pin_count > 0:
+                fr.pin_count -= 1
+
+    def repin_rows(self, entity_ids: Iterable[int]):
+        """Move the hot-buffer pin set to the pages of `entity_ids`. The
+        OLD window is unpinned first so its pages release their budget
+        claim before the new window's pin cap is computed — otherwise a
+        full-budget window would cap its own replacement at ~one page.
+        Nothing can evict in between (eviction only runs inside an
+        admission), and overlap pages are still resident when re-pinned."""
+        self.unpin(self._hot_pins)
+        self._hot_pins = self.pin_rows(entity_ids)
+        self._evict_to_budget()
+
+    # -- warming -------------------------------------------------------
+    def warm(self, entity_ids: Iterable[int]):
+        """Prefetch the pages of `entity_ids` IN ORDER until the budget is
+        full; never evicts (already-resident pages just get a reference)."""
+        for pid in self._ordered_pages(entity_ids):
+            pid = int(pid)
+            fr = self.frames.get(pid)
+            if fr is not None:
+                fr.ref = True
+                continue
+            if self.resident_bytes + self.store.page_nbytes(pid) \
+                    > self.budget_bytes:
+                break
+            self._admit(pid, prefetch=True)
+
+    # -- introspection -------------------------------------------------
+    def stats(self) -> dict:
+        probes = self.probes
+        return {
+            "budget_bytes": self.budget_bytes,
+            "table_bytes": self.store.nbytes,
+            "page_bytes": self.store.page_bytes,
+            "pages_total": self.store.num_pages,
+            "pages_resident": len(self.frames),
+            "resident_bytes": self.resident_bytes,
+            "pinned_pages": sum(1 for fr in self.frames.values()
+                                if fr.pin_count > 0),
+            "hits": self.hits,
+            "misses": self.misses,
+            "evictions": self.evictions,
+            "prefetches": self.prefetches,
+            "probes": probes,
+            "hit_rate": self.hits / probes if probes else 1.0,
+        }
+
+    def close(self):
+        """Drop every frame (the shared `EntityStore` is closed by its
+        owner — several pools may share one store)."""
+        self.frames.clear()
+        self._clock.clear()
+        self._hand = 0
+        self.resident_bytes = 0
+        self._hot_pins = []

@@ -1,0 +1,103 @@
+"""On-disk entity store: fixed-stride feature rows + a page directory.
+
+One file holds the whole entity table as contiguous float32 rows (stride
+= d * 4 bytes), memory-mapped read-only. Rows are grouped into pages of
+`rows_per_page` consecutive entity ids; `read_page` materializes one page
+into private memory and is the unit of "disk" I/O the `BufferPool`
+budgets (and counts). The page directory maps entity id -> (page, slot)
+explicitly, so the layout could become non-dense later without touching
+the pool.
+
+The store is deliberately read-only: the maintenance write path (labels,
+eps, permutations) lives in the engines' scratch state, exactly as the
+paper separates the clustered scratch table H from the entity relation.
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+from typing import Optional
+
+import numpy as np
+
+PAGE_BYTES = 8192          # default page size (rows are grouped to ~8 KiB)
+
+
+class EntityStore:
+    """Memory-mapped (n, d) float32 entity table, paged by entity id."""
+
+    def __init__(self, path: str, n: int, d: int, rows_per_page: int, *,
+                 owns_file: bool = False):
+        self.path = path
+        self.n, self.d = int(n), int(d)
+        self.stride = self.d * 4                      # bytes per row
+        self.rows_per_page = max(1, int(rows_per_page))
+        self.page_bytes = self.rows_per_page * self.stride
+        self.num_pages = -(-self.n // self.rows_per_page)
+        self._owns = owns_file
+        self._mmap: Optional[np.memmap] = np.memmap(
+            path, dtype=np.float32, mode="r", shape=(self.n, self.d))
+        # page directory keyed by entity id: id -> (page, slot)
+        ids = np.arange(self.n, dtype=np.int64)
+        self.dir_page = ids // self.rows_per_page
+        self.dir_slot = (ids % self.rows_per_page).astype(np.int32)
+        self.page_reads = 0                           # cold I/O counter
+
+    @classmethod
+    def from_array(cls, F: np.ndarray, path: Optional[str] = None,
+                   page_bytes: int = PAGE_BYTES) -> "EntityStore":
+        """Write `F` to `path` (a private temp file if None) and mmap it."""
+        F = np.ascontiguousarray(F, np.float32)
+        n, d = F.shape
+        assert d >= 1, "entity rows must have at least one feature"
+        rows_per_page = max(1, int(page_bytes) // (d * 4))
+        owns = path is None
+        if owns:
+            fd, path = tempfile.mkstemp(prefix="hazy-entity-", suffix=".f32")
+            os.close(fd)
+        F.tofile(path)
+        return cls(path, n, d, rows_per_page, owns_file=owns)
+
+    # -- geometry ------------------------------------------------------
+    @property
+    def nbytes(self) -> int:
+        return self.n * self.stride
+
+    def page_of(self, entity_id: int) -> int:
+        return int(self.dir_page[entity_id])
+
+    def slot_of(self, entity_id: int) -> int:
+        return int(self.dir_slot[entity_id])
+
+    def page_nbytes(self, page_id: int) -> int:
+        lo = page_id * self.rows_per_page
+        return (min(self.n, lo + self.rows_per_page) - lo) * self.stride
+
+    def page_row_ids(self, page_id: int) -> np.ndarray:
+        lo = page_id * self.rows_per_page
+        return np.arange(lo, min(self.n, lo + self.rows_per_page))
+
+    # -- I/O -----------------------------------------------------------
+    def read_page(self, page_id: int) -> np.ndarray:
+        """Materialize one page into private memory — the 'disk read'."""
+        if self._mmap is None:
+            raise ValueError("entity store is closed")
+        lo = page_id * self.rows_per_page
+        hi = min(self.n, lo + self.rows_per_page)
+        self.page_reads += 1
+        return np.array(self._mmap[lo:hi])            # copy out of the mmap
+
+    def close(self):
+        if self._mmap is not None:
+            self._mmap = None
+            if self._owns:
+                try:
+                    os.unlink(self.path)
+                except OSError:
+                    pass
+
+    def __del__(self):
+        try:
+            self.close()
+        except Exception:
+            pass

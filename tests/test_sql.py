@@ -717,6 +717,117 @@ def test_plan_errors():
     assert ex2.execute_one("SELECT id, class FROM w WHERE id = 1").rows
 
 
+def test_prepared_point_select_equals_direct_and_caches_route():
+    """PREPARE/EXECUTE: identical rows to the equivalent SELECT, the plan
+    route cached after the first EXECUTE (repeats skip parse+plan), and
+    the guards still fire (arity, unknown name, id range)."""
+    c, catalog, ex = _warm_executor(seed=44)
+    n = c.features.shape[0]
+    res = ex.execute_one("PREPARE pt AS SELECT label FROM v WHERE id = ?")
+    assert res.rows == [("pt", 1)]
+    assert ex.prepared["pt"].plan is None        # planned lazily
+    first = ex.execute_one("EXECUTE pt (3)")
+    cached = ex.prepared["pt"].plan
+    assert cached is not None and cached.kind == "point"
+    rng = np.random.default_rng(45)
+    for i in rng.integers(0, n, 25):
+        got = ex.execute_one(f"EXECUTE pt ({int(i)})").rows
+        want = ex.execute_one(f"SELECT label FROM v WHERE id = {int(i)}").rows
+        assert got == want, i
+    assert ex.prepared["pt"].plan is cached      # route reused, not re-planned
+    # read-your-writes still holds on the cached route
+    j = int(rng.integers(0, n))
+    ex.execute_one(f"INSERT INTO t (id, label) VALUES ({j}, {int(c.labels[j])})")
+    got = ex.execute_one(f"EXECUTE pt ({j})").rows[0][0]
+    assert got == int(np.sign(0.5 + np.sign(
+        c.features[j] @ catalog.view("v").facade.view.model.w
+        - catalog.view("v").facade.view.model.b)))
+    # programmatic zero-parse path agrees
+    assert ex.execute_prepared("pt", [j]).rows == [(got,)]
+    from repro.rdbms import SqlError
+    with pytest.raises(SqlError):
+        ex.execute_one("EXECUTE pt (1, 2)")      # wrong arity
+    with pytest.raises(SqlError):
+        ex.execute_one("EXECUTE nope (1)")       # unknown name
+    with pytest.raises(PlanError):
+        ex.execute_one(f"EXECUTE pt ({n + 5})")  # cached route keeps the guard
+    with pytest.raises(ParseError):
+        ex.execute_one("SELECT label FROM v WHERE id = ?")   # ? needs PREPARE
+    with pytest.raises(SqlError):
+        ex.execute_one("PREPARE pt AS SELECT label FROM v WHERE id = ?")
+
+
+def test_prepared_non_point_statements_bind_params():
+    c, catalog, ex = _warm_executor(seed=46)
+    ex.execute_one("PREPARE cnt AS SELECT count(*) FROM v WHERE label = ?")
+    pos = ex.execute_one("EXECUTE cnt (1)").rows[0][0]
+    neg = ex.execute_one("EXECUTE cnt (-1)").rows[0][0]
+    assert pos + neg == c.features.shape[0]
+    from repro.rdbms import SqlError
+    with pytest.raises(SqlError):
+        ex.execute_one("EXECUTE cnt (2)")        # label must bind to ±1
+    ex.execute_one("PREPARE upd AS UPDATE t SET label = ? WHERE id = ?")
+    ex.execute_one("EXECUTE upd (1, 5)")
+    ex.execute_one("COMMIT")                     # flushes through the WAL
+    assert any(r.op == "update" and r.entity_id == 5 for r in ex.log.history)
+
+
+def test_memory_budget_view_tier_counters_reconcile():
+    """SQL acceptance for the storage tier: a hybrid view WITH
+    memory_budget answers point SELECTs through water/buffer/pool/disk,
+    cold feature reads == the pool's miss count, and SHOW STORAGE renders
+    the pool's residency."""
+    c = synthetic_corpus("stor", 500, 24, seed=47)
+    catalog = Catalog()
+    catalog.register_table("t", c.features, truth=c.labels)
+    catalog.create_view("v", "t", "svm",
+                        {"policy": "hybrid", "p": 2, "q": 2,
+                         "buffer_frac": 0.02, "cost_mode": "modeled",
+                         "memory_budget": 0.1, "page_bytes": 1024})
+    ex = Executor(catalog, group_commit=GROUP)
+    facade = catalog.view("v").facade
+    n = c.features.shape[0]
+    rng = np.random.default_rng(48)
+    for _ in range(12):
+        rows = [(int(rng.integers(0, n)),) for _ in range(GROUP)]
+        ex.execute_one("INSERT INTO t (id, label) VALUES " + ", ".join(
+            f"({i}, {int(c.labels[i])})" for (i,) in rows))
+    st0 = facade.storage_stats()
+    assert st0 is not None and st0["budget_bytes"] == int(0.1 * c.features.nbytes)
+    before = dict(facade.tier_hits)
+    disk_before = facade.disk_touches
+    misses_before = st0["misses"]
+    reads = 200
+    for _ in range(reads):
+        i = int(rng.integers(0, n))
+        ex.execute_one(f"SELECT label FROM v WHERE id = {i}")
+    hits = {t: facade.tier_hits[t] - before[t] for t in facade.tier_hits}
+    assert hits["map"] == 0
+    assert (hits["water"] + hits["buffer"] + hits["pool"]
+            + hits["disk"]) == reads
+    # cold reads are exactly the disk tier; pool hits stayed in memory
+    st1 = facade.storage_stats()
+    assert facade.disk_touches - disk_before == hits["disk"]
+    assert st1["misses"] - misses_before == hits["disk"]
+    # the planner advertises the pool in the probe chain
+    res = ex.execute_one("EXPLAIN SELECT label FROM v WHERE id = 0")
+    assert res.rows[0][1] == "probe(water->buffer->pool->disk)"
+    assert res.rows[1][1] in ("water", "buffer", "pool", "disk")
+    # SHOW STORAGE renders this view's pool, in-RAM views say so
+    catalog.create_view("w", "t", "svm", {"cost_mode": "modeled"})
+    show = ex.execute_one("SHOW STORAGE")
+    by_name = {r[0]: r for r in show.rows}
+    assert by_name["v"][2] == st1["budget_bytes"]
+    assert by_name["w"][2] == "in-ram"
+    # labels stay exact w.r.t. the current model through the pool
+    m = facade.view.model
+    truth = np.where(c.features @ m.w - m.b >= 0, 1, -1)
+    for i in range(0, n, 17):
+        got = ex.execute_one(
+            f"SELECT label FROM v WHERE id = {i}").rows[0][0]
+        assert got == truth[i]
+
+
 def test_repl_run_script(capsys):
     from repro.rdbms.repl import run_script
     ex = run_script("""

@@ -1,0 +1,272 @@
+"""Memory-budgeted storage tier: EntityStore + BufferPool correctness and
+the §3.5.2 probe economics (ISSUE 5).
+
+The non-negotiables:
+  * eviction NEVER drops a pinned (hot-buffer) page, whatever the budget;
+  * `get_row` after an eviction re-reads byte-identical rows from disk;
+  * tier counters reconcile — hits + misses == probes, and the engines'
+    cold `disk_touches` equals the pool's miss count;
+  * hybrid labels under a tiny (5%) budget are BIT-IDENTICAL to the
+    all-in-RAM eager path on the same insert stream.
+"""
+import numpy as np
+import pytest
+
+from repro.core import MulticlassView, sgd_step, zero_model
+from repro.core.engine import TIER_DISK, TIER_POOL
+from repro.core.hazy import HazyEngine
+from repro.data import cora_like, multiclass_example_stream, synthetic_corpus
+from repro.storage import BufferPool, EntityStore
+
+
+def _pool(F, frac, page_bytes=512):
+    store = EntityStore.from_array(F, page_bytes=page_bytes)
+    return BufferPool(store, max(1, int(frac * F.nbytes)))
+
+
+def _features(n=96, d=16, seed=0):
+    return np.random.default_rng(seed).normal(size=(n, d)).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# EntityStore: the mmap'd rows and the page directory are exact
+# ---------------------------------------------------------------------------
+
+def test_store_roundtrip_is_byte_exact():
+    F = _features()
+    store = EntityStore.from_array(F, page_bytes=256)
+    assert store.num_pages == -(-store.n // store.rows_per_page)
+    for i in range(F.shape[0]):
+        pid, slot = store.page_of(i), store.slot_of(i)
+        row = store.read_page(pid)[slot]
+        assert row.tobytes() == F[i].tobytes(), i
+    store.close()
+    with pytest.raises(ValueError):
+        store.read_page(0)
+
+
+def test_store_wide_rows_get_one_row_pages():
+    F = _features(n=8, d=200)               # stride 800 B > 256 B page
+    store = EntityStore.from_array(F, page_bytes=256)
+    assert store.rows_per_page == 1 and store.num_pages == 8
+    pool = BufferPool(store, store.page_bytes)      # budget: ONE page
+    for i in range(8):
+        assert pool.get_row(i).tobytes() == F[i].tobytes()
+    assert len(pool.frames) == 1 and pool.evictions == 7
+
+
+# ---------------------------------------------------------------------------
+# BufferPool: budget, eviction, pins, warming, counters
+# ---------------------------------------------------------------------------
+
+def test_eviction_never_drops_pinned_page():
+    F = _features()
+    pool = _pool(F, 0.10)                   # room for a few pages only
+    budget_pages = pool.budget_bytes // pool.store.page_bytes
+    hot_ids = [0, 1, 2]
+    pool.repin_rows(hot_ids)
+    pinned = set(pool._hot_pins)
+    assert pinned                            # the window really pinned pages
+    for i in range(F.shape[0]):              # sweep the whole table repeatedly
+        pool.get_row(i)
+        assert pinned <= set(pool.frames), i
+        for pid in pinned:
+            assert pool.frames[pid].pin_count > 0
+    assert pool.evictions > 0                # the budget really evicted
+    assert len(pool.frames) <= budget_pages + 1
+    # after unpinning, the pages become evictable again
+    pool.repin_rows([])
+    for i in range(F.shape[0]):
+        pool.get_row(i)
+    assert all(fr.pin_count == 0 for fr in pool.frames.values())
+
+
+def test_repin_keeps_the_full_window_across_reorgs():
+    """Regression: repin_rows must release the OLD window's budget claim
+    before capping the new one — a full-budget window used to cap its own
+    replacement at ~one page, silently unpinning the hot buffer."""
+    F = _features()
+    pool = _pool(F, 0.30)
+    pool.repin_rows(range(0, 24))
+    first = list(pool._hot_pins)
+    assert len(first) > 1
+    for _ in range(3):                       # reorgs with an identical window
+        pool.repin_rows(range(0, 24))
+        assert list(pool._hot_pins) == first
+    # engine-level: the hot window stays fully pinned through reorgs
+    c = cora_like(scale=0.15)
+    epool = _pool(c.features, 0.10, page_bytes=1024)
+    eng = HazyEngine(c.features, p=2.0, q=2.0, policy="hybrid",
+                     buffer_frac=0.03, store=epool)
+    pinned_after_init = len(epool._hot_pins)
+    eng.reorganize()
+    eng.reorganize()
+    assert len(epool._hot_pins) == pinned_after_init > 0
+
+
+def test_refresh_features_does_not_close_a_shared_store():
+    """Regression: two budgeted views share ONE EntityStore per table (the
+    catalog layout); refreshing one view must not brick its sibling."""
+    from repro.core import ClassificationView
+    F1 = _features(n=128, d=16, seed=5)
+    F2 = _features(n=128, d=16, seed=6)
+    store = EntityStore.from_array(F1, page_bytes=512)
+    pool_a = BufferPool(store, 2048)
+    pool_b = BufferPool(store, 2048)
+    va = ClassificationView(F1, policy="hybrid", norm=(2.0, 2.0),
+                            buffer_frac=0.05, store=pool_a)
+    vb = ClassificationView(F1, policy="hybrid", norm=(2.0, 2.0),
+                            buffer_frac=0.05, store=pool_b)
+    va.refresh_features(entities=F2)
+    # sibling pool still reads through the shared store
+    assert pool_b.get_row(3).tobytes() == F1[3].tobytes()
+    # the refreshed view got a NEW store over the NEW rows, same geometry
+    new_pool = va.engine.store
+    assert new_pool is not pool_a and new_pool.store is not store
+    assert new_pool.store.page_bytes == store.page_bytes
+    assert new_pool.budget_bytes == pool_a.budget_bytes
+    assert new_pool.get_row(3).tobytes() == F2[3].tobytes()
+    assert vb.engine.store is pool_b
+
+
+def test_pins_alone_never_exceed_budget():
+    F = _features()
+    pool = _pool(F, 0.10)
+    pool.repin_rows(range(F.shape[0]))       # ask to pin EVERYTHING
+    assert pool.pinned_bytes() <= pool.budget_bytes
+    assert len(pool._hot_pins) >= 1          # but at least one page pinned
+
+
+def test_get_row_after_eviction_rereads_identical_bytes():
+    F = _features()
+    pool = _pool(F, 0.08)
+    first = pool.get_row(0).copy()
+    assert pool.misses == 1
+    evicted_reads = pool.store.page_reads
+    # flood with rows from OTHER pages until page 0 is evicted
+    for i in range(F.shape[0] - 1, pool.store.rows_per_page, -1):
+        pool.get_row(i)
+    assert not pool.resident(0)
+    again = pool.get_row(0)
+    assert again.tobytes() == first.tobytes() == F[0].tobytes()
+    assert pool.store.page_reads > evicted_reads     # it really re-read disk
+
+
+def test_counters_reconcile_and_warm_is_not_a_miss():
+    F = _features()
+    pool = _pool(F, 0.25)
+    pool.warm(range(F.shape[0]))             # prefetches, not misses
+    assert pool.misses == 0 and pool.prefetches > 0
+    assert pool.resident_bytes <= pool.budget_bytes
+    n_calls = 0
+    rng = np.random.default_rng(3)
+    for i in rng.integers(0, F.shape[0], 200):
+        pool.get_row(int(i))
+        n_calls += 1
+    assert pool.hits + pool.misses == pool.probes == n_calls
+    st = pool.stats()
+    assert st["hits"] == pool.hits and st["misses"] == pool.misses
+    assert 0.0 <= st["hit_rate"] <= 1.0
+
+
+def test_full_budget_pool_never_cold_misses_after_warm():
+    F = _features()
+    pool = _pool(F, 1.0)
+    pool.warm(range(F.shape[0]))
+    for i in range(F.shape[0]):
+        _, how = pool.touch(i)
+        assert how == "pool", i
+    assert pool.misses == 0 and pool.evictions == 0
+
+
+# ---------------------------------------------------------------------------
+# Engines over the pool: exactness, pinned hot buffers, tier accounting
+# ---------------------------------------------------------------------------
+
+def _drive_multiclass(c, policy, store=None, rounds=15, batch=16):
+    view = MulticlassView(c.features, c.num_classes, policy=policy,
+                          buffer_frac=0.05, p=2.0, q=2.0, lr=0.1,
+                          cost_mode="modeled", store=store)
+    stream = multiclass_example_stream(c, seed=13)
+    for _ in range(rounds):
+        chunk = [next(stream) for _ in range(batch)]
+        view.insert_examples([i for i, _ in chunk], [cl for _, cl in chunk])
+    return view
+
+
+def test_hybrid_labels_under_5pct_budget_equal_eager_all_in_ram():
+    c = cora_like(scale=0.15)
+    pool = _pool(c.features, 0.05, page_bytes=1024)
+    hyb = _drive_multiclass(c, "hybrid", store=pool)
+    eag = _drive_multiclass(c, "eager")          # all-in-RAM twin, same stream
+    assert np.array_equal(hyb.W, eag.W) and np.array_equal(hyb.b, eag.b)
+    for i in range(c.features.shape[0]):
+        labs, _ = hyb.engine.hybrid_labels_of(i)
+        assert np.array_equal(labs, eag.engine.labels_of(i)), i
+    # the cold fraction was really bounded by the budgeted pool, not RAM
+    assert hyb.engine.disk_touches == pool.misses
+    assert hyb.engine.check_consistent()
+
+
+def test_multiview_tier_counts_reconcile_with_pool():
+    c = cora_like(scale=0.15)
+    pool = _pool(c.features, 0.10, page_bytes=1024)
+    view = _drive_multiclass(c, "hybrid", store=pool)
+    eng = view.engine
+    h0, p0 = eng.hybrid_hits.copy(), pool.stats()
+    rng = np.random.default_rng(7)
+    reads = 150
+    for i in rng.integers(0, c.features.shape[0], reads):
+        v = int(rng.integers(0, c.num_classes))
+        eng.hybrid_label(v, int(i))
+    dh = eng.hybrid_hits - h0
+    assert dh.sum() == reads                 # every probe landed in one tier
+    p1 = pool.stats()
+    # every buffer/pool/disk probe is exactly one pool call; hits landed on
+    # buffer (pinned) + pool tiers, misses are exactly the cold disk tier
+    assert (p1["probes"] - p0["probes"]) == dh[1] + dh[TIER_POOL] + dh[TIER_DISK]
+    assert (p1["misses"] - p0["misses"]) == dh[TIER_DISK]
+    assert (p1["hits"] - p0["hits"]) == dh[1] + dh[TIER_POOL]
+
+
+def test_hot_buffer_reads_are_pinned_pool_hits():
+    c = cora_like(scale=0.15)
+    pool = _pool(c.features, 0.10, page_bytes=1024)
+    view = _drive_multiclass(c, "hybrid", store=pool)
+    eng = view.engine
+    assert eng.buffer_F is None              # no separately materialized copy
+    probed = 0
+    for v in range(eng.k):
+        lo, hi = int(eng.buffer_lo[v]), int(eng.buffer_hi[v])
+        for pos in range(lo, hi, 3):
+            i = int(eng.perm[v, pos])
+            misses_before = pool.misses
+            lab, how = eng.hybrid_label(v, i)
+            if how == "buffer":              # waters may already resolve it,
+                probed += 1                  # unpinned tails fall to pool/disk
+                # a buffer-tier read is served from a resident (pinned)
+                # pool page — NEVER a cold disk read
+                assert pool.misses == misses_before, (v, i)
+    assert probed > 0
+
+
+def test_hazy_store_probe_exact_and_cold_counting():
+    c = synthetic_corpus("hzst", 400, 24, seed=2)
+    pool = _pool(c.features, 0.10, page_bytes=1024)
+    eng = HazyEngine(c.features, p=2.0, q=2.0, policy="hybrid",
+                     buffer_frac=0.05, store=pool)
+    model = zero_model(c.features.shape[1])
+    rng = np.random.default_rng(11)
+    for t in range(200):
+        i = int(rng.integers(0, c.features.shape[0]))
+        model = sgd_step(model, c.features[i], float(c.labels[i]),
+                         lr=0.05, l2=1e-3)
+        eng.apply_model(model)
+    truth = np.where(c.features @ model.w - model.b >= 0, 1, -1)
+    tiers = {"water": 0, "buffer": 0, "pool": 0, "disk": 0}
+    for i in range(c.features.shape[0]):
+        lab, how = eng.hybrid_label(i)
+        assert lab == truth[i], (i, how)
+        tiers[how] += 1
+    assert sum(tiers.values()) == c.features.shape[0]
+    assert eng.disk_touches == pool.misses   # cold reads only
