@@ -25,8 +25,17 @@ handles both explicitly:
     normalization and carry the tightest signal.
 
 Usage:
-  python benchmarks/check_regress.py              # gate (exit 1 on fail)
+  python benchmarks/check_regress.py              # gate all files
+  python benchmarks/check_regress.py BENCH_serve.json   # gate only these
   python benchmarks/check_regress.py --update     # re-seed the baselines
+
+Positional args select a subset of the gated files — CI jobs that produce
+disjoint artifacts (bench-smoke vs serve-smoke) each gate exactly what
+they ran, and a missing artifact in the OTHER job's set is not an error.
+With ``--update`` a selection re-seeds only those files, but the shared
+machine-speed calibration is always re-recorded — partial re-seeds on a
+different machine skew the other baselines, so prefer full ``--update``
+runs from one box.
 """
 from __future__ import annotations
 
@@ -48,6 +57,10 @@ TOLERANCES = {
                              # smoke scale): run-to-run jitter approaches
                              # the standard bound, so only the 2x-class
                              # regressions that matter are actionable
+    "latency_serve": 0.30,   # served p99 (full wire round trip under the
+                             # epoch gate): the tail is the contention
+                             # signal the serve gate exists for, so it
+                             # keeps the standard bound (ISSUE 6)
     "ratio_up": 0.30,        # within-run ratios, higher-is-better — both
     "ratio_down": 0.30,      # sides timed in ONE process, so machine
                              # noise cancels and NO speed normalization
@@ -85,6 +98,9 @@ CHECKS = [
     # any honest tolerance; the read-path latency signal is carried by
     # BENCH_hybrid.json:policies.hybrid.read_path_us, where maintenance
     # amortizes the measurement.
+    ("BENCH_serve.json", "latency_ms.p50", "latency_smoke"),
+    ("BENCH_serve.json", "latency_ms.p99", "latency_serve"),
+    ("BENCH_serve.json", "qps", "throughput"),
 ]
 
 BASELINE_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)),
@@ -161,10 +177,17 @@ def _check_one(kind, fresh, base, speed):
 def main(argv=None) -> int:
     argv = sys.argv[1:] if argv is None else argv
     update = "--update" in argv
+    selected = [a for a in argv if not a.startswith("--")]
+    unknown = [f for f in selected if f not in FILES]
+    if unknown:
+        print(f"ERROR: not gated file(s): {', '.join(unknown)} "
+              f"(known: {', '.join(FILES)})")
+        return 2
+    files = selected or FILES
     fresh_dir = "."
     if update:
         os.makedirs(BASELINE_DIR, exist_ok=True)
-        for f in FILES:
+        for f in files:
             src = os.path.join(fresh_dir, f)
             if os.path.exists(src):
                 shutil.copy(src, os.path.join(BASELINE_DIR, f))
@@ -194,7 +217,7 @@ def main(argv=None) -> int:
 
     failures, skipped, compared = [], [], 0
     docs = {}
-    for f in FILES:
+    for f in files:
         fresh_path = os.path.join(fresh_dir, f)
         base_path = os.path.join(BASELINE_DIR, f)
         if not os.path.exists(base_path):

@@ -30,6 +30,7 @@ MODULES = [
     "benchmarks.storage",           # memory-budgeted buffer pool behind the probe
     "benchmarks.scale",             # paper-scale CS/FC on the multi-view engine
     "benchmarks.sql_serve",         # relational front-end overhead vs direct
+    "benchmarks.serve_concurrent",  # concurrent wire-protocol serving swarm
     "benchmarks.kernel_bench",      # framework kernels
 ]
 

@@ -1,0 +1,210 @@
+"""Concurrent SQL serving: a closed-loop client swarm against the asyncio
+wire-protocol server (`repro.rdbms.server`), the "many sessions, one
+incrementally-maintained state" shape the server mode exists for.
+
+Workload: N sessions (default 64; `BENCH_SERVE_SESSIONS`), each a real
+socket connection with its own server-side prepared-statement cache,
+issue `BENCH_SERVE_OPS` closed-loop operations at a 95/5 read/write mix
+(`BENCH_SERVE_READ_FRAC`) over the cora_like corpus:
+
+  * reads  — `EXECUTE pt (id, view)`: the prepared §3.5.2 point-probe
+    route, snapshot-pinned under the shared epoch gate;
+  * writes — single-row `INSERT`, queued in the group-commit WAL and
+    committed behind the pinned readers (or flushed by the next read —
+    read-your-writes).
+
+Reported into `BENCH_serve.json`: per-op p50/p99 latency (ms, full wire
+round trip) and aggregate QPS, plus the per-kind split and server/WAL
+counters.  Gated by `check_regress.py` (p99 +30% machine-speed-
+normalized, QPS as throughput).
+
+Correctness (the acceptance contract): after the swarm, the server's WAL
+history is replayed SERIALLY through a fresh REPL `Executor` — commit
+markers reproduce the exact group boundaries — and every view's labels,
+member sets, and commit count must be identical to the concurrently
+served state.
+
+Failure behavior: a server that cannot bind, or any session erroring
+mid-run, raises — `run.py` exits non-zero and the CI serve-smoke job
+goes red rather than uploading a partial JSON.
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+import time
+
+import numpy as np
+
+from benchmarks.common import BENCH_SCALE, emit
+from repro.data import cora_like
+from repro.rdbms import Catalog, Executor, SqlClient, start_server_thread
+
+SESSIONS = int(os.environ.get("BENCH_SERVE_SESSIONS", "64"))
+OPS = int(os.environ.get("BENCH_SERVE_OPS", "100"))          # per session
+READ_FRAC = float(os.environ.get("BENCH_SERVE_READ_FRAC", "0.95"))
+GROUP = int(os.environ.get("BENCH_SERVE_GROUP", "32"))
+
+
+def _build_catalog(corpus) -> Catalog:
+    catalog = Catalog()
+    catalog.register_table("papers", corpus.features, truth=corpus.classes,
+                           num_classes=corpus.num_classes)
+    # hybrid + a real memory budget: point reads exercise waters -> pinned
+    # hot-buffer pages -> the (now thread-safe) BufferPool -> cold reads
+    catalog.create_view("topics", "papers", "svm",
+                        {"k": corpus.num_classes, "policy": "hybrid",
+                         "buffer_frac": 0.02, "cost_mode": "modeled",
+                         "memory_budget": 0.25})
+    return catalog
+
+
+def _session_worker(idx: int, host: str, port: int, corpus,
+                    lat: list, errors: list, barrier: threading.Barrier):
+    n, k = corpus.features.shape[0], corpus.num_classes
+    rng = np.random.default_rng(1000 + idx)
+    # pre-draw the op stream so the timed loop is pure serve traffic
+    kinds = rng.random(OPS) < READ_FRAC
+    ids = rng.integers(0, n, size=OPS)
+    views = rng.integers(0, k, size=OPS)
+    reads, writes = [], []
+    try:
+        client = SqlClient.connect(host, port)
+        client.prepare("pt",
+                       "SELECT label FROM topics WHERE id = ? AND view = ?")
+        barrier.wait(timeout=60)
+        for j in range(OPS):
+            i = int(ids[j])
+            if kinds[j]:
+                t0 = time.perf_counter()
+                client.execute("pt", [i, int(views[j])])
+                reads.append(time.perf_counter() - t0)
+            else:
+                c = int(corpus.classes[i])
+                t0 = time.perf_counter()
+                client.query(
+                    f"INSERT INTO papers (id, class) VALUES ({i}, {c})")
+                writes.append(time.perf_counter() - t0)
+        client.close()
+        lat.append((reads, writes))
+    except Exception as e:                   # noqa: BLE001 — re-raised by main
+        errors.append((idx, e))
+        try:
+            barrier.abort()
+        except Exception:
+            pass
+
+
+def _replay_serial(history, corpus) -> Executor:
+    """The same stream, serially, through the plain REPL executor: commit
+    markers reproduce the concurrent run's exact group boundaries."""
+    ex = Executor(_build_catalog(corpus), group_commit=len(history) + 1)
+    for rec in history:
+        if rec.op == "commit":
+            ex.execute_one("COMMIT")
+        elif rec.op == "insert":
+            ex.execute_one(f"INSERT INTO papers (id, class) VALUES "
+                           f"({rec.entity_id}, {int(rec.label)})")
+        else:
+            raise RuntimeError(f"unexpected WAL op in serve workload: "
+                               f"{rec.op}")
+    return ex
+
+
+def _pct(xs, q):
+    return float(np.percentile(np.asarray(xs) * 1e3, q)) if xs else 0.0
+
+
+def main() -> None:
+    corpus = cora_like(scale=BENCH_SCALE / 0.1)
+    n, k = corpus.features.shape[0], corpus.num_classes
+    ex = Executor(_build_catalog(corpus), group_commit=GROUP)
+    handle = start_server_thread(ex, max_workers=min(32, SESSIONS))
+    host, port = handle.address
+
+    lat: list = []
+    errors: list = []
+    barrier = threading.Barrier(SESSIONS + 1)
+    threads = [threading.Thread(target=_session_worker,
+                                args=(i, host, port, corpus, lat, errors,
+                                      barrier),
+                                daemon=True)
+               for i in range(SESSIONS)]
+    for t in threads:
+        t.start()
+    try:
+        barrier.wait(timeout=60)             # all sessions connected+prepared
+    except threading.BrokenBarrierError:
+        pass                                 # a worker failed; fall through
+    t_wall = time.perf_counter()
+    for t in threads:
+        t.join(timeout=600)
+    wall = time.perf_counter() - t_wall
+    if errors:
+        handle.stop()
+        idx, err = errors[0]
+        raise RuntimeError(
+            f"{len(errors)}/{SESSIONS} serve sessions failed "
+            f"(first: session {idx}: {type(err).__name__}: {err})") from err
+    if any(t.is_alive() for t in threads):
+        handle.stop()
+        raise RuntimeError("serve swarm hung: sessions still alive after "
+                           "600s join")
+
+    # flush the uncommitted tail so the WAL history is commit-terminated,
+    # then freeze it for the serial replay
+    ex.execute_one("COMMIT")
+    handle.stop()
+    history = list(ex.log.history)
+
+    reads = [x for r, _ in lat for x in r]
+    writes = [x for _, w in lat for x in w]
+    all_lat = reads + writes
+    total_ops = len(all_lat)
+    qps = total_ops / wall if wall > 0 else 0.0
+
+    # -- acceptance: concurrent == serial replay at the same boundaries --
+    serial = _replay_serial(history, corpus)
+    f_conc = ex.catalog.view("topics").facade
+    f_ser = serial.catalog.view("topics").facade
+    assert serial.log.commits == ex.log.commits, \
+        (serial.log.commits, ex.log.commits)
+    assert np.array_equal(f_conc.counts(), f_ser.counts()), \
+        (f_conc.counts(), f_ser.counts())
+    for v in range(k):
+        assert np.array_equal(np.sort(f_conc.members(v)),
+                              np.sort(f_ser.members(v))), f"view {v}"
+
+    payload = {
+        "workload": {"corpus": corpus.name, "n": n,
+                     "d": int(corpus.features.shape[1]), "k": k,
+                     "sessions": SESSIONS, "ops_per_session": OPS,
+                     "read_frac": READ_FRAC, "group_commit": GROUP,
+                     "updates": len(writes), "reads": len(reads)},
+        "scale": BENCH_SCALE,
+        "latency_ms": {"p50": _pct(all_lat, 50), "p99": _pct(all_lat, 99),
+                       "read_p50": _pct(reads, 50),
+                       "read_p99": _pct(reads, 99),
+                       "write_p50": _pct(writes, 50),
+                       "write_p99": _pct(writes, 99)},
+        "qps": qps,
+        "wall_seconds": wall,
+        "wal_commits": ex.log.commits,
+        "epoch": ex.epoch,
+        "server": {"sessions": handle.server.sessions_opened,
+                   "statements": handle.server.statements_served},
+        "hybrid_tier_hits": dict(f_conc.tier_hits),
+        "storage": f_conc.storage_stats(),
+    }
+    with open("BENCH_serve.json", "w") as f:
+        json.dump(payload, f, indent=2)
+
+    emit(f"serve_point_read_s{SESSIONS}_n{n}", _pct(reads, 50) * 1e3,
+         f"p99_ms={_pct(reads, 99):.3f};qps={qps:.0f}")
+    emit(f"serve_insert_s{SESSIONS}_n{n}", _pct(writes, 50) * 1e3,
+         f"p99_ms={_pct(writes, 99):.3f};commits={ex.log.commits}")
+
+
+if __name__ == "__main__":
+    main()

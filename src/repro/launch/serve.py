@@ -7,7 +7,14 @@ pure-LM decode mode for the decode-shape configs.
   PYTHONPATH=src python -m repro.launch.serve --mode sql --script demo.sql
   PYTHONPATH=src python -m repro.launch.serve --mode sql \
       --execute "SHOW TABLES"
+  PYTHONPATH=src python -m repro.launch.serve --mode sql \
+      --serve 127.0.0.1:5433 --script schema.sql   # concurrent SQL server
   PYTHONPATH=src python -m repro.launch.serve --mode decode --arch tinyllama-1.1b
+
+In server mode (`--serve HOST:PORT`), an optional --script/--execute runs
+first against the shared executor (schema bootstrap), then the asyncio
+server accepts N concurrent wire-protocol sessions (`repro.rdbms.client`
+speaks it) until interrupted.
 
 The view driver is an importable module (`repro.launch.view_driver`)
 shared with `examples/serve_view.py` — no file-path loading hacks.
@@ -39,10 +46,35 @@ def serve_decode(arch: str, steps: int, batch: int, cache_len: int):
           f"{steps*batch/dt:.0f} tok/s ({dt/steps*1e3:.1f} ms/step)")
 
 
-def serve_sql(script: str = None, execute: str = None):
+def serve_sql(script: str = None, execute: str = None, serve: str = None):
     from repro.rdbms.executor import Executor
     from repro.rdbms.repl import repl, run_script
     ex = Executor()
+    if serve:
+        import asyncio
+        from repro.rdbms.server import SqlServer
+        host, _, port = serve.rpartition(":")
+        if not host or not port.isdigit():
+            raise SystemExit(f"--serve wants HOST:PORT, got {serve!r}")
+        # schema bootstrap runs before the first connection is accepted
+        if script:
+            with open(script) as fh:
+                run_script(fh.read(), ex)
+        elif execute:
+            run_script(execute, ex)
+
+        async def _serve():
+            server = SqlServer(ex, host=host, port=int(port))
+            await server.start()
+            print(f"[serve] sql server on {server.host}:{server.port} "
+                  f"(length-prefixed JSON; Ctrl-C to stop)")
+            await server.serve_forever()
+
+        try:
+            asyncio.run(_serve())
+        except KeyboardInterrupt:
+            print("[serve] sql server stopped")
+        return
     if script:
         with open(script) as fh:
             run_script(fh.read(), ex)
@@ -64,11 +96,15 @@ def main():
                     help="sql mode: run this .sql file instead of the REPL")
     ap.add_argument("--execute", default=None,
                     help="sql mode: run these ;-separated statements")
+    ap.add_argument("--serve", default=None, metavar="HOST:PORT",
+                    help="sql mode: run the concurrent wire-protocol "
+                         "server instead of the REPL (--script/--execute "
+                         "bootstrap the schema first)")
     args = ap.parse_args()
     if args.mode == "decode":
         serve_decode(args.arch, args.steps, args.batch, args.cache_len)
     elif args.mode == "sql":
-        serve_sql(args.script, args.execute)
+        serve_sql(args.script, args.execute, args.serve)
     else:
         from repro.launch.view_driver import main as view_main
         view_main(["--requests", str(args.requests)])

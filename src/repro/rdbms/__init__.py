@@ -12,7 +12,15 @@ surface for our engines:
                  write traffic amortizes into ONE engine round per commit
   * `planner`  — routes reads to the cheapest §3.5 tier and prices every
                  statement in touched tuples (the §3.4/§3.5 cost model)
-  * `executor` — executes plans; `EXPLAIN` makes tier + cost user-visible
+  * `executor` — executes plans; `EXPLAIN` makes tier + cost user-visible;
+                 `Session` scopes a prepared-statement cache per client
+  * `concurrency` — the epoch gate: statement-scoped snapshot isolation
+                 (readers pin the committed WAL batch index; commits
+                 serialize exclusively behind them)
+  * `wire`/`server`/`client` — length-prefixed-JSON protocol, the asyncio
+                 SQL server (N concurrent sessions over ONE executor),
+                 and the blocking client
+                 (`python -m repro.launch.serve --mode sql --serve ...`)
   * `repl`     — interactive / scripted entry point
                  (`python -m repro.launch.serve --mode sql`)
 """
@@ -21,8 +29,11 @@ from repro.rdbms.ast_nodes import (Commit, CreateTable, CreateView, Delete,
                                    Prepare, Select, Show, Update, UpdateModel,
                                    Where)
 from repro.rdbms.catalog import Catalog, PlanError, SqlError
-from repro.rdbms.executor import Executor, Result
+from repro.rdbms.client import ClientResult, ServerError, SqlClient
+from repro.rdbms.concurrency import EpochGate
+from repro.rdbms.executor import Executor, Result, Session
 from repro.rdbms.lexer import LexError
 from repro.rdbms.parser import ParseError, parse
 from repro.rdbms.planner import Plan, plan_statement
+from repro.rdbms.server import ServerHandle, SqlServer, start_server_thread
 from repro.rdbms.wal import UpdateLog, WalRecord

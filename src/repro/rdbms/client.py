@@ -1,0 +1,115 @@
+"""Blocking SQL client for the wire protocol (`repro.rdbms.wire`).
+
+One `SqlClient` == one server session (its own prepared-statement cache
+server-side). The API mirrors the Executor surface the REPL uses:
+
+    with SqlClient.connect(host, port) as c:
+        c.query("CREATE TABLE papers FROM CORPUS cora_like; ...")
+        c.prepare("pt", "SELECT label FROM topics WHERE id = ? AND view = ?")
+        rows = c.execute("pt", [17, 3]).rows
+
+Every call is a strict request/response round trip (closed loop), so a
+session's statements are totally ordered — which is exactly what makes
+read-your-writes meaningful at the protocol level.
+
+`ServerError` carries the server-side error string; transport problems
+raise `WireError`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import socket
+from typing import List, Optional, Sequence
+
+from repro.rdbms.wire import recv_frame, send_frame, WireError
+
+
+class ServerError(RuntimeError):
+    def __init__(self, message: str, error_type: str = "SqlError"):
+        super().__init__(message)
+        self.error_type = error_type
+
+
+@dataclasses.dataclass
+class ClientResult:
+    columns: List[str]
+    rows: List[list]
+    epoch: Optional[int] = None
+    plan: Optional[dict] = None
+    tiers: Optional[List[str]] = None
+
+    def __iter__(self):
+        return iter(self.rows)
+
+    @staticmethod
+    def from_payload(p: dict) -> "ClientResult":
+        return ClientResult(p.get("columns", []), p.get("rows", []),
+                            p.get("epoch"), p.get("plan"), p.get("tiers"))
+
+
+class SqlClient:
+    def __init__(self, sock: socket.socket):
+        self._sock = sock
+        self.session_id: Optional[int] = None
+        self.last_elapsed_us: Optional[float] = None
+
+    @classmethod
+    def connect(cls, host: str, port: int,
+                timeout: Optional[float] = 30.0) -> "SqlClient":
+        sock = socket.create_connection((host, port), timeout=timeout)
+        sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        return cls(sock)
+
+    # -- protocol round trips ------------------------------------------
+    def request(self, obj: dict) -> dict:
+        send_frame(self._sock, obj)
+        response = recv_frame(self._sock)
+        if response is None:
+            raise WireError("server closed the connection")
+        self.session_id = response.get("session", self.session_id)
+        if not response.get("ok"):
+            raise ServerError(response.get("error", "unknown server error"),
+                              response.get("error_type", "SqlError"))
+        self.last_elapsed_us = response.get("elapsed_us")
+        return response
+
+    def query(self, sql: str) -> List[ClientResult]:
+        response = self.request({"op": "query", "sql": sql})
+        return [ClientResult.from_payload(p)
+                for p in response.get("results", [])]
+
+    def query_one(self, sql: str) -> ClientResult:
+        results = self.query(sql)
+        if len(results) != 1:
+            raise ServerError(f"expected one result, got {len(results)}")
+        return results[0]
+
+    def prepare(self, name: str, sql: str) -> ClientResult:
+        return self.query_one(f"PREPARE {name} AS {sql.rstrip(';')}")
+
+    def execute(self, name: str,
+                params: Sequence[float] = ()) -> ClientResult:
+        response = self.request({"op": "execute", "name": name,
+                                 "params": list(params)})
+        return ClientResult.from_payload(response["results"][0])
+
+    def ping(self) -> int:
+        """Round trip; returns the server's current epoch."""
+        return self.request({"op": "ping"})["epoch"]
+
+    def close(self):
+        if self._sock is not None:
+            try:
+                send_frame(self._sock, {"op": "close"})
+                recv_frame(self._sock)
+            except (OSError, WireError):
+                pass
+            finally:
+                self._sock.close()
+                self._sock = None
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()

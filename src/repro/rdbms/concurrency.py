@@ -1,0 +1,80 @@
+"""Epoch gate: statement-scoped snapshot isolation for the SQL layer.
+
+The engines maintain ONE mutable state in place (clustered labels, waters,
+buffer windows) — there is no version chain to read from, so snapshot
+isolation is enforced by *scheduling*, not by copying state:
+
+  * epoch       == the committed WAL batch index (`UpdateLog.commits`).
+  * a reader    pins the epoch at statement start by holding the gate in
+                shared mode for the statement's duration; the engine state
+                it reads is exactly the epoch-E state throughout, because
+                nothing that advances the epoch can run concurrently.
+  * a writer    (group commit, UPDATE MODEL, DDL, catch-up-capable reads)
+                holds the gate exclusively: it waits behind every in-flight
+                pinned read, runs alone, advances the epoch, and releases.
+
+Writer preference: once a commit is waiting, new readers queue behind it.
+A 95/5 read-heavy swarm would otherwise starve the group commit forever —
+and with it every session's read-your-writes flush.
+
+The gate is deliberately NOT reentrant across modes; the executor keeps a
+thread-local depth counter so nested statement dispatch (EXECUTE ->
+SELECT) runs inside the guard already held.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+
+
+class EpochGate:
+    """Shared/exclusive gate with writer preference (see module doc)."""
+
+    def __init__(self):
+        self._cv = threading.Condition()
+        self._readers = 0
+        self._writer = False
+        self._writers_waiting = 0
+
+    @contextlib.contextmanager
+    def read(self):
+        """Hold shared for a statement-scoped snapshot-pinned read."""
+        with self._cv:
+            while self._writer or self._writers_waiting:
+                self._cv.wait()
+            self._readers += 1
+        try:
+            yield
+        finally:
+            with self._cv:
+                self._readers -= 1
+                if self._readers == 0:
+                    self._cv.notify_all()
+
+    @contextlib.contextmanager
+    def write(self):
+        """Hold exclusive for anything that may advance the epoch or
+        mutate engine state non-idempotently."""
+        with self._cv:
+            self._writers_waiting += 1
+            try:
+                while self._writer or self._readers:
+                    self._cv.wait()
+            finally:
+                self._writers_waiting -= 1
+            self._writer = True
+        try:
+            yield
+        finally:
+            with self._cv:
+                self._writer = False
+                self._cv.notify_all()
+
+    # -- introspection (tests) -----------------------------------------
+    @property
+    def readers(self) -> int:
+        return self._readers
+
+    @property
+    def write_held(self) -> bool:
+        return self._writer

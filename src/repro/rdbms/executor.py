@@ -14,11 +14,34 @@ Execution contract:
     the dry-run probe it reports (for point lookups under hybrid, the
     probe IS the cheapest way to know the tier — it is tier-counted like
     any probe).
+
+Concurrency contract (the SQL server drives one Executor from N session
+threads; see `repro.rdbms.concurrency`):
+
+  * every statement runs under the epoch gate. Point SELECTs on eager /
+    hybrid views hold it SHARED — they pin the epoch (committed WAL batch
+    index) at statement start, proceed concurrently with each other, and
+    are guaranteed never to observe a later commit's labels/waters
+    mid-statement (the executed `Result.epoch` records the pin, and the
+    guard re-checks it at statement end).
+  * everything that mutates engine state — DML appends + group commits,
+    UPDATE MODEL, DDL, and catch-up-capable reads (scans / counts / top-k
+    / any read on a LAZY view) — holds the gate EXCLUSIVELY and advances
+    the epoch behind the pinned readers.
+  * the read-your-writes flush runs as its own exclusive section BEFORE
+    the read takes its shared pin, so a flush can never interleave with
+    anyone's pinned snapshot.
+
+`Session` wraps an Executor with a per-session prepared-statement cache —
+each SQL-server connection gets one, so PREPARE names are session-scoped
+exactly like real wire protocols scope them.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence, Tuple
+import itertools
+import threading
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -27,6 +50,7 @@ from repro.rdbms.ast_nodes import (Commit, CreateTable, CreateView, Delete,
                                    Prepare, Select, Show, SqlError, Statement,
                                    Update, UpdateModel, Where)
 from repro.rdbms.catalog import Catalog, PlanError
+from repro.rdbms.concurrency import EpochGate
 from repro.rdbms.parser import parse
 from repro.rdbms.planner import Plan, _resolve_view_index, plan_statement
 from repro.rdbms.wal import UpdateLog
@@ -38,6 +62,8 @@ class Result:
     rows: List[tuple]
     plan: Optional[Plan] = None
     tiers_used: Optional[List[str]] = None
+    epoch: Optional[int] = None     # committed WAL batch index pinned by
+                                    # the statement (None: pre-gate paths)
 
     def __iter__(self):
         return iter(self.rows)
@@ -101,18 +127,107 @@ class Executor:
         self.catalog = catalog if catalog is not None else Catalog()
         self.log = UpdateLog(group_size=group_commit, path=wal_path)
         self.prepared: dict[str, _Prepared] = {}
+        self.gate = EpochGate()
+        self._tls = threading.local()       # .depth: nested dispatch guard
+
+    @property
+    def epoch(self) -> int:
+        """Committed WAL batch index — the snapshot version readers pin."""
+        return self.log.commits
 
     # -- entry points --------------------------------------------------
-    def execute(self, sql: str) -> List[Result]:
-        return [self.execute_statement(s) for s in parse(sql)]
+    def execute(self, sql: str, *,
+                prepared: Optional[Dict[str, _Prepared]] = None
+                ) -> List[Result]:
+        return [self.execute_statement(s, prepared=prepared)
+                for s in parse(sql)]
 
-    def execute_one(self, sql: str) -> Result:
-        results = self.execute(sql)
+    def execute_one(self, sql: str, *,
+                    prepared: Optional[Dict[str, _Prepared]] = None
+                    ) -> Result:
+        results = self.execute(sql, prepared=prepared)
         if len(results) != 1:
             raise SqlError(f"expected one statement, got {len(results)}")
         return results[0]
 
-    def execute_statement(self, stmt: Statement) -> Result:
+    # -- the concurrency wrapper ---------------------------------------
+    def execute_statement(self, stmt: Statement, *,
+                          prepared: Optional[Dict[str, _Prepared]] = None
+                          ) -> Result:
+        """Gate + dispatch. Point SELECTs on eager/hybrid views run under
+        the SHARED gate (epoch-pinned snapshot); everything else runs
+        exclusively (see the module doc's concurrency contract)."""
+        prepared = self.prepared if prepared is None else prepared
+        depth = getattr(self._tls, "depth", 0)
+        if depth:                            # nested dispatch: guard held
+            return self._dispatch(stmt, prepared)
+        self._tls.depth = 1
+        try:
+            table = self._read_target_table(stmt, prepared)
+            if self._shared_eligible(stmt, prepared):
+                # read-your-writes flush in its OWN exclusive section,
+                # before the shared pin
+                if table is not None and self.log.has_pending(table):
+                    with self.gate.write():
+                        self.log.flush(self.catalog, table)
+                with self.gate.read():
+                    epoch = self.log.commits
+                    res = self._dispatch(stmt, prepared)
+                    if self.log.commits != epoch:   # must be unreachable
+                        raise SqlError(
+                            f"snapshot violated: epoch {epoch} -> "
+                            f"{self.log.commits} mid-statement")
+                res.epoch = epoch
+                return res
+            with self.gate.write():
+                if table is not None:       # read-your-writes, already
+                    self.log.flush(self.catalog, table)  # exclusive here
+                res = self._dispatch(stmt, prepared)
+                res.epoch = self.log.commits
+            return res
+        finally:
+            self._tls.depth = 0
+
+    def _read_target_table(self, stmt: Statement,
+                           prepared: Dict[str, _Prepared]) -> Optional[str]:
+        """The base table a SELECT/EXECUTE reads (None for non-reads or
+        unresolvable targets — dispatch raises the real error then)."""
+        if isinstance(stmt, ExecutePrepared):
+            ps = prepared.get(stmt.name)
+            if ps is None:
+                return None
+            stmt = ps.stmt
+        if not isinstance(stmt, Select):
+            return None
+        try:
+            return self.catalog.view(stmt.view).table
+        except PlanError:
+            return None
+
+    def _shared_eligible(self, stmt: Statement,
+                         prepared: Dict[str, _Prepared]) -> bool:
+        """True iff the statement is a point read that can run under the
+        shared gate: a non-COUNT SELECT with an id predicate on an eager
+        or hybrid view. Those never catch up (hybrid probes are exact via
+        the waters; eager has nothing deferred) — a LAZY view's point read
+        relabels its band and must run exclusively."""
+        if isinstance(stmt, ExecutePrepared):
+            ps = prepared.get(stmt.name)
+            if ps is None:
+                return False                 # dispatch raises the real error
+            stmt = ps.stmt
+        if not isinstance(stmt, Select):
+            return False
+        w = stmt.where
+        if stmt.count or w is None or w.ids is None:
+            return False
+        try:
+            return self.catalog.view(stmt.view).facade.policy != "lazy"
+        except PlanError:
+            return False                     # dispatch raises the real error
+
+    def _dispatch(self, stmt: Statement,
+                  prepared: Dict[str, _Prepared]) -> Result:
         if isinstance(stmt, Explain):
             return self._explain(stmt.stmt)
         if isinstance(stmt, CreateTable):
@@ -167,14 +282,14 @@ class Executor:
                             v.facade.policy)
                            for v in self.catalog.views.values()])
         if isinstance(stmt, Prepare):
-            if stmt.name in self.prepared:
+            if stmt.name in prepared:
                 raise SqlError(f"prepared statement {stmt.name!r} already "
                                f"exists")
-            self.prepared[stmt.name] = _Prepared(stmt.stmt, stmt.n_params)
+            prepared[stmt.name] = _Prepared(stmt.stmt, stmt.n_params)
             return Result(("prepared", "params"),
                           [(stmt.name, stmt.n_params)])
         if isinstance(stmt, ExecutePrepared):
-            return self._execute_prepared(stmt)
+            return self._execute_prepared(stmt, prepared)
         if isinstance(stmt, Select):
             return self._select(stmt)
         raise SqlError(f"cannot execute {type(stmt).__name__}")
@@ -200,14 +315,17 @@ class Executor:
                              f"{st['hit_rate']:.3f}"))
         return Result(cols, rows)
 
-    def execute_prepared(self, name: str,
-                         params: Sequence[float] = ()) -> Result:
+    def execute_prepared(self, name: str, params: Sequence[float] = (), *,
+                         prepared: Optional[Dict[str, _Prepared]] = None
+                         ) -> Result:
         """Programmatic EXECUTE: bind + run a prepared statement without
         any SQL text (the zero-parse path for embedders)."""
-        return self._execute_prepared(ExecutePrepared(name, list(params)))
+        return self.execute_statement(ExecutePrepared(name, list(params)),
+                                      prepared=prepared)
 
-    def _execute_prepared(self, ex: ExecutePrepared) -> Result:
-        ps = self.prepared.get(ex.name)
+    def _execute_prepared(self, ex: ExecutePrepared,
+                          prepared: Dict[str, _Prepared]) -> Result:
+        ps = prepared.get(ex.name)
         if ps is None:
             raise SqlError(f"unknown prepared statement {ex.name!r}")
         if len(ex.params) != ps.n_params:
@@ -217,12 +335,11 @@ class Executor:
         bound = _bind(ps.stmt, ex.params)
         if isinstance(bound, Select) and bound.where is not None \
                 and bound.where.ids is not None and not bound.count:
-            # the amortized point route: read-your-writes flush, then the
-            # cached plan — repeated EXECUTEs skip parse AND plan, paying
-            # only a cheap id-range guard
+            # the amortized point route: the cached plan — repeated
+            # EXECUTEs skip parse AND plan, paying only a cheap id-range
+            # guard (read-your-writes was flushed by the gate wrapper)
             vd = self.catalog.view(bound.view)
             f = vd.facade
-            self.log.flush(self.catalog, vd.table)
             if ps.plan is None:
                 ps.plan = plan_statement(bound, self.catalog, self.log)
             else:
@@ -230,12 +347,13 @@ class Executor:
                     if not (0 <= i < f.n):
                         raise PlanError(f"id = {i} out of range (n = {f.n})")
             return self._select_point(bound, f, bound.where, ps.plan)
-        return self.execute_statement(bound)
+        return self.execute_statement(bound, prepared=prepared)
 
     # -- SELECT --------------------------------------------------------
     def _select(self, sel: Select) -> Result:
         vd = self.catalog.view(sel.view)
-        self.log.flush(self.catalog, vd.table)      # read-your-writes
+        # (read-your-writes flush happens in the gate wrapper, before the
+        # shared pin — never here, where it would commit mid-snapshot)
         plan = plan_statement(sel, self.catalog, self.log)
         f = vd.facade
         w = sel.where or Where()
@@ -389,3 +507,33 @@ class Executor:
                          sum(h == "disk" for h in used),
                          "tiers actually used by the dry-run probe"))
         return Result(cols, rows, plan=plan)
+
+
+class Session:
+    """One client's view of a shared Executor: a private prepared-statement
+    cache (PREPARE names are session-scoped, like every real wire
+    protocol) over the shared catalog/WAL/engines. The SQL server opens
+    one per connection; N sessions drive one Executor concurrently and the
+    epoch gate arbitrates."""
+
+    _ids = itertools.count(1)
+
+    def __init__(self, executor: Executor):
+        self.executor = executor
+        self.session_id = next(Session._ids)
+        self.prepared: Dict[str, _Prepared] = {}
+        self.statements = 0
+
+    def execute(self, sql: str) -> List[Result]:
+        self.statements += 1
+        return self.executor.execute(sql, prepared=self.prepared)
+
+    def execute_one(self, sql: str) -> Result:
+        self.statements += 1
+        return self.executor.execute_one(sql, prepared=self.prepared)
+
+    def execute_prepared(self, name: str,
+                         params: Sequence[float] = ()) -> Result:
+        self.statements += 1
+        return self.executor.execute_prepared(name, params,
+                                              prepared=self.prepared)

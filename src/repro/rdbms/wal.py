@@ -18,11 +18,20 @@ relational face of that amortization:
     catalog with identical commit boundaries — `replay_into` is the
     recovery path, and the equivalence tests replay it against direct
     engine calls.
+
+Concurrency: appends and commits are serialized behind ONE explicit
+commit lock (`_commit_lock`). N server sessions share one log; without
+the lock two sessions' appends interleave inside the pending-group list
+mid-`flush` (records silently dropped from the popped group) and two
+concurrent flushes double-feed the same batch to the engines. Point
+reads never take this lock — they proceed under the executor's shared
+epoch gate while writers queue behind it.
 """
 from __future__ import annotations
 
 import dataclasses
 import json
+import threading
 from typing import Dict, List, Optional
 
 from repro.rdbms.ast_nodes import SqlError
@@ -50,6 +59,7 @@ class UpdateLog:
         self.group_size = int(group_size)
         self.path = path
         self._fh = open(path, "a") if path else None
+        self._commit_lock = threading.RLock()
         self.history: List[WalRecord] = []
         self.pending: Dict[str, List[WalRecord]] = {}
         self.lsn = 0
@@ -72,17 +82,30 @@ class UpdateLog:
         reaches `group_size`. Returns the number of commits triggered."""
         if op not in ("insert", "update", "delete"):
             raise SqlError(f"bad WAL op {op!r}")
-        self.pending.setdefault(table, []).append(
-            self._record(op, table, entity_id, label))
-        if len(self.pending[table]) >= self.group_size:
-            return self.flush(catalog, table)
-        return 0
+        with self._commit_lock:
+            self.pending.setdefault(table, []).append(
+                self._record(op, table, entity_id, label))
+            if len(self.pending[table]) >= self.group_size:
+                return self.flush(catalog, table)
+            return 0
+
+    def has_pending(self, table: Optional[str] = None) -> bool:
+        """Any uncommitted DML (for `table`, or anywhere)? Read-your-writes
+        checks this before deciding whether a read must flush first."""
+        with self._commit_lock:
+            if table is not None:
+                return bool(self.pending.get(table))
+            return any(self.pending.values())
 
     # -- commit --------------------------------------------------------
     def flush(self, catalog, table: Optional[str] = None) -> int:
         """Commit pending groups (one table, or all). Each commit is ONE
         batched engine round per view; DELETEs preserve statement order by
         splitting the batch around the retrain."""
+        with self._commit_lock:
+            return self._flush_locked(catalog, table)
+
+    def _flush_locked(self, catalog, table: Optional[str] = None) -> int:
         tables = [table] if table is not None else list(self.pending)
         commits = 0
         for t in tables:

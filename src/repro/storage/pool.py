@@ -23,10 +23,23 @@ Semantics (the §3.5.2 storage economics, made physical):
 Counters reconcile by construction: hits + misses == probes (every
 `get_row`/`touch` call is exactly one of the two); warming is counted
 separately as `prefetches`.
+
+Thread safety: the pool is shared by every concurrent session of the SQL
+server, so ONE reentrant lock guards every compound invariant — the
+(`frames`, `_clock`, `_hand`, `resident_bytes`) quartet mutated by
+admission/eviction, the pin bookkeeping, and the counters. Without it two
+concurrent `get_row` calls can both miss the same page (double-admitting
+it and double-counting `resident_bytes`), and a clock sweep interleaved
+with `pin_rows` can evict a page between its admission and its
+`pin_count += 1` — exactly the races the regression test hammers. Reads
+of a resident row copy the slot under the lock; the mmap `read_page` cold
+read happens inside the lock too (correctness first — the async/prefetch
+I/O path can move it out later by admitting a placeholder frame).
 """
 from __future__ import annotations
 
 import dataclasses
+import threading
 from typing import Dict, Iterable, List, Tuple
 
 import numpy as np
@@ -46,6 +59,8 @@ class BufferPool:
         self.store = store
         # the pool must be able to hold at least one page
         self.budget_bytes = max(int(budget_bytes), store.page_bytes)
+        # reentrant: repin_rows -> pin_rows -> _admit all hold it
+        self._lock = threading.RLock()
         self.frames: Dict[int, Frame] = {}
         self._clock: List[int] = []                # page ids, clock order
         self._hand = 0
@@ -62,20 +77,22 @@ class BufferPool:
         return self.hits + self.misses
 
     def resident(self, entity_id: int) -> bool:
-        return int(self.store.dir_page[entity_id]) in self.frames
+        with self._lock:
+            return int(self.store.dir_page[entity_id]) in self.frames
 
     def touch(self, entity_id: int) -> Tuple[np.ndarray, str]:
         """Read one entity row; returns (row, "pool"|"disk")."""
         pid = int(self.store.dir_page[entity_id])
         slot = int(self.store.dir_slot[entity_id])
-        fr = self.frames.get(pid)
-        if fr is not None:
-            fr.ref = True
-            self.hits += 1
-            return fr.data[slot], "pool"
-        self.misses += 1
-        fr = self._admit(pid)
-        return fr.data[slot], "disk"
+        with self._lock:
+            fr = self.frames.get(pid)
+            if fr is not None:
+                fr.ref = True
+                self.hits += 1
+                return fr.data[slot], "pool"
+            self.misses += 1
+            fr = self._admit(pid)
+            return fr.data[slot], "disk"
 
     def get_row(self, entity_id: int) -> np.ndarray:
         return self.touch(entity_id)[0]
@@ -135,66 +152,76 @@ class BufferPool:
         return pages[np.sort(first)]
 
     def pinned_bytes(self) -> int:
-        return sum(fr.data.nbytes for fr in self.frames.values()
-                   if fr.pin_count > 0)
+        with self._lock:
+            return sum(fr.data.nbytes for fr in self.frames.values()
+                       if fr.pin_count > 0)
 
     def pin_rows(self, entity_ids: Iterable[int]) -> List[int]:
         """Pin the pages covering `entity_ids` (in first-appearance order),
         faulting absent ones in as prefetches. Pins are capped so that the
         pinned set alone never exceeds the budget (at least one page is
         always pinned if any id was given). Returns the pinned page ids."""
-        pinned: List[int] = []
-        budget_left = self.budget_bytes - self.pinned_bytes()
-        for pid in self._ordered_pages(entity_ids):
-            pid = int(pid)
-            size = self.store.page_nbytes(pid)
-            if pinned and size > budget_left:
-                break
-            fr = self.frames.get(pid)
-            if fr is None:
-                fr = self._admit(pid, prefetch=True)
-            fr.pin_count += 1
-            fr.ref = True
-            pinned.append(pid)
-            budget_left -= size
-        if pinned:
-            self._evict_to_budget()
-        return pinned
+        with self._lock:
+            pinned: List[int] = []
+            budget_left = self.budget_bytes - self.pinned_bytes()
+            for pid in self._ordered_pages(entity_ids):
+                pid = int(pid)
+                size = self.store.page_nbytes(pid)
+                if pinned and size > budget_left:
+                    break
+                fr = self.frames.get(pid)
+                if fr is None:
+                    fr = self._admit(pid, prefetch=True)
+                fr.pin_count += 1
+                fr.ref = True
+                pinned.append(pid)
+                budget_left -= size
+            if pinned:
+                self._evict_to_budget()
+            return pinned
 
     def unpin(self, page_ids: Iterable[int]):
-        for pid in page_ids:
-            fr = self.frames.get(pid)
-            if fr is not None and fr.pin_count > 0:
-                fr.pin_count -= 1
+        with self._lock:
+            for pid in page_ids:
+                fr = self.frames.get(pid)
+                if fr is not None and fr.pin_count > 0:
+                    fr.pin_count -= 1
 
     def repin_rows(self, entity_ids: Iterable[int]):
         """Move the hot-buffer pin set to the pages of `entity_ids`. The
         OLD window is unpinned first so its pages release their budget
         claim before the new window's pin cap is computed — otherwise a
         full-budget window would cap its own replacement at ~one page.
-        Nothing can evict in between (eviction only runs inside an
-        admission), and overlap pages are still resident when re-pinned."""
-        self.unpin(self._hot_pins)
-        self._hot_pins = self.pin_rows(entity_ids)
-        self._evict_to_budget()
+        The whole move holds the pool lock, so no concurrent admission can
+        sweep the briefly-unpinned overlap pages out from under the
+        re-pin, and overlap pages are still resident when re-pinned."""
+        with self._lock:
+            self.unpin(self._hot_pins)
+            self._hot_pins = self.pin_rows(entity_ids)
+            self._evict_to_budget()
 
     # -- warming -------------------------------------------------------
     def warm(self, entity_ids: Iterable[int]):
         """Prefetch the pages of `entity_ids` IN ORDER until the budget is
         full; never evicts (already-resident pages just get a reference)."""
-        for pid in self._ordered_pages(entity_ids):
-            pid = int(pid)
-            fr = self.frames.get(pid)
-            if fr is not None:
-                fr.ref = True
-                continue
-            if self.resident_bytes + self.store.page_nbytes(pid) \
-                    > self.budget_bytes:
-                break
-            self._admit(pid, prefetch=True)
+        with self._lock:
+            for pid in self._ordered_pages(entity_ids):
+                pid = int(pid)
+                fr = self.frames.get(pid)
+                if fr is not None:
+                    fr.ref = True
+                    continue
+                if self.resident_bytes + self.store.page_nbytes(pid) \
+                        > self.budget_bytes:
+                    break
+                self._admit(pid, prefetch=True)
 
     # -- introspection -------------------------------------------------
     def stats(self) -> dict:
+        with self._lock:
+            return self._stats_locked()
+
+    def _stats_locked(self) -> dict:
         probes = self.probes
         return {
             "budget_bytes": self.budget_bytes,
@@ -216,8 +243,9 @@ class BufferPool:
     def close(self):
         """Drop every frame (the shared `EntityStore` is closed by its
         owner — several pools may share one store)."""
-        self.frames.clear()
-        self._clock.clear()
-        self._hand = 0
-        self.resident_bytes = 0
-        self._hot_pins = []
+        with self._lock:
+            self.frames.clear()
+            self._clock.clear()
+            self._hand = 0
+            self.resident_bytes = 0
+            self._hot_pins = []

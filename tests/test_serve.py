@@ -1,0 +1,295 @@
+"""Concurrent SQL server: wire protocol, sessions, and the epoch gate.
+
+The contracts under test (ISSUE 6):
+
+  * wire frames round-trip (numpy scalars included) and oversized /
+    desynced frames fail fast instead of hanging a reader;
+  * the epoch gate really is snapshot isolation by scheduling — while any
+    shared reader is pinned at epoch E, no commit can advance the epoch
+    to E+1, and a waiting writer blocks new readers (no starvation);
+  * one connection == one session: read-your-writes over the wire, a
+    private prepared-statement namespace, and statement errors that keep
+    the session alive;
+  * concurrency changes scheduling, NEVER results: a mixed read/write
+    swarm leaves the engines in a state byte-identical to the same WAL
+    replayed serially, with the same commit boundaries;
+  * `start_server_thread` raises when it cannot bind (the benchmark and
+    the CI serve job gate on this).
+"""
+import socket
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.data import multiclass_corpus
+from repro.rdbms import (Catalog, EpochGate, Executor, ServerError, Session,
+                         SqlClient, UpdateLog, start_server_thread)
+from repro.rdbms.wire import (MAX_FRAME, WireError, decode_payload,
+                              encode_frame, frame_length)
+
+
+# ---------------------------------------------------------------------------
+# wire format
+# ---------------------------------------------------------------------------
+
+def test_wire_roundtrip_coerces_numpy_scalars():
+    obj = {"op": "query", "rows": [[np.int64(3), np.float32(0.5)]],
+           "arr": np.arange(3)}
+    frame = encode_frame(obj)
+    assert frame_length(frame[:4]) == len(frame) - 4
+    back = decode_payload(frame[4:])
+    assert back["rows"] == [[3, 0.5]] and back["arr"] == [0, 1, 2]
+
+
+def test_wire_rejects_oversized_and_desynced_frames():
+    with pytest.raises(WireError):
+        frame_length((MAX_FRAME + 1).to_bytes(4, "big"))
+    with pytest.raises(TypeError):
+        encode_frame({"bad": object()})
+
+
+# ---------------------------------------------------------------------------
+# epoch gate: snapshot isolation by scheduling
+# ---------------------------------------------------------------------------
+
+def test_gate_writer_waits_for_pinned_readers():
+    gate = EpochGate()
+    entered = threading.Event()
+    done = []
+
+    def writer():
+        with gate.write():
+            entered.set()
+            done.append(True)
+
+    with gate.read():
+        t = threading.Thread(target=writer, daemon=True)
+        t.start()
+        assert not entered.wait(0.15)       # blocked behind the pinned read
+        assert not done
+    t.join(5)
+    assert done                             # released the instant we unpin
+
+
+def test_gate_waiting_writer_blocks_new_readers():
+    gate = EpochGate()
+    writer_in = threading.Event()
+    reader_in = threading.Event()
+    release = threading.Event()
+
+    def slow_reader():
+        with gate.read():
+            reader_in.set()
+            release.wait(5)
+
+    def writer():
+        with gate.write():
+            writer_in.set()
+
+    r = threading.Thread(target=slow_reader, daemon=True)
+    r.start()
+    assert reader_in.wait(5)
+    w = threading.Thread(target=writer, daemon=True)
+    w.start()
+    time.sleep(0.05)                        # writer now queued
+    late = threading.Event()
+
+    def late_reader():
+        with gate.read():
+            late.set()
+
+    lr = threading.Thread(target=late_reader, daemon=True)
+    lr.start()
+    assert not late.wait(0.15)              # queued behind the writer
+    release.set()
+    assert writer_in.wait(5) and late.wait(5)
+    for t in (r, w, lr):
+        t.join(5)
+
+
+def test_reader_pinned_epoch_cannot_advance_midstatement():
+    """While a shared reader holds the gate, `log.commits` is frozen: a
+    full group's worth of INSERTs lands only after the reader unpins."""
+    ex = _executor(group_commit=4)
+    committed = threading.Event()
+
+    def writer():
+        for i in range(4):                  # exactly one group commit
+            ex.execute_one(f"INSERT INTO t (id, class) VALUES "
+                           f"({i}, {int(_CORPUS.classes[i])})")
+        committed.set()
+
+    with ex.gate.read():
+        epoch0 = ex.log.commits
+        t = threading.Thread(target=writer, daemon=True)
+        t.start()
+        assert not committed.wait(0.2)      # the commit is gated out
+        assert ex.log.commits == epoch0     # snapshot never moved
+    t.join(5)
+    assert committed.is_set() and ex.log.commits == epoch0 + 1
+
+
+# ---------------------------------------------------------------------------
+# executor sessions (no sockets): read-your-writes + private PREPAREs
+# ---------------------------------------------------------------------------
+
+_CORPUS = multiclass_corpus("serve_t", 300, 16, 4, seed=11)
+
+
+def _executor(group_commit=64):
+    catalog = Catalog()
+    catalog.register_table("t", _CORPUS.features, truth=_CORPUS.classes,
+                           num_classes=_CORPUS.num_classes)
+    catalog.create_view("v", "t", "svm",
+                        {"k": _CORPUS.num_classes, "policy": "hybrid",
+                         "cost_mode": "modeled"})
+    return Executor(catalog, group_commit=group_commit)
+
+
+def test_session_insert_then_select_sees_own_commit():
+    ex = _executor(group_commit=64)         # group far from full: the
+    s = Session(ex)                         # flush must come from the read
+    i, c = 7, int(_CORPUS.classes[7])
+    s.execute(f"INSERT INTO t (id, class) VALUES ({i}, {c})")
+    assert ex.log.has_pending("t")
+    rows = s.execute_one(f"SELECT id FROM v WHERE class = {c}").rows
+    assert [i] in [[r[0]] for r in rows]    # own write is visible
+    assert not ex.log.has_pending("t")      # the read flushed the group
+    assert ex.log.commits == 1
+
+
+def test_point_read_carries_the_pinned_epoch():
+    ex = _executor(group_commit=2)
+    s = Session(ex)
+    for j in range(4):
+        s.execute(f"INSERT INTO t (id, class) VALUES "
+                  f"({j}, {int(_CORPUS.classes[j])})")
+    assert ex.log.commits == 2
+    res = s.execute_one("SELECT label FROM v WHERE id = 1 AND view = 2")
+    assert res.epoch == 2                   # snapshot version, user-visible
+
+
+def test_sessions_have_private_prepared_namespaces():
+    ex = _executor()
+    s1, s2 = Session(ex), Session(ex)
+    s1.execute("PREPARE pt AS SELECT label FROM v WHERE id = ? AND view = ?")
+    s2.execute("PREPARE pt AS SELECT id FROM v WHERE class = ?")
+    r1 = s1.execute_prepared("pt", [3, 1])
+    r2 = s2.execute_prepared("pt", [2])
+    assert tuple(r1.columns) == ("label",) and tuple(r2.columns) == ("id",)
+    assert "pt" not in ex.prepared          # the REPL namespace is untouched
+    assert s1.session_id != s2.session_id
+
+
+# ---------------------------------------------------------------------------
+# over the wire
+# ---------------------------------------------------------------------------
+
+def test_server_ddl_dml_select_roundtrip():
+    handle = start_server_thread()
+    host, port = handle.address
+    try:
+        with SqlClient.connect(host, port) as c:
+            c.query("CREATE TABLE papers FROM CORPUS synthetic "
+                    "WITH (scale = 0.08); "
+                    "CREATE CLASSIFICATION VIEW topics ON papers "
+                    "USING MODEL svm WITH (policy = hybrid)")
+            epoch0 = c.ping()
+            c.query("INSERT INTO papers (id, label) VALUES (3, 1)")
+            res = c.query_one("SELECT id, label FROM topics WHERE id = 3")
+            assert res.rows and res.rows[0][0] == 3
+            assert res.epoch == epoch0 + 1  # read-your-writes flushed
+            assert c.ping() == epoch0 + 1
+    finally:
+        handle.stop()
+
+
+def test_statement_error_keeps_the_session_alive():
+    handle = start_server_thread(_executor())
+    host, port = handle.address
+    try:
+        with SqlClient.connect(host, port) as c:
+            with pytest.raises(ServerError):
+                c.query("SELECT label FROM nope WHERE id = 1")
+            sid = c.session_id
+            res = c.query_one("SELECT label FROM v WHERE id = 1 AND view = 0")
+            assert res.rows and c.session_id == sid   # same session survived
+    finally:
+        handle.stop()
+
+
+def test_wire_sessions_have_private_prepared_namespaces():
+    handle = start_server_thread(_executor())
+    host, port = handle.address
+    try:
+        with SqlClient.connect(host, port) as c1, \
+                SqlClient.connect(host, port) as c2:
+            c1.prepare("pt", "SELECT label FROM v WHERE id = ? AND view = ?")
+            c2.prepare("pt", "SELECT id FROM v WHERE class = ?")
+            assert c1.execute("pt", [3, 1]).columns == ["label"]
+            assert c2.execute("pt", [2]).columns == ["id"]
+            with pytest.raises(ServerError):
+                c1.execute("pt", [2])       # c2's arity never leaked into c1
+    finally:
+        handle.stop()
+
+
+def test_bind_failure_raises():
+    blocker = socket.socket()
+    blocker.bind(("127.0.0.1", 0))
+    blocker.listen(1)
+    port = blocker.getsockname()[1]
+    try:
+        with pytest.raises(RuntimeError, match="bind"):
+            start_server_thread(host="127.0.0.1", port=port)
+    finally:
+        blocker.close()
+
+
+# ---------------------------------------------------------------------------
+# the acceptance shape: concurrent swarm == serial WAL replay
+# ---------------------------------------------------------------------------
+
+def test_concurrent_swarm_equals_serial_replay():
+    ex = _executor(group_commit=8)
+    handle = start_server_thread(ex)
+    host, port = handle.address
+    n, k = _CORPUS.features.shape[0], _CORPUS.num_classes
+    errors = []
+
+    def worker(idx):
+        rng = np.random.default_rng(500 + idx)
+        try:
+            with SqlClient.connect(host, port) as c:
+                c.prepare("pt",
+                          "SELECT label FROM v WHERE id = ? AND view = ?")
+                for _ in range(30):
+                    i = int(rng.integers(0, n))
+                    if rng.random() < 0.7:
+                        c.execute("pt", [i, int(rng.integers(0, k))])
+                    else:
+                        c.query(f"INSERT INTO t (id, class) VALUES "
+                                f"({i}, {int(_CORPUS.classes[i])})")
+        except Exception as e:              # noqa: BLE001
+            errors.append((idx, e))
+
+    threads = [threading.Thread(target=worker, args=(i,), daemon=True)
+               for i in range(6)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(60)
+    assert not errors, errors
+    ex.execute_one("COMMIT")                # commit-terminate the history
+    handle.stop()
+
+    serial = _executor(group_commit=len(ex.log.history) + 1)
+    UpdateLog.replay_into(list(ex.log.history), serial.catalog)
+    f_c = ex.catalog.view("v").facade
+    f_s = serial.catalog.view("v").facade
+    assert np.array_equal(f_c.counts(), f_s.counts())
+    for v in range(k):
+        assert np.array_equal(np.sort(f_c.members(v)),
+                              np.sort(f_s.members(v))), v

@@ -841,3 +841,38 @@ def test_repl_run_script(capsys):
     out = capsys.readouterr().out
     assert "count" in out and "(1 rows)" in out
     assert "t" in ex.catalog.tables and "v" in ex.catalog.views
+
+
+# ---------------------------------------------------------------------------
+# ISSUE 6: epoch-stamped results + read-your-writes at the executor level
+# ---------------------------------------------------------------------------
+
+def test_results_carry_commit_epoch_and_reads_flush_pending():
+    """Every Result reports the committed WAL batch index it observed
+    (the snapshot version); a read over a table with pending DML flushes
+    the group first, so its epoch is the POST-flush index and the
+    session's own writes are always visible to its next read."""
+    c, catalog, ex = _warm_executor(seed=44)
+    epoch0 = ex.log.commits
+    assert ex.epoch == epoch0
+
+    # a pending (sub-group) insert: DML reports the epoch after its append
+    res = ex.execute_one("INSERT INTO t (id, label) VALUES "
+                         f"(5, {int(c.labels[5])})")
+    assert res.epoch == epoch0 and ex.log.has_pending("t")
+
+    # the next read flushes first — read-your-writes — and pins AFTER
+    r1 = ex.execute_one("SELECT label FROM v WHERE id = 5")
+    assert r1.epoch == epoch0 + 1
+    assert not ex.log.has_pending("t")
+
+    # reads with nothing pending do not advance anything
+    r2 = ex.execute_one("SELECT label FROM v WHERE id = 7")
+    assert r2.epoch == ex.log.commits == epoch0 + 1
+
+    # the nested dispatch (EXECUTE -> SELECT) runs inside ONE guard and
+    # stamps the same pinned epoch
+    ex.execute_one("PREPARE e6 AS SELECT label FROM v WHERE id = ?")
+    r3 = ex.execute_one("EXECUTE e6 (7)")
+    assert r3.epoch == epoch0 + 1
+    assert r3.rows == r2.rows

@@ -270,3 +270,59 @@ def test_hazy_store_probe_exact_and_cold_counting():
         tiers[how] += 1
     assert sum(tiers.values()) == c.features.shape[0]
     assert eng.disk_touches == pool.misses   # cold reads only
+
+
+# ---------------------------------------------------------------------------
+# BufferPool under threads (ISSUE 6): the SQL server probes one shared
+# pool from N sessions while commits repin the hot window
+# ---------------------------------------------------------------------------
+
+def test_pool_concurrent_probes_never_corrupt_or_evict_pins():
+    """Regression for the pre-lock races: (a) two threads admitting the
+    same page double-counted resident_bytes, (b) the clock sweep could
+    evict a page between another thread's admission and its pin bump, and
+    (c) unsynchronized `hits += 1` lost increments. 8 threads hammer ONE
+    tiny-budget pool (constant eviction pressure) against a pinned hot
+    window: every row byte-exact, no pinned page ever leaves the pool,
+    and the counters reconcile exactly with the probes issued."""
+    import threading
+
+    F = _features(n=256, d=16, seed=9)
+    pool = _pool(F, 0.08)                   # a few pages: sweeps constantly
+    pool.repin_rows(range(8))
+    pinned = set(pool._hot_pins)
+    assert pinned
+    probes0 = pool.probes
+    per_thread, n_threads = 400, 8
+    errors = []
+
+    def hammer(seed):
+        rng = np.random.default_rng(seed)
+        try:
+            for _ in range(per_thread):
+                i = int(rng.integers(0, F.shape[0]))
+                if pool.get_row(i).tobytes() != F[i].tobytes():
+                    errors.append(f"row {i} corrupt")
+                    return
+                if not pinned <= set(pool.frames):
+                    errors.append("pinned page evicted")
+                    return
+        except Exception as e:              # noqa: BLE001 — surfaced below
+            errors.append(repr(e))
+
+    threads = [threading.Thread(target=hammer, args=(100 + t,), daemon=True)
+               for t in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(60)
+    assert not any(t.is_alive() for t in threads)
+    assert not errors, errors[:3]
+    # exact counter reconciliation: no increment was lost to a data race
+    assert pool.hits + pool.misses == pool.probes
+    assert pool.probes - probes0 == per_thread * n_threads
+    for pid in pinned:
+        assert pool.frames[pid].pin_count > 0
+    assert pool.resident_bytes <= pool.budget_bytes + pool.store.page_bytes
+    stats = pool.stats()
+    assert stats["hits"] + stats["misses"] == stats["probes"]
