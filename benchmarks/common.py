@@ -15,7 +15,7 @@ from typing import Callable, Tuple
 
 import numpy as np
 
-from repro.core import HazyEngine, NaiveEngine, LinearModel, zero_model
+from repro.core import LinearModel, zero_model
 from repro.data import (citeseer_like, dblife_like, example_stream,
                         forest_like, Corpus)
 

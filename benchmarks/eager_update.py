@@ -4,7 +4,6 @@ from __future__ import annotations
 
 import time
 
-import numpy as np
 
 from benchmarks.common import BottouSGD, corpus, emit, warm_model
 from repro.core import HazyEngine, NaiveEngine

@@ -5,9 +5,8 @@ from __future__ import annotations
 
 import time
 
-import numpy as np
 
-from benchmarks.common import BottouSGD, corpus, emit
+from benchmarks.common import corpus, emit
 from repro.core import (full_gradient_train, precision_recall, train_batch,
                         zero_model)
 

@@ -11,7 +11,6 @@ import json
 import os
 import time
 
-import numpy as np
 
 from benchmarks.common import BENCH_SCALE, emit
 from repro.core import MulticlassView

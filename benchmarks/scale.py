@@ -27,7 +27,7 @@ import numpy as np
 
 from benchmarks.common import BENCH_SCALE, emit
 from repro.core import MulticlassView
-from repro.core.multiview import HYBRID_TIERS
+from repro.core.engine import HYBRID_TIERS
 from repro.data import citeseer_like, forest_like
 
 K = int(os.environ.get("BENCH_SCALE_K", "16"))

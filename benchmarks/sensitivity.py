@@ -7,7 +7,7 @@ import time
 
 import numpy as np
 
-from benchmarks.common import BottouSGD, emit, warm_model
+from benchmarks.common import BottouSGD, emit
 from repro.core import HazyEngine, MulticlassView, NaiveEngine, RandomFeatures
 from repro.data import forest_like
 

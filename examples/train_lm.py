@@ -23,7 +23,7 @@ from repro.configs import smoke_config
 from repro.configs.base import ModelConfig
 from repro.data import TokenStream
 from repro.models import build
-from repro.models.steps import init_train_state, make_train_step, train_state_specs
+from repro.models.steps import init_train_state, make_train_step
 
 
 def preset_config(preset: str) -> ModelConfig:

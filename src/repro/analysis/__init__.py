@@ -1,0 +1,40 @@
+"""Invariant analysis for the repro tree: static passes + lock witness.
+
+Static suite (CLI: `python -m repro.analysis`, CI job `static-analysis`):
+
+  * LCK001-3  lock order / acquire shape / blocking-under-pool-lock
+              (`repro.analysis.locks`)
+  * SRC001-2  single-source algorithm rules (`.single_source`)
+  * PUR001-4  core purity + EngineState immutability (`.purity`)
+
+Runtime witness (`repro.analysis.witness`, `REPRO_LOCK_WITNESS=1`):
+asserts the same gate < wal_commit < pool order live, per thread, with
+zero overhead when disabled.
+
+This module keeps imports lazy: `repro.rdbms`/`repro.storage` import
+`repro.analysis.witness` on their hot construction paths, and must not
+drag the `ast` machinery in with it.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Sequence
+
+
+def run(files: Optional[Sequence] = None,
+        rules: Sequence[str] = ("LCK", "SRC", "PUR")) -> List:
+    """Run the selected pass families; returns sorted `Finding`s."""
+    from repro.analysis.callgraph import CallGraph
+    from repro.analysis.common import ModuleSet, default_files
+    from repro.analysis.locks import check_locks
+    from repro.analysis.purity import check_purity
+    from repro.analysis.single_source import check_single_source
+
+    modules = ModuleSet(default_files() if files is None else files)
+    findings = []
+    if "LCK" in rules:
+        findings += check_locks(modules, CallGraph(modules))
+    if "SRC" in rules:
+        findings += check_single_source(modules)
+    if "PUR" in rules:
+        findings += check_purity(modules)
+    return sorted(findings)

@@ -1,0 +1,44 @@
+"""CLI: `python -m repro.analysis [paths...] [--rules LCK,SRC,PUR]`.
+
+Runs the three invariant pass families over the installed `repro` tree
+(or over explicit files/directories — the fixture tests use this),
+prints findings as `file:line: RULE-ID message`, and exits non-zero if
+there are any. This is the `static-analysis` CI gate.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+from repro.analysis import run
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="repro invariant checks: lock order (LCK), "
+                    "single-source rules (SRC), core purity (PUR)")
+    ap.add_argument("paths", nargs="*", type=Path,
+                    help="files or directories to scan (default: the "
+                         "installed repro tree)")
+    ap.add_argument("--rules", default="LCK,SRC,PUR",
+                    help="comma-separated rule families to run")
+    args = ap.parse_args(argv)
+
+    files = None
+    if args.paths:
+        files = []
+        for p in args.paths:
+            files.extend(sorted(p.rglob("*.py")) if p.is_dir() else [p])
+    findings = run(files, rules=args.rules.split(","))
+    for f in findings:
+        print(f.render())
+    if findings:
+        print(f"{len(findings)} finding(s)", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

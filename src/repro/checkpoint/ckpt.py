@@ -19,7 +19,7 @@ import os
 import queue
 import shutil
 import threading
-from typing import Any, Dict, Optional
+from typing import Optional
 
 import jax
 import numpy as np

@@ -7,7 +7,6 @@ they can be constructed without touching jax device state.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
 
 
 @dataclasses.dataclass(frozen=True)

@@ -10,7 +10,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict
 
-from repro.configs.base import HazyConfig, ModelConfig, SHAPES, SMOKE_SHAPES
+from repro.configs.base import ModelConfig, SHAPES
 
 ARCHS: Dict[str, ModelConfig] = {}
 

@@ -49,6 +49,8 @@ against the threshold α directly.
 """
 from __future__ import annotations
 
+import math
+
 from typing import NamedTuple, Tuple
 
 import numpy as np
@@ -76,7 +78,7 @@ def row_norms(X, p: float, xp=np):
     if X.shape[-1] == 0:
         return xp.zeros(X.shape[:-1], X.dtype)
     A = xp.abs(X)
-    if np.isinf(p):
+    if math.isinf(p):           # p is a Python scalar: stdlib, not host numpy
         return xp.max(A, axis=-1)
     if p == 1.0:
         return xp.sum(A, axis=-1)

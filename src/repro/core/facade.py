@@ -36,7 +36,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core.engine import (PROBE_TIERS, band_partition, covering_windows,
-                               waters_update)
+                               probe_partition, waters_update)
 from repro.core.multiclass import MulticlassView, sgd_all_views
 from repro.core.view import ClassificationView
 
@@ -466,7 +466,9 @@ class ShardedFacade(EngineFacade):
         hw = self.driver.hw.astype(np.float32)
         _, _, width = covering_windows(eps, lw, hw)
         v = int(view)
-        certain_pos = int(np.count_nonzero(eps[v] >= hw[v]))
+        # certainly-positive == probe tier +1 (THE Lemma 3.1 partition)
+        certain_pos = int(np.count_nonzero(
+            probe_partition(eps[v], lw[v], hw[v]) == 1))
         return int(width[v]), certain_pos, self.n
 
     @property

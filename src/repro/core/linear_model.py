@@ -12,7 +12,7 @@ single-node setting) and a jitted JAX path (TPU integration) are provided.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Tuple
+from typing import Tuple
 
 import numpy as np
 

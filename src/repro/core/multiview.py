@@ -62,10 +62,10 @@ from typing import Optional, Tuple
 
 import numpy as np
 
-from repro.core.engine import (HYBRID_TIERS, PROBE_TIERS, TIER_BUFFER,
+from repro.core.engine import (PROBE_TIERS, TIER_BUFFER,
                                TIER_DISK, TIER_POOL, TIER_WATER,
                                band_partition, classify, hot_buffer_window,
-                               probe_partition, row_norms, skiing_charge,
+                               probe_partition, skiing_charge,
                                skiing_due, waters_update)
 from repro.core.hazy import Stats
 from repro.core.skiing import alpha_star

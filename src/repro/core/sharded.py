@@ -47,8 +47,7 @@ SKIING would usually have reorganized long before that.
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Dict, NamedTuple, Optional, Tuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp

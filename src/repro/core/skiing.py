@@ -14,7 +14,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Callable, List, Sequence, Tuple
+from typing import Callable, List, Tuple
 
 from repro.core.engine import skiing_charge, skiing_due
 

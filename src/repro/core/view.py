@@ -13,13 +13,12 @@ SKIING — lives once in `core/engine.py`.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Callable, Iterable, Optional, Sequence, Tuple
+from typing import Callable, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core.hazy import HazyEngine, NaiveEngine
-from repro.core.linear_model import LinearModel, sgd_step, zero_model
+from repro.core.linear_model import sgd_step, zero_model
 
 
 class ClassificationView:

@@ -14,8 +14,6 @@ reduction stays full-precision.
 """
 from __future__ import annotations
 
-from typing import Any, Tuple
-
 import jax
 import jax.numpy as jnp
 

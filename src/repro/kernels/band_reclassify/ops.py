@@ -1,7 +1,6 @@
 """Public wrappers: align band windows to tile boundaries and clamp them."""
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 from repro.kernels.band_reclassify.kernel import (

@@ -1,11 +1,9 @@
 """Public wrapper for decode attention: (b, 1, nq, hd) model layout in/out."""
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 from repro.kernels.decode_attention.kernel import decode_attention as _kernel
-from repro.kernels.decode_attention.ref import decode_attention_ref
 
 
 def decode_attention(q, k_cache, v_cache, cache_index, *, block_s: int = 512,

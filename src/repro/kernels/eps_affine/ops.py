@@ -1,11 +1,9 @@
 """Public wrapper for eps_affine: pads n to the tile size, d to lanes."""
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 from repro.kernels.eps_affine.kernel import eps_affine as _kernel
-from repro.kernels.eps_affine.ref import eps_affine_ref
 
 
 def eps_affine(F, w, b, *, block_n: int = 512, interpret: bool = False):

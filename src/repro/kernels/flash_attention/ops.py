@@ -1,11 +1,7 @@
 """Public wrapper for the flash-attention kernel (layout + padding)."""
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
-
 from repro.kernels.flash_attention.kernel import flash_attention as _kernel
-from repro.kernels.flash_attention.ref import flash_attention_ref
 
 
 def flash_attention(q, k, v, *, block_q: int = 256, block_k: int = 256,

@@ -4,7 +4,6 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 from repro.kernels.wkv6.kernel import wkv6 as _kernel
-from repro.kernels.wkv6.ref import wkv6_ref
 
 
 def wkv6(r, k, v, la, u, *, chunk: int = 64, interpret: bool = False):

@@ -18,14 +18,13 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.configs.base import ModelConfig, ShapeConfig
+from repro.configs.base import ShapeConfig
 from repro.launch.hlo_stats import collective_bytes
 
 
@@ -92,7 +91,6 @@ def lower_block(mdl, unit, shape: ShapeConfig, mesh: Mesh, *, train: bool,
 def lower_loss(mdl, shape: ShapeConfig, mesh: Mesh, *, unroll: bool):
     """Lower the (hidden → CE loss) section with grad."""
     from repro.models.transformer import build
-    from repro.models import steps as steps_mod
     cfg = dataclasses.replace(mdl.cfg, unroll_inner_scans=unroll)
     mdl_u = build(cfg)
     b = shape.global_batch

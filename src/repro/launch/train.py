@@ -13,14 +13,12 @@ On a real pod, drop --smoke and point --mesh at the production topology.
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import signal
 import sys
 import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 
 def main():

@@ -16,8 +16,7 @@ rectangle would burn. This matters for the roofline compute term.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp

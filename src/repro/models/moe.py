@@ -8,7 +8,7 @@ roofline MODEL_FLOPS/HLO_FLOPs ratio and is one of the hillclimb subjects
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp

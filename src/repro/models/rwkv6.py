@@ -20,7 +20,7 @@ channels carry exact zeros through the recurrence.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

@@ -11,14 +11,14 @@ from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, NamedSharding
 
 from repro.configs.base import ModelConfig, ShapeConfig
 from repro.models import layers
-from repro.models.params import (ParamSpec, abstract_params, init_params,
-                                 partition_specs, resolve_axes, RULE_SETS,
+from repro.models.params import (ParamSpec, init_params,
+                                 resolve_axes, RULE_SETS,
                                  tree_map_specs)
-from repro.models.transformer import ModelDef, build
+from repro.models.transformer import ModelDef
 from repro.optim import adamw_update, adamw_init, clip_by_global_norm, warmup_cosine
 from repro.optim.optimizers import opt_specs
 

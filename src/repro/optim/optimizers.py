@@ -6,8 +6,6 @@ the model — ZeRO-style when params are FSDP-sharded.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, NamedTuple, Optional, Tuple
-
 import jax
 import jax.numpy as jnp
 

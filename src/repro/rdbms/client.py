@@ -29,6 +29,9 @@ class ServerError(RuntimeError):
         super().__init__(message)
         self.error_type = error_type
 
+    def __str__(self) -> str:
+        return f"{self.error_type}: {super().__str__()}"
+
 
 @dataclasses.dataclass
 class ClientResult:

@@ -26,6 +26,8 @@ from __future__ import annotations
 import contextlib
 import threading
 
+from repro.analysis.witness import WITNESS
+
 
 class EpochGate:
     """Shared/exclusive gate with writer preference (see module doc)."""
@@ -39,36 +41,48 @@ class EpochGate:
     @contextlib.contextmanager
     def read(self):
         """Hold shared for a statement-scoped snapshot-pinned read."""
-        with self._cv:
-            while self._writer or self._writers_waiting:
-                self._cv.wait()
-            self._readers += 1
+        # witness seam: check the declared order BEFORE blocking, so an
+        # inversion surfaces as LockOrderError, not a deadlock.
+        if WITNESS.active:
+            WITNESS.push("gate", self)
         try:
-            yield
-        finally:
             with self._cv:
-                self._readers -= 1
-                if self._readers == 0:
-                    self._cv.notify_all()
+                while self._writer or self._writers_waiting:
+                    self._cv.wait()
+                self._readers += 1
+            try:
+                yield
+            finally:
+                with self._cv:
+                    self._readers -= 1
+                    if self._readers == 0:
+                        self._cv.notify_all()
+        finally:
+            WITNESS.pop("gate", self)
 
     @contextlib.contextmanager
     def write(self):
         """Hold exclusive for anything that may advance the epoch or
         mutate engine state non-idempotently."""
-        with self._cv:
-            self._writers_waiting += 1
-            try:
-                while self._writer or self._readers:
-                    self._cv.wait()
-            finally:
-                self._writers_waiting -= 1
-            self._writer = True
+        if WITNESS.active:
+            WITNESS.push("gate", self)
         try:
-            yield
-        finally:
             with self._cv:
-                self._writer = False
-                self._cv.notify_all()
+                self._writers_waiting += 1
+                try:
+                    while self._writer or self._readers:
+                        self._cv.wait()
+                finally:
+                    self._writers_waiting -= 1
+                self._writer = True
+            try:
+                yield
+            finally:
+                with self._cv:
+                    self._writer = False
+                    self._cv.notify_all()
+        finally:
+            WITNESS.pop("gate", self)
 
     # -- introspection (tests) -----------------------------------------
     @property

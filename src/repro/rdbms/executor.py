@@ -347,7 +347,11 @@ class Executor:
                     if not (0 <= i < f.n):
                         raise PlanError(f"id = {i} out of range (n = {f.n})")
             return self._select_point(bound, f, bound.where, ps.plan)
-        return self.execute_statement(bound, prepared=prepared)
+        # _execute_prepared only ever runs from _dispatch, i.e. with the
+        # gate already held — dispatch the bound statement directly
+        # instead of re-entering execute_statement, so the gate is
+        # acquired on exactly one statically-visible path
+        return self._dispatch(bound, prepared)
 
     # -- SELECT --------------------------------------------------------
     def _select(self, sel: Select) -> Result:

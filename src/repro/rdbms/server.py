@@ -25,6 +25,7 @@ from __future__ import annotations
 
 import asyncio
 import concurrent.futures
+import logging
 import os
 import threading
 import time
@@ -34,6 +35,8 @@ from repro.rdbms.ast_nodes import SqlError
 from repro.rdbms.executor import Executor, Result, Session
 from repro.rdbms.wire import (WireError, decode_payload, encode_frame,
                               frame_length)
+
+logger = logging.getLogger("repro.rdbms.server")
 
 
 def _result_payload(res: Result) -> dict:
@@ -142,7 +145,11 @@ class SqlServer:
                     "session": session.session_id,
                     "elapsed_us": (time.perf_counter() - t0) * 1e6}
         except Exception as e:              # statement errors keep the
-            return {"ok": False, "error": str(e),  # session alive
+            # session alive; the class name crosses the wire (the client
+            # re-raises typed) and the server keeps its own trace
+            logger.warning("session %s statement failed: %s: %s",
+                           session.session_id, type(e).__name__, e)
+            return {"ok": False, "error": str(e),
                     "error_type": type(e).__name__,
                     "session": session.session_id}
 

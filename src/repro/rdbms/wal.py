@@ -34,6 +34,7 @@ import json
 import threading
 from typing import Dict, List, Optional
 
+from repro.analysis.witness import wrap
 from repro.rdbms.ast_nodes import SqlError
 
 
@@ -59,7 +60,7 @@ class UpdateLog:
         self.group_size = int(group_size)
         self.path = path
         self._fh = open(path, "a") if path else None
-        self._commit_lock = threading.RLock()
+        self._commit_lock = wrap(threading.RLock(), "wal_commit")
         self.history: List[WalRecord] = []
         self.pending: Dict[str, List[WalRecord]] = {}
         self.lsn = 0

@@ -44,6 +44,7 @@ from typing import Dict, Iterable, List, Tuple
 
 import numpy as np
 
+from repro.analysis.witness import wrap
 from repro.storage.store import EntityStore
 
 
@@ -60,7 +61,7 @@ class BufferPool:
         # the pool must be able to hold at least one page
         self.budget_bytes = max(int(budget_bytes), store.page_bytes)
         # reentrant: repin_rows -> pin_rows -> _admit all hold it
-        self._lock = threading.RLock()
+        self._lock = wrap(threading.RLock(), "pool")
         self.frames: Dict[int, Frame] = {}
         self._clock: List[int] = []                # page ids, clock order
         self._hand = 0

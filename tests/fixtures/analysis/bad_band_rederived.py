@@ -1,0 +1,12 @@
+"""Lemma 3.1 band partition re-derived outside core/engine.py (SRC001)."""
+import numpy as np
+
+
+def count_certain(eps, lw, hw):
+    band = (eps >= lw) & (eps < hw)            # re-derived band mask
+    n_pos = int(np.count_nonzero(eps >= hw))   # re-derived certain-positive
+    return band, n_pos
+
+
+def band_lo(eps_sorted, lw):
+    return int(np.searchsorted(eps_sorted, lw))  # re-derived partition edge

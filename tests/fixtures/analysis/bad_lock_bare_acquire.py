@@ -1,0 +1,16 @@
+"""Bare `.acquire()` without the try/finally release shape (LCK002)."""
+import threading
+
+from repro.analysis.witness import wrap
+
+
+class BufferPool:
+    def __init__(self):
+        self._lock = wrap(threading.RLock(), "pool")
+        self.frames = {}
+
+    def unsafe_touch(self, pid):
+        self._lock.acquire()               # an exception here leaks the lock
+        value = self.frames.get(pid)
+        self._lock.release()
+        return value

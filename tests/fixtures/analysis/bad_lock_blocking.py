@@ -1,0 +1,15 @@
+"""Blocking file I/O while holding the pool lock (LCK003)."""
+import threading
+
+from repro.analysis.witness import wrap
+
+
+class BufferPool:
+    def __init__(self, path):
+        self._lock = wrap(threading.RLock(), "pool")
+        self.path = path
+
+    def read_cold(self):
+        with self._lock:                   # every concurrent probe now
+            with open(self.path) as fh:    # waits on this disk read
+                return fh.read()

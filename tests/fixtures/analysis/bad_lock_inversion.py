@@ -1,0 +1,30 @@
+"""Deliberately inverted pool -> commit acquisition.
+
+Caught twice: statically (LCK001 at the `self.log.flush()` call — the
+call graph sees `flush` take the commit lock while the pool lock is
+held) and live (the runtime witness raises LockOrderError when
+`evict_and_commit` runs with `repro.analysis.witness` enabled).
+EXECUTABLE on purpose — tests/test_analysis.py actually runs it.
+"""
+import threading
+
+from repro.analysis.witness import wrap
+
+
+class UpdateLog:
+    def __init__(self):
+        self._commit_lock = wrap(threading.RLock(), "wal_commit")
+
+    def flush(self):
+        with self._commit_lock:
+            return 1
+
+
+class BufferPool:
+    def __init__(self):
+        self._lock = wrap(threading.RLock(), "pool")
+        self.log = UpdateLog()
+
+    def evict_and_commit(self):
+        with self._lock:                   # pool, level 2, held ...
+            return self.log.flush()        # ... acquires wal_commit, level 1

@@ -1,0 +1,11 @@
+"""Host numpy + side effects inside an xp-parameterized pure step
+(PUR001/PUR002) and in-place parameter mutation (PUR003)."""
+import numpy as np
+
+
+def relabel_step(eps, labels, xp=np):
+    flipped = xp.where(eps >= 0, 1, -1)
+    total = np.cumsum(flipped)                 # host numpy, unguarded
+    print("relabeled", int(total[-1]))         # side effect under jit
+    labels[0] = 1                              # mutates its argument
+    return flipped, total[-1].item()           # host sync

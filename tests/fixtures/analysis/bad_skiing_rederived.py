@@ -1,0 +1,12 @@
+"""SKIING charge/trigger arithmetic re-derived outside engine (SRC002)."""
+
+
+class Maintainer:
+    def __init__(self, alpha, size):
+        self.alpha = alpha
+        self.size = size
+        self.acc = 0.0
+
+    def record(self, cost):
+        self.acc += cost                       # re-derived skiing_charge
+        return self.acc >= self.alpha * self.size  # re-derived skiing_due

@@ -1,0 +1,7 @@
+"""A shell reaching into an `EngineState` it was handed (PUR004)."""
+
+
+def clamp_band(state, idx):
+    state.labels[idx] = -1                     # in-place pytree mutation
+    state.hw = 0.0                             # rebinding a frozen field
+    return state

@@ -1,0 +1,48 @@
+"""Known-good: every near-miss idiom the rules must stay quiet on."""
+import threading
+
+from repro.analysis.witness import wrap
+from repro.core.engine import band_partition, skiing_due
+
+
+class UpdateLog:
+    def __init__(self):
+        self._commit_lock = wrap(threading.RLock(), "wal_commit")
+
+    def append(self):
+        with self._commit_lock:
+            return self.flush()            # same-RLock reentry: legal
+
+    def flush(self):
+        with self._commit_lock:
+            return 1
+
+
+class BufferPool:
+    def __init__(self):
+        self._lock = wrap(threading.RLock(), "pool")
+        self.frames = {}
+
+    def admit(self, pid):
+        with self._lock:
+            self.frames[pid] = pid         # plain dict work: not blocking
+            return len(self.frames)
+
+
+class Engine:
+    def __init__(self):
+        self.log = UpdateLog()
+        self.pool = BufferPool()
+
+    def commit(self):
+        with self.log._commit_lock:        # wal_commit (1) -> pool (2):
+            return self.pool.admit(0)      # the declared downward order
+
+
+def band_count(eps_sorted, lw, hw):
+    lo, hi = band_partition(eps_sorted, lw, hw)   # bounds as ARGUMENTS
+    return int(hi - lo)
+
+
+def due(acc, alpha, size):
+    return skiing_due(acc, alpha, size)           # delegation, no arithmetic

@@ -1,0 +1,148 @@
+"""The invariant lint suite, tested against its fixture corpus.
+
+Contracts (ISSUE 7):
+
+  * each rule fires at EXACTLY the file:line it should on the known-bad
+    fixtures — and nowhere else in that fixture;
+  * the known-good fixture and the REAL tree produce zero findings
+    (the CLI exits 0 — this is the CI `static-analysis` gate);
+  * the deliberately inverted pool -> commit acquisition is caught by
+    BOTH the static pass (LCK001) and the runtime lock witness
+    (LockOrderError), and the witness reports the gate's non-reentrancy
+    instead of deadlocking on it.
+"""
+import importlib.util
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import run, witness
+from repro.rdbms.concurrency import EpochGate
+
+FIXTURES = Path(__file__).resolve().parent / "fixtures" / "analysis"
+
+
+def _findings(name):
+    return [(f.line, f.rule) for f in run([FIXTURES / name])]
+
+
+def _load(name):
+    spec = importlib.util.spec_from_file_location(
+        f"analysis_fixture_{name}", FIXTURES / f"{name}.py")
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+# ---------------------------------------------------------------------------
+# static passes on the fixture corpus: exact file:line + RULE-ID
+# ---------------------------------------------------------------------------
+
+def test_lock_inversion_static():
+    assert _findings("bad_lock_inversion.py") == [(30, "LCK001")]
+
+
+def test_lock_bare_acquire():
+    assert _findings("bad_lock_bare_acquire.py") == [(13, "LCK002")]
+
+
+def test_lock_blocking_under_pool():
+    assert _findings("bad_lock_blocking.py") == [(14, "LCK003"),
+                                                 (15, "LCK003")]
+
+
+def test_band_rederivation():
+    found = _findings("bad_band_rederived.py")
+    assert set(found) == {(6, "SRC001"), (7, "SRC001"), (12, "SRC001")}
+    assert found.count((6, "SRC001")) == 2      # mask = two comparisons
+
+
+def test_skiing_rederivation():
+    assert _findings("bad_skiing_rederived.py") == [(11, "SRC002"),
+                                                    (12, "SRC002")]
+
+
+def test_purity_np_sideeffects_mutation():
+    assert _findings("bad_purity_np.py") == [(8, "PUR001"), (9, "PUR002"),
+                                             (10, "PUR003"), (11, "PUR002")]
+
+
+def test_state_mutation_in_shell():
+    assert _findings("bad_state_mutation.py") == [(5, "PUR004"),
+                                                  (6, "PUR004")]
+
+
+def test_good_fixture_is_quiet():
+    assert _findings("good_clean.py") == []
+
+
+def test_real_tree_is_quiet():
+    assert run() == []
+
+
+# ---------------------------------------------------------------------------
+# the CLI contract: file:line: RULE-ID lines, exit status
+# ---------------------------------------------------------------------------
+
+def _cli(*args):
+    return subprocess.run(
+        [sys.executable, "-m", "repro.analysis", *args],
+        capture_output=True, text=True)
+
+
+def test_cli_exits_nonzero_with_findings():
+    proc = _cli(str(FIXTURES / "bad_lock_inversion.py"))
+    assert proc.returncode == 1
+    assert "bad_lock_inversion.py:30: LCK001" in proc.stdout
+
+
+def test_cli_exits_zero_on_the_tree():
+    proc = _cli()
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert proc.stdout.strip() == ""
+
+
+# ---------------------------------------------------------------------------
+# runtime witness: the same order, asserted live
+# ---------------------------------------------------------------------------
+
+def test_witness_catches_the_inverted_fixture_live():
+    with witness.enabled():
+        bad = _load("bad_lock_inversion")
+        pool = bad.BufferPool()             # locks constructed -> wrapped
+        with pytest.raises(witness.LockOrderError, match="inversion"):
+            pool.evict_and_commit()
+
+
+def test_witness_allows_the_declared_order_and_rlock_reentry():
+    with witness.enabled():
+        good = _load("good_clean")
+        eng = good.Engine()
+        assert eng.commit() == 1            # wal_commit -> pool, downward
+        assert eng.log.append() == 1        # append -> flush, same RLock
+
+
+def test_witness_reports_gate_reentry_instead_of_deadlocking():
+    gate = EpochGate()
+    with witness.enabled():
+        with gate.read():
+            with pytest.raises(witness.LockOrderError, match="reentrant"):
+                with gate.write():
+                    pass                    # pragma: no cover
+
+
+def test_witness_off_means_raw_locks():
+    """wrap() hands back the raw lock when disabled — the production
+    path carries zero wrapper overhead."""
+    import threading
+    prev = witness.WITNESS.enabled
+    witness.WITNESS.enabled = False
+    try:
+        lock = threading.RLock()
+        assert witness.wrap(lock, "pool") is lock
+    finally:
+        witness.WITNESS.enabled = prev
+    with pytest.raises(ValueError):
+        witness.wrap(threading.RLock(), "not-a-lock")

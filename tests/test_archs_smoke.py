@@ -8,7 +8,7 @@ import pytest
 
 from repro.configs import ARCHS, smoke_config
 from repro.models import build
-from repro.models.steps import (init_cache, init_train_state, lm_loss,
+from repro.models.steps import (init_cache, init_train_state,
                                 make_decode_step, make_train_step)
 
 R = np.random.default_rng(0)

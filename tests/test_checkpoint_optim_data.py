@@ -115,7 +115,7 @@ def test_tokenstream_determinism_and_sharding():
 
 
 def test_corpora_stats():
-    from repro.data import citeseer_like, dblife_like, forest_like
+    from repro.data import dblife_like, forest_like
     fc = forest_like(scale=0.005)
     assert fc.features.shape[1] == 54
     np.testing.assert_allclose(np.linalg.norm(fc.features, axis=1), 1.0, rtol=1e-4)

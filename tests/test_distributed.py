@@ -1,6 +1,5 @@
 """Distributed features: grad compression, stragglers, multi-device subprocess
 tests (sharded hazy consistency, elastic re-mesh restore)."""
-import json
 import os
 import subprocess
 import sys

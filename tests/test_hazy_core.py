@@ -1,5 +1,4 @@
 """Unit tests for the paper's machinery: waters, skiing, engine behaviour."""
-import math
 
 import numpy as np
 import pytest

@@ -16,7 +16,7 @@ from repro.core import (ClassificationView, HazyEngine, LinearModel,
                         MulticlassView, MultiViewEngine, holder_M, sgd_step,
                         zero_model)
 from repro.core.hazy import hot_buffer_window
-from repro.core.multiview import HYBRID_TIERS
+from repro.core.engine import HYBRID_TIERS
 from repro.data import cora_like, forest_like, example_stream, \
     multiclass_example_stream
 

@@ -1,6 +1,5 @@
 """Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs ref.py oracle."""
 import numpy as np
-import jax
 import jax.numpy as jnp
 import pytest
 

@@ -7,7 +7,6 @@ trajectory bit for bit, same predictions, same `class_counts()`, including
 across reorganizations (decisions are compared under the deterministic
 `cost_mode="modeled"`)."""
 import numpy as np
-import pytest
 
 from repro.core import MulticlassView, MultiViewEngine
 from repro.data import cora_like, multiclass_example_stream

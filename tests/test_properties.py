@@ -19,7 +19,7 @@ hypothesis = pytest.importorskip(
     "hypothesis", reason="hypothesis not installed (see requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
-from repro.core import (HazyEngine, LinearModel, Waters, eps_bounds,
+from repro.core import (HazyEngine, LinearModel, Waters,
                         holder_M, opt_cost, skiing_schedule, sgd_step,
                         zero_model)
 

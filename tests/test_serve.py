@@ -16,6 +16,7 @@ The contracts under test (ISSUE 6):
   * `start_server_thread` raises when it cannot bind (the benchmark and
     the CI serve job gate on this).
 """
+import logging
 import socket
 import threading
 import time
@@ -216,6 +217,29 @@ def test_statement_error_keeps_the_session_alive():
             sid = c.session_id
             res = c.query_one("SELECT label FROM v WHERE id = 1 AND view = 0")
             assert res.rows and c.session_id == sid   # same session survived
+    finally:
+        handle.stop()
+
+
+def test_statement_error_carries_type_and_logs_server_side(caplog):
+    """A planner error crosses the wire WITH its class name (the client
+    re-raises typed, str() leads with the type) and leaves a server-side
+    log line naming the session — debugging is blind without either."""
+    handle = start_server_thread(_executor())
+    host, port = handle.address
+    try:
+        with SqlClient.connect(host, port) as c:
+            with caplog.at_level(logging.WARNING,
+                                 logger="repro.rdbms.server"):
+                with pytest.raises(ServerError) as ei:
+                    c.query("SELECT label FROM nope WHERE id = 1")
+            assert ei.value.error_type == "PlanError"
+            assert str(ei.value).startswith("PlanError: ")
+            logged = [r for r in caplog.records
+                      if "statement failed" in r.getMessage()]
+            assert logged, caplog.records
+            assert "PlanError" in logged[0].getMessage()
+            assert str(c.session_id) in logged[0].getMessage()
     finally:
         handle.stop()
 

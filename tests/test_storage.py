@@ -257,7 +257,7 @@ def test_hazy_store_probe_exact_and_cold_counting():
                      buffer_frac=0.05, store=pool)
     model = zero_model(c.features.shape[1])
     rng = np.random.default_rng(11)
-    for t in range(200):
+    for _t in range(200):
         i = int(rng.integers(0, c.features.shape[0]))
         model = sgd_step(model, c.features[i], float(c.labels[i]),
                          lr=0.05, l2=1e-3)

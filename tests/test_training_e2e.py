@@ -9,7 +9,6 @@ import time
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
