@@ -19,7 +19,14 @@ Each budgeted run is compared against an all-in-RAM twin on the SAME
 insert/read stream (read latency ratio), and against an eager all-in-RAM
 twin for label exactness — the acceptance bar: at the 10% budget on
 cora_like, >= 90% of probes answer from waters/buffer/pool (<= 10% cold
-disk reads) and labels are BIT-IDENTICAL to the eager path. Emits
+disk reads) and labels are BIT-IDENTICAL to the eager path.
+
+The cold-scan-after-update workload (ISSUE 8) measures the async read
+path itself: a band scan in boundary-outward eps order over a fully cold
+pool at the 10% budget, on a request-latency disk model (`_LatencyStore`:
+one submission latency per read CALL — batched `read_pages` amortize it).
+Synchronous baseline vs `Prefetcher` readahead; acceptance: >= 2x
+end-to-end speedup, labels still bit-identical. Emits
 ``BENCH_storage.json`` (gated by benchmarks/check_regress.py).
 """
 from __future__ import annotations
@@ -35,7 +42,7 @@ from repro.core import MulticlassView, sgd_step, zero_model
 from repro.core.engine import PROBE_TIERS
 from repro.core.hazy import HazyEngine
 from repro.data import cora_like, example_stream, multiclass_example_stream
-from repro.storage import BufferPool, EntityStore
+from repro.storage import BufferPool, EntityStore, Prefetcher
 
 BATCH = int(os.environ.get("BENCH_STORAGE_BATCH", "16"))
 READS_PER_ROUND = int(os.environ.get("BENCH_STORAGE_READS", "12"))
@@ -43,6 +50,11 @@ BUFFER_FRAC = float(os.environ.get("BENCH_STORAGE_BUFFER", "0.05"))
 BUDGETS = (0.05, 0.10, 0.25, 1.00)
 ACCEPT_BUDGET = 0.10          # the ISSUE 5 acceptance point
 ACCEPT_NON_DISK = 0.90
+# cold-scan workload (ISSUE 8): per-I/O-request submission latency of the
+# emulated disk, and the required readahead speedup at the 10% budget
+SUBMIT_US = float(os.environ.get("BENCH_STORAGE_SUBMIT_US", "120"))
+ACCEPT_COLD_SPEEDUP = 2.0
+COLD_PAGE_BYTES = 256         # 1 row/page on cora (d=64): misses dominate
 
 
 def _pool(F, frac):
@@ -132,6 +144,123 @@ def _sweep_cora():
 
 
 # ---------------------------------------------------------------------------
+# cold-scan-after-update workload (ISSUE 8): band scan at 10% budget on a
+# request-latency disk model, synchronous vs eps-order readahead
+# ---------------------------------------------------------------------------
+
+class _LatencyStore:
+    """Disk model for the cold-scan workload: every read CALL pays one
+    I/O submission latency (`SUBMIT_US` — seek + syscall, the part of a
+    real device a warm mmap page cache hides), then the real copy.
+    `read_pages` pays it ONCE for the whole batch (one scatter-gather
+    submission), which is exactly the physical effect the async read
+    path exploits: the Prefetcher turns N per-miss requests into N/batch
+    batched ones. `time.sleep` releases the GIL, so the emulated I/O
+    genuinely overlaps the scan thread like real I/O would."""
+
+    def __init__(self, store, submit_us):
+        self._inner = store
+        self._submit_s = submit_us * 1e-6
+        self.requests = 0                    # I/O submissions issued
+
+    def read_page(self, pid):
+        self.requests += 1
+        time.sleep(self._submit_s)
+        return self._inner.read_page(pid)
+
+    def read_pages(self, pids):
+        self.requests += 1
+        time.sleep(self._submit_s)
+        return self._inner.read_pages(pids)
+
+    def __getattr__(self, name):             # geometry/directory delegate
+        return getattr(self._inner, name)
+
+
+def _cold_scan():
+    """Drive updates into a hybrid view at the 10% budget, drop the pool
+    cache, then scan the band (boundary-outward eps order — band first)
+    entirely cold: once synchronously (every miss = one I/O request),
+    once with the Prefetcher streaming the next chunk while the current
+    one is served. Reports per-touch p50/p99, end-to-end speedup and the
+    readahead hit rate; labels are verified bit-identical to eager."""
+    c, rounds = _cora_workload()
+    n = c.features.shape[0]
+    store = _LatencyStore(
+        EntityStore.from_array(c.features, page_bytes=COLD_PAGE_BYTES),
+        SUBMIT_US)
+    budget = max(store.page_bytes, int(ACCEPT_BUDGET * c.features.nbytes))
+    pool = BufferPool(store, budget)
+    view, _, _ = _run_cora(c, rounds, "hybrid", pool=pool)
+    eager_view, _, _ = _run_cora(c, rounds, "eager")
+    eng = view.engine
+    schedule = eng._eps_order                # boundary-outward: band first
+    budget_pages = max(2, pool.budget_bytes // store.page_bytes)
+    # chunk = half the budget in entities: chunk t stays resident while
+    # the worker streams chunk t+1 (evict=True sweeps the older chunks)
+    chunk = max(8, (budget_pages // 2) * store.rows_per_page)
+    chunks = [schedule[j:j + chunk] for j in range(0, n, chunk)]
+
+    def scan(prefetch: bool):
+        pool.close()                         # drop cache: fully cold
+        pre = Prefetcher(pool, batch_pages=max(1, budget_pages // 2)) \
+            if prefetch else None
+        before_req = store.requests
+        lat = np.empty(n, np.float64)
+        t0 = time.perf_counter()             # includes the enqueue cost
+        pos = 0
+        for t, ids in enumerate(chunks):
+            if pre is not None:
+                if t == 0:
+                    pre.enqueue(ids, evict=True)
+                if t + 1 < len(chunks):
+                    pre.enqueue(chunks[t + 1], evict=True)
+            for i in ids:
+                ts = time.perf_counter()
+                pool.touch(int(i))
+                lat[pos] = (time.perf_counter() - ts) * 1e6
+                pos += 1
+        total = time.perf_counter() - t0
+        if pre is not None:
+            pre.drain(30)
+            pre.close()
+        return total, lat[:pos], store.requests - before_req
+
+    sync_s, sync_lat, sync_req = scan(prefetch=False)
+    ra_s, ra_lat, ra_req = scan(prefetch=True)
+    stats = pool.stats()                     # readahead counters: ON only
+    speedup = sync_s / max(ra_s, 1e-9)
+    # exactness (untimed): the budgeted hybrid view vs the eager twin
+    identical = True
+    for i in range(n):
+        labs, _ = eng.hybrid_labels_of(i)
+        if not np.array_equal(labs, eager_view.engine.labels_of(i)):
+            identical = False
+            break
+    out = {
+        "n": n, "page_bytes": COLD_PAGE_BYTES, "submit_us": SUBMIT_US,
+        "budget_bytes": pool.budget_bytes, "scan_entities": n,
+        "sync_s": sync_s, "readahead_s": ra_s, "speedup": speedup,
+        "sync_p50_us": float(np.percentile(sync_lat, 50)),
+        "sync_p99_us": float(np.percentile(sync_lat, 99)),
+        "p50_us": float(np.percentile(ra_lat, 50)),
+        "p99_us": float(np.percentile(ra_lat, 99)),
+        "io_requests_sync": sync_req,
+        "io_requests_readahead": ra_req,
+        "readahead_hit_rate": stats["readahead_hit_rate"],
+        "coalesced": stats["coalesced"],
+        "labels_bit_identical_to_eager": identical,
+    }
+    emit(f"storage_cold_scan_n{n}", out["p50_us"],
+         f"speedup={speedup:.2f};hit={stats['readahead_hit_rate']:.3f};"
+         f"req={sync_req}->{ra_req}")
+    assert identical, "cold scan: labels diverged from eager"
+    assert speedup >= ACCEPT_COLD_SPEEDUP, \
+        f"cold-scan readahead speedup {speedup:.2f} < {ACCEPT_COLD_SPEEDUP}"
+    return out
+
+
+# ---------------------------------------------------------------------------
 # FC sweep: the paper-scale binary corpus family on HazyEngine (k = 1)
 # ---------------------------------------------------------------------------
 
@@ -196,6 +325,7 @@ def _sweep_fc():
 
 def main() -> None:
     cora, accept_non_disk = _sweep_cora()
+    cora["cold_scan"] = _cold_scan()
     fc = _sweep_fc()
     payload = {
         "workload": {"n": cora["n"], "k": cora["k"], "scale": BENCH_SCALE,

@@ -26,9 +26,16 @@ Rules:
             `.write()`/`.flush()`/`.read()`/`.seek()`, socket
             send/recv/accept/connect, or a `.wait()` on any condition —
             the pool lock is the innermost, hottest lock; parking on it
-            stalls every concurrent probe. (`EntityStore.read_page` is
-            a pure mmap-slice copy, counted as a page fault by design —
-            it is NOT in the blocking set; see pool.py's module doc.)
+            stalls every concurrent probe.
+    LCK004  disk I/O under the pool lock: `.read_page()`/`.read_pages()`
+            (the `EntityStore` cold-read surface — matched by attribute
+            name, wherever the receiver came from) called, directly or
+            transitively, while the pool lock is held. The async read
+            path (pool.py's latch/in-flight protocol) exists precisely
+            so every cold mmap copy runs OFF that lock; re-inlining one
+            is a build error here and a `LockOrderError` under the
+            armed witness (`EntityStore` calls
+            `witness.assert_unlocked("pool", ...)` before each copy).
 
 Acquisition is resolved through helpers with the typed-receiver call
 graph (`repro.analysis.callgraph`), so `repin_rows` holding the pool
@@ -75,24 +82,32 @@ def _lock_of_method_call(call: ast.Call,
     return None
 
 
-def _blocking_op(call: ast.Call) -> Optional[str]:
-    """A human-readable descriptor if `call` is a known blocking
-    primitive, else None."""
+def _blocking_op(call: ast.Call) -> Optional[Tuple[str, str]]:
+    """(rule, descriptor) if `call` is a known blocking primitive under
+    the pool lock, else None. LCK004 tags the disk-read surface, LCK003
+    every other blocking primitive — the rule id rides the effect sets
+    through the call-graph fixpoint so via-callee findings keep it."""
     f = call.func
     if isinstance(f, ast.Name) and f.id == "open":
-        return "open()"
+        return ("LCK003", "open()")
     if isinstance(f, ast.Attribute):
         recv = trailing_name(f.value)
+        if f.attr in ("read_page", "read_pages"):
+            # matched by NAME: the only read_page/read_pages surface in
+            # the scanned packages is the EntityStore cold read, and
+            # receiver-type resolution is too coarse to rely on here
+            return ("LCK004", f"{recv or '<expr>'}.{f.attr}() disk page "
+                              f"read")
         if recv == "os" and f.attr in _OS_BLOCKING:
-            return f"os.{f.attr}()"
+            return ("LCK003", f"os.{f.attr}()")
         if recv == "time" and f.attr == "sleep":
-            return "time.sleep()"
+            return ("LCK003", "time.sleep()")
         if recv in _FILE_HANDLES and f.attr in _FILE_OPS:
-            return f"{recv}.{f.attr}() file I/O"
+            return ("LCK003", f"{recv}.{f.attr}() file I/O")
         if recv is not None and "sock" in recv and f.attr in _SOCKET_OPS:
-            return f"{recv}.{f.attr}() socket I/O"
+            return ("LCK003", f"{recv}.{f.attr}() socket I/O")
         if f.attr == "wait":
-            return f"{recv}.wait()"
+            return ("LCK003", f"{recv}.wait()")
     return None
 
 
@@ -101,10 +116,10 @@ def check_locks(modules: ModuleSet, graph: CallGraph) -> List[Finding]:
 
     # -- per-function direct effect sets -------------------------------
     direct_acquires: Dict[str, Set[str]] = {}
-    direct_blocks: Dict[str, Set[str]] = {}
+    direct_blocks: Dict[str, Set[Tuple[str, str]]] = {}   # (rule, op)
     for qual, info in graph.functions.items():
         acq: Set[str] = set()
-        blk: Set[str] = set()
+        blk: Set[Tuple[str, str]] = set()
         for node in ast.walk(info.node):
             if isinstance(node, (ast.With, ast.AsyncWith)):
                 for item in node.items:
@@ -154,7 +169,7 @@ def _check_acquire(lock: str, held: List[Tuple[str, int]], node: ast.AST,
 
 def _walk_function(info: FunctionInfo, graph: CallGraph,
                    may_acquire: Dict[str, Set[str]],
-                   may_block: Dict[str, Set[str]],
+                   may_block: Dict[str, Set[Tuple[str, str]]],
                    modules: ModuleSet) -> List[Finding]:
     findings: List[Finding] = []
 
@@ -190,11 +205,12 @@ def _walk_function(info: FunctionInfo, graph: CallGraph,
                         info.path, node, "LCK002",
                         f"bare .acquire() of {lm[0]!r} without the "
                         f"try/finally release shape — use `with`"))
-            op = _blocking_op(node)
+            rule_op = _blocking_op(node)
             pl = pool_held(held)
-            if op is not None and pl is not None:
+            if rule_op is not None and pl is not None:
+                rule, op = rule_op
                 findings.append(modules.finding(
-                    info.path, node, "LCK003",
+                    info.path, node, rule,
                     f"blocking operation {op} while holding the pool "
                     f"lock (taken at line {pl})"))
             for callee in set(graph.callees_of_call(info, node)):
@@ -203,9 +219,9 @@ def _walk_function(info: FunctionInfo, graph: CallGraph,
                         lock, held, node, info, modules,
                         via=callee.qualname))
                 if pl is not None:
-                    for op in sorted(may_block[callee.qualname]):
+                    for rule, op in sorted(may_block[callee.qualname]):
                         findings.append(modules.finding(
-                            info.path, node, "LCK003",
+                            info.path, node, rule,
                             f"blocking operation {op} reachable via "
                             f"{callee.qualname} while holding the pool "
                             f"lock (taken at line {pl})"))

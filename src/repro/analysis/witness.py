@@ -95,6 +95,20 @@ class _Witness:
 WITNESS = _Witness()
 
 
+def assert_unlocked(lock_id: str, what: str):
+    """Witness-armed blocking-I/O guard: raise if the CURRENT thread holds
+    `lock_id` while about to run `what` (a blocking operation that must
+    stay outside that lock). This is the live twin of the static LCK004
+    rule — `EntityStore.read_page`/`read_pages` call it so a disk read
+    accidentally re-inlined under the pool lock fails loudly in the
+    witness-armed jobs instead of silently re-serializing every probe.
+    Free when the witness is off (one attribute check)."""
+    if WITNESS.active and lock_id in WITNESS.held():
+        raise LockOrderError(
+            f"{what} while holding {lock_id!r}; held stack: "
+            f"{WITNESS.held()}")
+
+
 @contextlib.contextmanager
 def enabled():
     """Force the witness on for a scope (tests). Locks must be

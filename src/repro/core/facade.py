@@ -127,6 +127,15 @@ class EngineFacade:
         fully in RAM. `SHOW STORAGE` renders this."""
         return None
 
+    def prefetch_band(self, view: int = 0) -> int:
+        """Hand the view's PROSPECTIVE band — the entities a label scan is
+        about to classify against the current model — to the storage
+        tier's background prefetcher, boundary-outward (the eps order is
+        the disk order, §3.5.2). Advisory: returns the number of entities
+        scheduled, 0 when there is no storage tier / no prefetcher /
+        nothing in the band. Never blocks on I/O."""
+        return 0
+
     def top_margins(self, view: int = 0, limit: int = 10,
                     descending: bool = True
                     ) -> Tuple[np.ndarray, np.ndarray, int]:
@@ -258,6 +267,23 @@ class SingleViewFacade(EngineFacade):
         store = getattr(self.view.engine, "store", None)
         return store.stats() if store is not None else None
 
+    def prefetch_band(self, view=0):
+        eng = self.view.engine
+        pre = getattr(getattr(eng, "store", None), "prefetcher", None)
+        if pre is None:
+            return 0
+        lw, hw = self._prospective_waters()
+        lo, hi = band_partition(eng.eps_sorted, lw, hw)
+        if hi <= lo:
+            return 0
+        # boundary-outward: smallest |eps| first — the rows the scan's
+        # per-entity probes will miss soonest
+        band = np.arange(lo, hi)
+        ids = eng.perm[band[np.argsort(np.abs(eng.eps_sorted[lo:hi]),
+                                       kind="stable")]]
+        pre.enqueue(ids, evict=True)
+        return int(ids.size)
+
     def top_margins(self, view=0, limit=10, descending=True):
         eng = self.view.engine
         m = self.view.model
@@ -370,6 +396,22 @@ class MultiViewFacade(EngineFacade):
     def storage_stats(self):
         store = getattr(self.mc.engine, "store", None)
         return store.stats() if store is not None else None
+
+    def prefetch_band(self, view=0):
+        eng = self.mc.engine
+        pre = getattr(getattr(eng, "store", None), "prefetcher", None)
+        if pre is None:
+            return 0
+        v = int(view)
+        lw, hw = self._prospective_waters(v)
+        lo, hi = band_partition(eng.eps_sorted[v], lw, hw)
+        if hi <= lo:
+            return 0
+        band = np.arange(lo, hi)
+        ids = eng.perm[v, band[np.argsort(np.abs(eng.eps_sorted[v, lo:hi]),
+                                          kind="stable")]]
+        pre.enqueue(ids, evict=True)
+        return int(ids.size)
 
     def top_margins(self, view=0, limit=10, descending=True):
         eng = self.mc.engine

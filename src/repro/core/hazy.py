@@ -90,6 +90,8 @@ class HazyEngine:
         # §3.5.2 point-read path, exactly the paper's Fig. 8 economics.
         self.store = store
         self.disk_touches = 0      # probes that paid a COLD feature-row read
+        self._eps_order = None     # boundary-outward eps order (readahead)
+        self._eps_pos = None       # entity id -> position in _eps_order
         # initial organization (free S estimate)
         t0 = time.perf_counter()
         self._do_reorganize()
@@ -135,10 +137,35 @@ class HazyEngine:
         index idea: the eps order is the locality order). The hot-buffer
         window's pages are pinned; then pages are prefetched in
         boundary-outward eps order — the rows most likely to miss the
-        waters short-circuit (the band) — until the budget is full."""
+        waters short-circuit (the band) — until the budget is full.
+        With a `Prefetcher` attached the schedule is handed to its
+        background worker (serving overlaps the warm-up); without one it
+        warms inline, synchronously, as before."""
         self.store.repin_rows(self.perm[self._buffer_lo:self._buffer_hi])
         order = self.perm[np.argsort(np.abs(self.eps_sorted), kind="stable")]
-        self.store.warm(order)
+        # cache the boundary-outward order for per-miss readahead hints
+        self._eps_order = order
+        pos = np.empty(self.n, np.int64)
+        pos[order] = np.arange(self.n)
+        self._eps_pos = pos
+        pre = getattr(self.store, "prefetcher", None)
+        if pre is not None:
+            pre.enqueue(order)
+        else:
+            self.store.warm(order)
+
+    def _hint_readahead(self, entity_id: int, window: int = 64):
+        """Band-probe miss at eps-position p: enqueue the next `window`
+        entities boundary-outward (they are the next-most-likely misses,
+        and on disk they are the NEXT pages — eps order is locality
+        order). No-op without an attached prefetcher."""
+        pre = getattr(self.store, "prefetcher", None)
+        if pre is None or self._eps_order is None:
+            return
+        p = int(self._eps_pos[entity_id])
+        nxt = self._eps_order[p + 1:p + 1 + window]
+        if nxt.size:
+            pre.enqueue(nxt, evict=True)
 
     def reorganize(self):
         t0 = time.perf_counter()
@@ -288,6 +315,7 @@ class HazyEngine:
             f, how = self.store.touch(entity_id)
             if how == "disk":
                 self.disk_touches += 1        # cold page reads only
+                self._hint_readahead(entity_id)
             z = f @ self.model.w - self.model.b
             return int(classify(z)), how
         z = self.F[entity_id] @ self.model.w - self.model.b   # "go to disk"

@@ -119,6 +119,8 @@ class MultiViewEngine:
         # buffer_F copies) and probe misses read through the pool, which
         # subdivides the "disk" touch into pool hit vs cold page read.
         self.store = store
+        self._eps_order = None   # boundary-outward eps order (readahead)
+        self._eps_pos = None     # entity id -> position in _eps_order
         self.buffer_F: Optional[np.ndarray] = (
             np.zeros((k, self.buffer_cap, self.d), np.float32)
             if self.buffer_cap and store is None else None)
@@ -206,7 +208,29 @@ class MultiViewEngine:
         self.store.repin_rows(hot)
         eps_entity = np.take_along_axis(self.eps_sorted, self.inv_perm, axis=1)
         order = np.argsort(np.min(np.abs(eps_entity), axis=0), kind="stable")
-        self.store.warm(order)
+        # cache the boundary-outward order for per-miss readahead hints;
+        # with a Prefetcher attached the warm-up overlaps serving.
+        self._eps_order = order
+        pos = np.empty(self.n, np.int64)
+        pos[order] = np.arange(self.n)
+        self._eps_pos = pos
+        pre = getattr(self.store, "prefetcher", None)
+        if pre is not None:
+            pre.enqueue(order)
+        else:
+            self.store.warm(order)
+
+    def _hint_readahead(self, entity_id: int, window: int = 64):
+        """Probe miss at shared eps-position p: enqueue the next `window`
+        entities boundary-outward (eps order is locality order, so these
+        are the NEXT pages). No-op without an attached prefetcher."""
+        pre = getattr(self.store, "prefetcher", None)
+        if pre is None or self._eps_order is None:
+            return
+        p = int(self._eps_pos[entity_id])
+        nxt = self._eps_order[p + 1:p + 1 + window]
+        if nxt.size:
+            pre.enqueue(nxt, evict=True)
 
     # ------------------------------------------------------------------
     # One maintenance round (all k views)
@@ -396,6 +420,7 @@ class MultiViewEngine:
             tier = TIER_POOL if how == "pool" else TIER_DISK
             if tier == TIER_DISK:
                 self.disk_touches += 1       # cold page reads only
+                self._hint_readahead(entity_id)
             z = f @ self.W[view] - np.float32(self.b[view])
             self.hybrid_hits[tier] += 1
             return int(classify(z)), PROBE_TIERS[tier]
@@ -447,6 +472,7 @@ class MultiViewEngine:
                 code = TIER_POOL if how_s == "pool" else TIER_DISK
                 if code == TIER_DISK:
                     self.disk_touches += 1        # cold page reads only
+                    self._hint_readahead(entity_id)
             else:
                 f = self.F[entity_id]      # the ONE shared feature touch
                 code = TIER_DISK

@@ -21,8 +21,12 @@ the base table's feature rows live in an on-disk `EntityStore` (one
 memory-mapped file per table, SHARED by every budgeted view on it) and
 the view gets its own `BufferPool` over those pages — values in (0, 1]
 are a fraction of the entity table's bytes, values > 1 are bytes.
-`page_bytes` picks the page geometry (default 8 KiB). `SHOW STORAGE`
-renders each view's pool residency and hit/miss/eviction counters.
+`page_bytes` picks the page geometry (default 8 KiB). `prefetch = on`
+attaches a background `Prefetcher` to the pool: reorganize warm-ups and
+band-scan readahead run on its worker thread, overlapping serving (cold
+reads already run off the pool lock either way). `SHOW STORAGE` renders
+each view's pool residency and hit/miss/eviction/coalescing/readahead
+counters.
 """
 from __future__ import annotations
 
@@ -76,7 +80,7 @@ class ViewDef:
 
 _VIEW_OPTIONS = {"policy", "k", "engine", "buffer_frac", "p", "q", "alpha",
                  "lr", "l2", "cost_mode", "touch_ns", "cap_frac",
-                 "memory_budget", "page_bytes"}
+                 "memory_budget", "page_bytes", "prefetch"}
 
 
 class Catalog:
@@ -151,6 +155,10 @@ class Catalog:
         cap_frac = float(opts.pop("cap_frac", 0.5))
         memory_budget = opts.pop("memory_budget", None)
         page_bytes = int(opts.pop("page_bytes", 0)) or None
+        # parser delivers numbers as floats ("1" -> "1.0") and bare
+        # identifiers as strings ("on")
+        prefetch = str(opts.pop("prefetch", "off")).lower() in (
+            "on", "true", "1", "1.0")
 
         store = None
         if memory_budget is not None:
@@ -166,8 +174,14 @@ class Catalog:
             from repro.storage import PAGE_BYTES, BufferPool
             store = BufferPool(t.entity_store(page_bytes or PAGE_BYTES),
                                budget)
+            if prefetch:
+                from repro.storage import Prefetcher
+                Prefetcher(store)       # attaches itself as store.prefetcher
         elif page_bytes is not None:
             raise PlanError("page_bytes only applies with memory_budget")
+        elif prefetch:
+            raise PlanError("prefetch = on requires memory_budget (the "
+                            "readahead worker feeds a buffer pool)")
 
         if model == "logistic" and engine != "hazy":
             # MulticlassView/ShardedFacade train hinge SVM only; a view

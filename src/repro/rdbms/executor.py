@@ -299,20 +299,24 @@ class Executor:
         (views without a memory budget report the whole table in RAM)."""
         cols = ("view", "policy", "budget_bytes", "table_bytes",
                 "pages_resident", "pages_total", "pinned_pages", "hits",
-                "misses", "evictions", "hit_rate")
+                "misses", "evictions", "hit_rate", "in_flight", "coalesced",
+                "readahead_pages", "readahead_used")
         rows = []
         for v in self.catalog.views.values():
             st = v.facade.storage_stats()
             if st is None:
                 n_bytes = self.catalog.table(v.table).features.nbytes
                 rows.append((v.name, v.facade.policy, "in-ram", n_bytes,
-                             "-", "-", "-", "-", "-", "-", "-"))
+                             "-", "-", "-", "-", "-", "-", "-",
+                             "-", "-", "-", "-"))
             else:
                 rows.append((v.name, v.facade.policy, st["budget_bytes"],
                              st["table_bytes"], st["pages_resident"],
                              st["pages_total"], st["pinned_pages"],
                              st["hits"], st["misses"], st["evictions"],
-                             f"{st['hit_rate']:.3f}"))
+                             f"{st['hit_rate']:.3f}", st["in_flight"],
+                             st["coalesced"], st["readahead_pages"],
+                             st["readahead_used"]))
         return Result(cols, rows)
 
     def execute_prepared(self, name: str, params: Sequence[float] = (), *,
@@ -393,6 +397,10 @@ class Executor:
             # class = c picks the one-vs-all view; a conjoined label = ±1
             # picks the polarity within it (default: the members)
             positive = (w.label != -1)
+            # scan route: schedule the prospective band's pages for
+            # readahead BEFORE the catch-up relabel iterates it (advisory;
+            # no-op without a storage tier + prefetcher)
+            f.prefetch_band(v)
             ids = f.members(v, positive=positive)
             if sel.limit is not None:
                 ids = ids[:sel.limit]
@@ -405,6 +413,7 @@ class Executor:
         # bare scan: every entity's label of one view
         v = _resolve_view_index(w, f, sel.columns)
         cols = sel.columns or ["id", "label"]
+        f.prefetch_band(v)                   # advisory band readahead
         pos = set(int(x) for x in f.members(v, True))   # catches up the view
         ids = np.arange(f.n)
         if sel.limit is not None:

@@ -16,7 +16,11 @@ not storage economics. This package supplies the missing physical layer:
     prefetch-warming along the eps clustering order (the paper's index
     idea: the eps order IS the locality order), and per-tier hit / miss /
     eviction counters that make `BENCH_storage.json` mean something
-    physical.
+    physical. Cold reads run OFF the pool lock behind per-page latches
+    (miss coalescing: concurrent missers of one page share one read).
+  * `Prefetcher` (prefetch.py) — a background readahead worker fed by
+    the engines: band-probe misses and reorganize schedules stream their
+    eps-order page windows into the pool while serving continues.
 
 The engine shells (`core/hazy.py`, `core/multiview.py`) take an optional
 `store=BufferPool(...)`; when present, every probe that the waters cannot
@@ -26,6 +30,7 @@ resolve goes through `BufferPool.get_row(entity_id)` instead of an in-RAM
 (memory_budget = ...)` and `SHOW STORAGE` expose residency through SQL.
 """
 from repro.storage.pool import BufferPool
+from repro.storage.prefetch import Prefetcher
 from repro.storage.store import PAGE_BYTES, EntityStore
 
-__all__ = ["BufferPool", "EntityStore", "PAGE_BYTES"]
+__all__ = ["BufferPool", "EntityStore", "PAGE_BYTES", "Prefetcher"]

@@ -7,9 +7,9 @@ Semantics (the §3.5.2 storage economics, made physical):
     MISS ("disk" tier: one `EntityStore.read_page` cold read, then the
     page is admitted and the budget enforced by eviction).
   * eviction — clock (second-chance): a sweep clears reference bits and
-    evicts the first unreferenced, UNPINNED frame. Pinned frames are
-    never evicted, whatever the budget says; if everything is pinned the
-    pool overcommits rather than corrupting a pin.
+    evicts the first unreferenced, UNPINNED, settled frame. Pinned and
+    in-flight frames are never evicted, whatever the budget says; if
+    everything is pinned the pool overcommits rather than corrupting a pin.
   * pins — the §3.5.2 hot buffers are pinned pool pages. `repin_rows`
     pins the pages covering the new hot-buffer window (faulting them in
     as prefetches, not misses) before unpinning the old window, capped so
@@ -20,39 +20,69 @@ Semantics (the §3.5.2 storage economics, made physical):
     (the band) are exactly the rows made resident — the paper's index
     idea, the eps order IS the locality order.
 
-Counters reconcile by construction: hits + misses == probes (every
-`get_row`/`touch` call is exactly one of the two); warming is counted
-separately as `prefetches`.
+Counters reconcile by construction: hits + misses + coalesced == probes
+(every `get_row`/`touch` call is exactly one of the three); warming is
+counted separately as `prefetches`, background readahead as
+`readahead_pages` (with `readahead_used` counting the first probe that
+consumed each readahead page).
 
-Thread safety: the pool is shared by every concurrent session of the SQL
-server, so ONE reentrant lock guards every compound invariant — the
-(`frames`, `_clock`, `_hand`, `resident_bytes`) quartet mutated by
-admission/eviction, the pin bookkeeping, and the counters. Without it two
-concurrent `get_row` calls can both miss the same page (double-admitting
-it and double-counting `resident_bytes`), and a clock sweep interleaved
-with `pin_rows` can evict a page between its admission and its
-`pin_count += 1` — exactly the races the regression test hammers. Reads
-of a resident row copy the slot under the lock; the mmap `read_page` cold
-read happens inside the lock too (correctness first — the async/prefetch
-I/O path can move it out later by admitting a placeholder frame).
+Thread safety + the ASYNC COLD-READ protocol: the pool is shared by every
+concurrent session of the SQL server, so ONE reentrant lock guards every
+compound invariant — the (`frames`, `_clock`, `_hand`, `resident_bytes`)
+quartet mutated by admission/eviction, the pin bookkeeping, and the
+counters. The mmap `read_page` copy, however, runs with NO lock held:
+
+    miss ──▶ [lock] install placeholder Frame(data=None, latch) ──▶ [unlock]
+              │                                                       │
+              │  concurrent missers of the SAME page                  ▼
+              └─▶ [lock] see data=None ─▶ [unlock] latch.wait()   read_page
+                  (counted `coalesced`, NOT a second disk read)       │
+                                                                      ▼
+              [lock] publish data into the frame, evict to budget ──▶ latch.set()
+
+A placeholder charges `resident_bytes` at install time (its size is known
+from the page directory without reading anything), so budget accounting
+never undercounts in-flight I/O; the clock sweep skips `data is None`
+frames exactly like pinned ones. If the read fails, the placeholder is
+removed, the error is stored on the frame, and every waiter re-raises it.
+Waiters keep a reference to the frame OBJECT, so a page evicted between
+publish and wake-up still hands them the (immutable, byte-exact) data.
+
+`EntityStore.read_page`/`read_pages` assert — under `REPRO_LOCK_WITNESS=1`
+— that the calling thread does NOT hold the pool lock, and the static
+LCK004 rule (`repro.analysis.locks`) proves the same at rest: re-inlining
+a disk read under the lock is a build error, not a perf regression.
+
+Background readahead lives in `repro.storage.prefetch.Prefetcher`, which
+feeds `_prefetch_pages` from its own thread; `pool.prefetcher` is the
+attachment point the engines probe for.
 """
 from __future__ import annotations
 
 import dataclasses
 import threading
-from typing import Dict, Iterable, List, Tuple
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.analysis.witness import wrap
 from repro.storage.store import EntityStore
 
+#: placeholder frames installed per lock hold by the batched prefetch
+#: path — bounds both lock hold time and the transient overshoot of the
+#: evicting (streaming-readahead) mode to one batch of pages.
+LOAD_BATCH_PAGES = 64
+
 
 @dataclasses.dataclass
 class Frame:
-    data: np.ndarray           # (rows_in_page, d) float32, private copy
+    data: Optional[np.ndarray]  # (rows_in_page, d) float32; None = IN FLIGHT
+    nbytes: int                 # page size, charged to the budget at install
     pin_count: int = 0
-    ref: bool = True           # clock reference bit
+    ref: bool = True            # clock reference bit
+    latch: Optional[threading.Event] = None   # set when the load settles
+    error: Optional[BaseException] = None     # loader failure, for waiters
+    readahead: bool = False     # loaded by the Prefetcher, not yet consumed
 
 
 class BufferPool:
@@ -60,7 +90,7 @@ class BufferPool:
         self.store = store
         # the pool must be able to hold at least one page
         self.budget_bytes = max(int(budget_bytes), store.page_bytes)
-        # reentrant: repin_rows -> pin_rows -> _admit all hold it
+        # reentrant: repin_rows -> pin_rows -> install helpers all hold it
         self._lock = wrap(threading.RLock(), "pool")
         self.frames: Dict[int, Frame] = {}
         self._clock: List[int] = []                # page ids, clock order
@@ -68,14 +98,19 @@ class BufferPool:
         self.resident_bytes = 0
         self.hits = 0
         self.misses = 0
+        self.coalesced = 0          # probes that waited on another's read
+        self.in_flight = 0          # gauge: placeholder frames outstanding
         self.evictions = 0
-        self.prefetches = 0
+        self.prefetches = 0         # warm()/pin fault-ins
+        self.readahead_pages = 0    # pages loaded by the Prefetcher
+        self.readahead_used = 0     # readahead pages a probe then consumed
         self._hot_pins: List[int] = []             # pages pinned for hot buffers
+        self.prefetcher = None      # Prefetcher attaches itself here
 
     # -- read path -----------------------------------------------------
     @property
     def probes(self) -> int:
-        return self.hits + self.misses
+        return self.hits + self.misses + self.coalesced
 
     def resident(self, entity_id: int) -> bool:
         with self._lock:
@@ -83,45 +118,92 @@ class BufferPool:
 
     def touch(self, entity_id: int) -> Tuple[np.ndarray, str]:
         """Read one entity row; returns (row, "pool"|"disk")."""
-        pid = int(self.store.dir_page[entity_id])
-        slot = int(self.store.dir_slot[entity_id])
-        with self._lock:
-            fr = self.frames.get(pid)
-            if fr is not None:
-                fr.ref = True
-                self.hits += 1
-                return fr.data[slot], "pool"
-            self.misses += 1
-            fr = self._admit(pid)
-            return fr.data[slot], "disk"
+        data, how = self._page(int(self.store.dir_page[entity_id]))
+        return data[int(self.store.dir_slot[entity_id])], how
 
     def get_row(self, entity_id: int) -> np.ndarray:
         return self.touch(entity_id)[0]
 
-    # -- admission / eviction ------------------------------------------
-    def _admit(self, pid: int, *, prefetch: bool = False) -> Frame:
-        fr = Frame(self.store.read_page(pid))
+    def _page(self, pid: int) -> Tuple[np.ndarray, str]:
+        """Resolve one page: hit, coalesced wait, or loader miss. The cold
+        `read_page` copy runs with NO lock held (see the module doc)."""
+        while True:
+            with self._lock:
+                fr = self.frames.get(pid)
+                if fr is None:
+                    fr = self._install_placeholder(pid)
+                    self.misses += 1
+                    latch = fr.latch
+                    break                          # -> loader path below
+                fr.ref = True
+                if fr.readahead:
+                    fr.readahead = False
+                    self.readahead_used += 1
+                if fr.data is not None:
+                    self.hits += 1
+                    return fr.data, "pool"
+                self.coalesced += 1                # someone else is reading
+                latch = fr.latch
+            latch.wait()                           # park OFF the lock
+            if fr.error is not None:
+                raise fr.error
+            if fr.data is not None:                # frame object outlives
+                return fr.data, "disk"             # any eviction race
+            # loader dropped the frame without data or error: retry
+        try:
+            data = self.store.read_page(pid)       # THE cold read, unlocked
+        except BaseException as e:
+            with self._lock:
+                fr.error = e
+                self._drop_inflight(pid, fr)
+            latch.set()
+            raise
+        with self._lock:
+            self._publish(pid, fr, data)
+            self._evict_to_budget()
+        latch.set()
+        return data, "disk"
+
+    # -- admission / eviction (helpers suffixed-by-contract: callers hold
+    # the pool lock; none of them block) -------------------------------
+    def _install_placeholder(self, pid: int) -> Frame:
+        fr = Frame(None, self.store.page_nbytes(pid),
+                   latch=threading.Event())
         self.frames[pid] = fr
         self._clock.append(pid)
-        self.resident_bytes += fr.data.nbytes
-        if prefetch:
-            self.prefetches += 1
-        else:
-            self._evict_to_budget()
+        self.resident_bytes += fr.nbytes           # charged while in flight
+        self.in_flight += 1
         return fr
+
+    def _publish(self, pid: int, fr: Frame, data: np.ndarray):
+        fr.data = data
+        fr.ref = True
+        self.in_flight = max(0, self.in_flight - 1)
+
+    def _drop_inflight(self, pid: int, fr: Frame):
+        """Remove a placeholder whose read failed (waiters re-raise via
+        `fr.error`; the frame object keeps carrying it after removal)."""
+        if self.frames.get(pid) is fr:
+            del self.frames[pid]
+            self._clock.remove(pid)
+            if self._hand >= len(self._clock):
+                self._hand = 0
+            self.resident_bytes -= fr.nbytes
+        self.in_flight = max(0, self.in_flight - 1)
 
     def _evict_to_budget(self):
         """Clock sweep until resident_bytes <= budget or nothing is
-        evictable (all frames pinned -> overcommit rather than drop a pin)."""
+        evictable (pinned/in-flight only -> overcommit rather than drop
+        a pin or rip a page out from under its loader)."""
         skipped = 0
         while self.resident_bytes > self.budget_bytes and self._clock:
             if skipped > 2 * len(self._clock):
-                break                               # only pinned frames left
+                break                       # only pinned/in-flight left
             if self._hand >= len(self._clock):
                 self._hand = 0
             pid = self._clock[self._hand]
             fr = self.frames[pid]
-            if fr.pin_count > 0:
+            if fr.pin_count > 0 or fr.data is None:
                 self._hand += 1
                 skipped += 1
                 continue
@@ -132,9 +214,30 @@ class BufferPool:
                 continue
             del self.frames[pid]
             self._clock.pop(self._hand)             # hand now at the next frame
-            self.resident_bytes -= fr.data.nbytes
+            self.resident_bytes -= fr.nbytes
             self.evictions += 1
             skipped = 0
+
+    def _load_frames(self, loads: Sequence[Tuple[int, Frame]]):
+        """Read + publish placeholder frames installed by THIS caller.
+        One batched `read_pages` (contiguous runs collapse to single mmap
+        copies), NO lock held during the I/O."""
+        latches = [fr.latch for _, fr in loads]
+        try:
+            datas = self.store.read_pages([pid for pid, _ in loads])
+        except BaseException as e:
+            with self._lock:
+                for pid, fr in loads:
+                    fr.error = e
+                    self._drop_inflight(pid, fr)
+            for latch in latches:
+                latch.set()
+            raise
+        with self._lock:
+            for (pid, fr), data in zip(loads, datas):
+                self._publish(pid, fr, data)
+        for latch in latches:
+            latch.set()
 
     # -- pins (hot buffers) --------------------------------------------
     def _ordered_pages(self, entity_ids: Iterable[int]) -> np.ndarray:
@@ -152,34 +255,54 @@ class BufferPool:
         _, first = np.unique(pages, return_index=True)
         return pages[np.sort(first)]
 
+    def _pinned_bytes_locked(self, exclude: Iterable[int] = ()) -> int:
+        ex = set(int(p) for p in exclude)
+        return sum(fr.nbytes for pid, fr in self.frames.items()
+                   if fr.pin_count > 0 and pid not in ex)
+
     def pinned_bytes(self) -> int:
         with self._lock:
-            return sum(fr.data.nbytes for fr in self.frames.values()
-                       if fr.pin_count > 0)
+            return self._pinned_bytes_locked()
 
     def pin_rows(self, entity_ids: Iterable[int]) -> List[int]:
         """Pin the pages covering `entity_ids` (in first-appearance order),
         faulting absent ones in as prefetches. Pins are capped so that the
         pinned set alone never exceeds the budget (at least one page is
         always pinned if any id was given). Returns the pinned page ids."""
+        return self._pin_pages(self._ordered_pages(entity_ids), exclude=())
+
+    def _pin_pages(self, pages: np.ndarray, *,
+                   exclude: Iterable[int]) -> List[int]:
+        """Pin `pages` up to the budget cap, with `exclude`'s pages not
+        charged against the cap (repin: the old window releases its claim).
+        Absent pages are installed as PINNED placeholders under the lock
+        and their reads run after the lock is released — a concurrent
+        sweep can never reclaim them mid-fault."""
         with self._lock:
-            pinned: List[int] = []
-            budget_left = self.budget_bytes - self.pinned_bytes()
-            for pid in self._ordered_pages(entity_ids):
+            budget_left = self.budget_bytes - self._pinned_bytes_locked(
+                exclude)
+            targets: List[int] = []
+            loads: List[Tuple[int, Frame]] = []
+            for pid in pages:
                 pid = int(pid)
                 size = self.store.page_nbytes(pid)
-                if pinned and size > budget_left:
+                if targets and size > budget_left:
                     break
                 fr = self.frames.get(pid)
                 if fr is None:
-                    fr = self._admit(pid, prefetch=True)
+                    fr = self._install_placeholder(pid)
+                    self.prefetches += 1
+                    loads.append((pid, fr))
                 fr.pin_count += 1
                 fr.ref = True
-                pinned.append(pid)
+                targets.append(pid)
                 budget_left -= size
-            if pinned:
+        if loads:
+            self._load_frames(loads)
+        if targets:
+            with self._lock:
                 self._evict_to_budget()
-            return pinned
+        return targets
 
     def unpin(self, page_ids: Iterable[int]):
         with self._lock:
@@ -190,32 +313,69 @@ class BufferPool:
 
     def repin_rows(self, entity_ids: Iterable[int]):
         """Move the hot-buffer pin set to the pages of `entity_ids`. The
-        OLD window is unpinned first so its pages release their budget
-        claim before the new window's pin cap is computed — otherwise a
-        full-budget window would cap its own replacement at ~one page.
-        The whole move holds the pool lock, so no concurrent admission can
-        sweep the briefly-unpinned overlap pages out from under the
-        re-pin, and overlap pages are still resident when re-pinned."""
+        NEW window is pinned first with the OLD window's pages excluded
+        from the budget cap (they release their claim at the same move,
+        so a full-budget window never caps its own replacement), then the
+        old pins are dropped. Overlap pages are double-pinned for the
+        duration — pin_count never dips to 0 — so no concurrent sweep can
+        evict them mid-move, without holding the lock across the fault-in
+        reads."""
+        old = self._hot_pins
+        self._hot_pins = self._pin_pages(self._ordered_pages(entity_ids),
+                                         exclude=old)
+        self.unpin(old)
         with self._lock:
-            self.unpin(self._hot_pins)
-            self._hot_pins = self.pin_rows(entity_ids)
             self._evict_to_budget()
 
-    # -- warming -------------------------------------------------------
+    # -- warming / readahead -------------------------------------------
     def warm(self, entity_ids: Iterable[int]):
         """Prefetch the pages of `entity_ids` IN ORDER until the budget is
-        full; never evicts (already-resident pages just get a reference)."""
-        with self._lock:
-            for pid in self._ordered_pages(entity_ids):
-                pid = int(pid)
-                fr = self.frames.get(pid)
-                if fr is not None:
-                    fr.ref = True
-                    continue
-                if self.resident_bytes + self.store.page_nbytes(pid) \
-                        > self.budget_bytes:
-                    break
-                self._admit(pid, prefetch=True)
+        full; never evicts (already-resident pages just get a reference).
+        The reads run OFF the lock in placeholder batches."""
+        self._prefetch_pages(self._ordered_pages(entity_ids), evict=False)
+
+    def _prefetch_pages(self, pages, *, evict: bool = False,
+                        readahead: bool = False,
+                        batch: int = LOAD_BATCH_PAGES) -> int:
+        """Load absent pages IN ORDER: `batch` placeholders installed per
+        lock hold, then one batched read with no lock held. evict=False
+        stops at the budget (warm semantics); evict=True keeps streaming
+        and sweeps after each batch (scan readahead — transient overshoot
+        bounded by one batch). Returns the number of pages loaded."""
+        pages = [int(p) for p in np.asarray(pages).ravel()]
+        batch = max(1, min(int(batch),
+                           self.budget_bytes // self.store.page_bytes or 1))
+        loaded, i, full = 0, 0, False
+        while i < len(pages) and not full:
+            loads: List[Tuple[int, Frame]] = []
+            with self._lock:
+                while i < len(pages) and len(loads) < batch:
+                    pid = pages[i]
+                    fr = self.frames.get(pid)
+                    if fr is not None:
+                        fr.ref = True
+                        i += 1
+                        continue
+                    size = self.store.page_nbytes(pid)
+                    if not evict and (self.resident_bytes + size
+                                      > self.budget_bytes):
+                        full = True                # budget full: stop, but
+                        break                      # still load this batch
+                    fr = self._install_placeholder(pid)
+                    if readahead:
+                        fr.readahead = True
+                        self.readahead_pages += 1
+                    else:
+                        self.prefetches += 1
+                    loads.append((pid, fr))
+                    i += 1
+            if loads:
+                self._load_frames(loads)
+                loaded += len(loads)
+                if evict:
+                    with self._lock:
+                        self._evict_to_budget()
+        return loaded
 
     # -- introspection -------------------------------------------------
     def stats(self) -> dict:
@@ -235,8 +395,14 @@ class BufferPool:
                                 if fr.pin_count > 0),
             "hits": self.hits,
             "misses": self.misses,
+            "coalesced": self.coalesced,
+            "in_flight": self.in_flight,
             "evictions": self.evictions,
             "prefetches": self.prefetches,
+            "readahead_pages": self.readahead_pages,
+            "readahead_used": self.readahead_used,
+            "readahead_hit_rate": (self.readahead_used / self.readahead_pages
+                                   if self.readahead_pages else 1.0),
             "probes": probes,
             "hit_rate": self.hits / probes if probes else 1.0,
         }
@@ -249,4 +415,5 @@ class BufferPool:
             self._clock.clear()
             self._hand = 0
             self.resident_bytes = 0
+            self.in_flight = 0
             self._hot_pins = []

@@ -16,9 +16,11 @@ from __future__ import annotations
 
 import os
 import tempfile
-from typing import Optional
+from typing import List, Optional, Sequence
 
 import numpy as np
+
+from repro.analysis.witness import assert_unlocked
 
 PAGE_BYTES = 8192          # default page size (rows are grouped to ~8 KiB)
 
@@ -78,14 +80,47 @@ class EntityStore:
         return np.arange(lo, min(self.n, lo + self.rows_per_page))
 
     # -- I/O -----------------------------------------------------------
+    # Both readers assert (witness-armed only) that the caller does NOT
+    # hold the pool lock: a disk read is the blocking operation the async
+    # read path exists to keep off that lock (static twin: LCK004).
+
     def read_page(self, page_id: int) -> np.ndarray:
         """Materialize one page into private memory — the 'disk read'."""
         if self._mmap is None:
             raise ValueError("entity store is closed")
+        assert_unlocked("pool", "EntityStore.read_page disk I/O")
         lo = page_id * self.rows_per_page
         hi = min(self.n, lo + self.rows_per_page)
         self.page_reads += 1
         return np.array(self._mmap[lo:hi])            # copy out of the mmap
+
+    def read_pages(self, page_ids: Sequence[int]) -> List[np.ndarray]:
+        """Batched `read_page`: one mmap slice copy per CONTIGUOUS RUN of
+        page ids (prefetch schedules along the entity order collapse into
+        a few big slabs; scattered eps-order schedules degrade to one copy
+        per page). Counts `len(page_ids)` page reads — exactly what the
+        equivalent `read_page` loop would — and returns per-page arrays
+        aligned with the input order."""
+        if self._mmap is None:
+            raise ValueError("entity store is closed")
+        assert_unlocked("pool", "EntityStore.read_pages disk I/O")
+        pids = [int(p) for p in page_ids]
+        self.page_reads += len(pids)
+        out: List[np.ndarray] = []
+        i = 0
+        while i < len(pids):
+            j = i                              # maximal run pids[i..j]
+            while j + 1 < len(pids) and pids[j + 1] == pids[j] + 1:
+                j += 1
+            lo = pids[i] * self.rows_per_page
+            hi = min(self.n, (pids[j] + 1) * self.rows_per_page)
+            block = np.array(self._mmap[lo:hi])       # ONE copy per run
+            for t in range(j - i + 1):                # per-page views of it
+                a = t * self.rows_per_page
+                b = min(a + self.rows_per_page, block.shape[0])
+                out.append(block[a:b])
+            i = j + 1
+        return out
 
     def close(self):
         if self._mmap is not None:

@@ -1,0 +1,41 @@
+"""Disk page reads inlined under the pool lock (LCK004) — the exact
+regression the async read path removed: a cold mmap copy serializing
+every concurrent probe behind `_lock`."""
+import threading
+
+from repro.analysis.witness import wrap
+
+
+class EntityStore:
+    def __init__(self, pages):
+        self.pages = pages
+        self.page_reads = 0
+
+    def read_page(self, pid):
+        self.page_reads += 1
+        return self.pages[pid]
+
+    def read_pages(self, pids):
+        self.page_reads += len(pids)
+        return [self.pages[p] for p in pids]
+
+
+class BufferPool:
+    def __init__(self, store):
+        self.store = store
+        self._lock = wrap(threading.RLock(), "pool")
+        self.frames = {}
+
+    def touch(self, pid):
+        with self._lock:                           # every concurrent probe
+            data = self.store.read_page(pid)       # stalls on this cold read
+            self.frames[pid] = data
+            return data
+
+    def _admit_all(self, pids):
+        return self.store.read_pages(pids)         # blocking, via callee
+
+    def warm(self, pids):
+        with self._lock:
+            for pid, data in zip(pids, self._admit_all(pids)):
+                self.frames[pid] = data

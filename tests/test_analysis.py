@@ -53,6 +53,14 @@ def test_lock_blocking_under_pool():
                                                  (15, "LCK003")]
 
 
+def test_lock_read_under_pool():
+    """LCK004: a cold `read_page` inlined under the pool lock (direct at
+    line 31) and a `read_pages` reachable through `_admit_all` from
+    inside the lock (via-callee, at warm's call line 40)."""
+    assert _findings("bad_lock_read_under_pool.py") == [(31, "LCK004"),
+                                                        (40, "LCK004")]
+
+
 def test_band_rederivation():
     found = _findings("bad_band_rederived.py")
     assert set(found) == {(6, "SRC001"), (7, "SRC001"), (12, "SRC001")}
@@ -131,6 +139,30 @@ def test_witness_reports_gate_reentry_instead_of_deadlocking():
             with pytest.raises(witness.LockOrderError, match="reentrant"):
                 with gate.write():
                     pass                    # pragma: no cover
+
+
+def test_witness_catches_read_under_pool_lock_live():
+    """`assert_unlocked` — the live twin of LCK004: a REAL EntityStore
+    cold read under a witnessed pool lock raises instead of silently
+    re-serializing every probe."""
+    import threading
+
+    import numpy as np
+
+    from repro.storage import EntityStore
+
+    F = np.ones((8, 4), np.float32)
+    with witness.enabled():
+        store = EntityStore.from_array(F, page_bytes=64)
+        lock = witness.wrap(threading.RLock(), "pool")
+        with lock:
+            with pytest.raises(witness.LockOrderError, match="read_page"):
+                store.read_page(0)
+            with pytest.raises(witness.LockOrderError, match="read_pages"):
+                store.read_pages([0, 1])
+        # off the lock the same reads are legal
+        assert store.read_page(0).shape[0] > 0
+    store.close()
 
 
 def test_witness_off_means_raw_locks():

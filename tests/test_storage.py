@@ -4,8 +4,11 @@ the §3.5.2 probe economics (ISSUE 5).
 The non-negotiables:
   * eviction NEVER drops a pinned (hot-buffer) page, whatever the budget;
   * `get_row` after an eviction re-reads byte-identical rows from disk;
-  * tier counters reconcile — hits + misses == probes, and the engines'
-    cold `disk_touches` equals the pool's miss count;
+  * tier counters reconcile — hits + misses + coalesced == probes, and
+    the engines' cold `disk_touches` equals the pool's miss count;
+  * cold reads run OFF the pool lock: a concurrent miss storm on one
+    page coalesces to exactly ONE disk read, eviction never reclaims an
+    in-flight frame, and the `Prefetcher` shuts down cleanly;
   * hybrid labels under a tiny (5%) budget are BIT-IDENTICAL to the
     all-in-RAM eager path on the same insert stream.
 """
@@ -319,10 +322,158 @@ def test_pool_concurrent_probes_never_corrupt_or_evict_pins():
     assert not any(t.is_alive() for t in threads)
     assert not errors, errors[:3]
     # exact counter reconciliation: no increment was lost to a data race
-    assert pool.hits + pool.misses == pool.probes
+    # (a probe is a hit, a miss, or coalesced onto another miss's read)
+    assert pool.hits + pool.misses + pool.coalesced == pool.probes
     assert pool.probes - probes0 == per_thread * n_threads
     for pid in pinned:
         assert pool.frames[pid].pin_count > 0
+    assert pool.in_flight == 0
     assert pool.resident_bytes <= pool.budget_bytes + pool.store.page_bytes
     stats = pool.stats()
-    assert stats["hits"] + stats["misses"] == stats["probes"]
+    assert (stats["hits"] + stats["misses"] + stats["coalesced"]
+            == stats["probes"])
+    # coalesced probes share a read: every miss paid one read_page, every
+    # coalesced probe paid none (pins/warming are counted separately)
+    assert pool.store.page_reads <= pool.misses + pool.prefetches
+
+
+def test_cold_miss_storm_coalesces_to_one_disk_read():
+    """N threads cold-miss ONE page simultaneously: exactly one
+    `read_page` hits the store, one probe is the miss, the other N-1 are
+    coalesced waiters — and every thread gets byte-exact rows."""
+    import threading
+
+    F = _features(n=64, d=16, seed=21)
+    store = EntityStore.from_array(F, page_bytes=512)
+    pool = BufferPool(store, F.nbytes)
+    rows = store.page_row_ids(0)             # all ids on page 0
+    n_threads = 8
+    start = threading.Barrier(n_threads)
+    results, errors = [], []
+    inner = store.read_page
+
+    def gated_read(pid):                     # hold the one cold read open
+        deadline = 200                       # until every waiter has parked
+        while pool.coalesced < n_threads - 1 and deadline:
+            threading.Event().wait(0.01)
+            deadline -= 1
+        return inner(pid)
+
+    store.read_page = gated_read
+
+    def storm(t):
+        i = int(rows[t % len(rows)])
+        try:
+            start.wait()
+            row, how = pool.touch(i)
+            results.append((i, row.tobytes(), how))
+        except Exception as e:              # noqa: BLE001 — surfaced below
+            errors.append(repr(e))
+
+    threads = [threading.Thread(target=storm, args=(t,), daemon=True)
+               for t in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(30)
+    assert not errors, errors[:3]
+    assert len(results) == n_threads
+    assert store.page_reads == 1             # THE coalescing guarantee
+    assert pool.misses == 1
+    assert pool.coalesced == n_threads - 1
+    assert pool.hits == 0
+    assert pool.in_flight == 0
+    for i, raw, how in results:
+        assert raw == F[i].tobytes(), i
+        assert how == "disk"                 # miss AND waiters: cold tier
+
+
+def test_eviction_never_reclaims_in_flight_frames():
+    """The clock sweep must skip placeholder (data=None) frames: an
+    in-flight page under budget pressure survives until its loader
+    publishes, and the waiter still gets exact bytes."""
+    import threading
+
+    F = _features(n=64, d=16, seed=22)
+    store = EntityStore.from_array(F, page_bytes=512)
+    pool = BufferPool(store, store.page_bytes)       # budget: ONE page
+    gate = threading.Event()
+    inner = store.read_page
+
+    def slow_read(pid):
+        gate.wait(10)                        # hold page 0's read open
+        return inner(pid)
+
+    store.read_page = slow_read
+    t = threading.Thread(target=lambda: pool.get_row(0), daemon=True)
+    t.start()
+    while pool.in_flight == 0:               # loader installed, now blocked
+        pass
+    store.read_page = inner                  # other pages read normally
+    pool.get_row(int(store.page_row_ids(1)[0]))      # forces a sweep
+    with pool._lock:
+        assert 0 in pool.frames              # placeholder NOT evicted
+        assert pool.frames[0].data is None
+    gate.set()
+    t.join(30)
+    assert not t.is_alive()
+    assert pool.get_row(0).tobytes() == F[0].tobytes()
+    assert pool.in_flight == 0
+
+
+def test_read_pages_batches_are_byte_exact():
+    F = _features(n=96, d=16, seed=23)
+    store = EntityStore.from_array(F, page_bytes=256)
+    assert store.num_pages >= 8
+    pids = [0, 1, 2, 5, 7, 3, 4]             # contiguous runs + scatter
+    before = store.page_reads
+    pages = store.read_pages(pids)
+    assert store.page_reads - before == len(pids)
+    for pid, page in zip(pids, pages):
+        assert page.tobytes() == store.read_page(pid).tobytes(), pid
+
+
+def test_prefetcher_readahead_counters_and_clean_shutdown():
+    from repro.storage import Prefetcher
+
+    F = _features(n=256, d=16, seed=24)
+    pool = _pool(F, 0.50)
+    pre = Prefetcher(pool, batch_pages=4)
+    assert pool.prefetcher is pre and pre.alive
+    pre.enqueue(range(64), evict=True)       # streaming readahead
+    assert pre.drain(10)
+    assert pool.readahead_pages > 0
+    used0 = pool.readahead_used
+    pool.get_row(0)                          # consume a readahead page
+    assert pool.readahead_used == used0 + 1
+    assert pool.hits >= 1                    # readahead turned it into a hit
+    st = pool.stats()
+    assert 0.0 <= st["readahead_hit_rate"] <= 1.0
+    assert st["readahead_pages"] == pool.readahead_pages
+    pre.close()
+    assert not pre.alive                     # no dangling thread
+    assert pool.prefetcher is None
+    pre.close()                              # idempotent
+
+
+def test_prefetcher_warm_mode_respects_budget_and_pins():
+    from repro.storage import Prefetcher
+
+    F = _features(n=256, d=16, seed=25)
+    pool = _pool(F, 0.10)
+    pool.repin_rows(range(8))
+    pinned = set(pool._hot_pins)
+    pre = Prefetcher(pool)
+    pre.enqueue(range(F.shape[0]))           # warm semantics: stop at budget
+    assert pre.drain(10)
+    assert pool.resident_bytes <= pool.budget_bytes
+    assert pinned <= set(pool.frames)        # pins untouched
+    for pid in pinned:
+        assert pool.frames[pid].pin_count > 0
+    # streaming mode may overshoot transiently but sweeps back per batch
+    pre.enqueue(range(F.shape[0]), evict=True)
+    assert pre.drain(10)
+    assert pinned <= set(pool.frames)
+    assert (pool.resident_bytes
+            <= pool.budget_bytes + pre.batch_pages * pool.store.page_bytes)
+    pre.close()
