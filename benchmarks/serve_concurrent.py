@@ -155,6 +155,32 @@ def main() -> None:
     # flush the uncommitted tail so the WAL history is commit-terminated,
     # then freeze it for the serial replay
     ex.execute_one("COMMIT")
+
+    # -- telemetry reconciliation over the wire (CI serve-smoke gate) ----
+    # the unified registry must agree with itself after the swarm: the
+    # epoch IS the WAL commit counter, every statement took the gate, and
+    # the pool's probe ledger balances exactly.
+    with SqlClient.connect(host, port) as mc:
+        snap = mc.metrics()
+    for key in ("counters", "gauges", "histograms", "wal", "view.topics",
+                "epoch"):
+        assert key in snap, f"metrics snapshot missing {key!r}"
+    counters = snap["counters"]
+    assert snap["epoch"] == snap["wal"]["commits"] == \
+        counters["wal.commits"], (snap["epoch"], snap["wal"]["commits"],
+                                  counters["wal.commits"])
+    assert counters["gate.shared_acquisitions"] \
+        + counters["gate.exclusive_acquisitions"] >= \
+        counters["statements"], counters
+    st_tel = snap["view.topics"].get("storage")
+    if st_tel is not None:
+        assert st_tel["hits"] + st_tel["misses"] + st_tel["coalesced"] == \
+            st_tel["probes"], st_tel
+    assert snap["histograms"]["statement.seconds"]["count"] == \
+        counters["statements"], (
+            snap["histograms"]["statement.seconds"]["count"],
+            counters["statements"])     # quiesced: every statement timed
+
     handle.stop()
     history = list(ex.log.history)
 
@@ -196,6 +222,15 @@ def main() -> None:
                    "statements": handle.server.statements_served},
         "hybrid_tier_hits": dict(f_conc.tier_hits),
         "storage": f_conc.storage_stats(),
+        "telemetry": {
+            "statements": counters["statements"],
+            "errors": counters.get("statements.errors", 0),
+            "gate_shared": counters["gate.shared_acquisitions"],
+            "gate_exclusive": counters["gate.exclusive_acquisitions"],
+            "wal_commits": counters["wal.commits"],
+            "statement_p99_s":
+                snap["histograms"]["statement.seconds"]["p99"],
+        },
     }
     with open("BENCH_serve.json", "w") as f:
         json.dump(payload, f, indent=2)

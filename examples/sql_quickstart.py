@@ -100,6 +100,24 @@ def main():
     print("\n-- SHOW STORAGE (the 10% memory budget, physically):")
     print(ex.execute_one("SHOW STORAGE").pretty())
 
+    # EXPLAIN ANALYZE: execute for real, annotate the plan with the span
+    # tree and the EXACT tier/pool counter deltas the statement caused ----
+    print("\n-- EXPLAIN ANALYZE a point lookup (measured spans + tiers):")
+    print(ex.execute_one(
+        f"EXPLAIN ANALYZE SELECT label FROM topics "
+        f"WHERE id = {probe} AND view = 1").pretty())
+
+    # SHOW METRICS: the unified registry — gate, WAL, pools, spans, views --
+    print("\n-- SHOW METRICS (a few rows of the unified telemetry ledger):")
+    metrics = ex.execute_one("SHOW METRICS")
+    wanted = ("counters.", "epoch", "wal.commits")
+    print("\n".join(f"  {k} = {v}" for k, v in metrics.rows
+                    if any(k.startswith(w) or k == w for w in wanted)))
+
+    # SHOW COST: modeled SKIING charges next to measured wall clock --------
+    print("\n-- SHOW COST ON topics (modeled vs measured SKIING):")
+    print(ex.execute_one("SHOW COST ON topics").pretty())
+
     facade = ex.catalog.view("topics").facade
     print(f"\nhybrid tier hits: {facade.tier_hits} "
           f"(cold feature-row reads: {facade.disk_touches})")

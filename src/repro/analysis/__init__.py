@@ -6,6 +6,8 @@ Static suite (CLI: `python -m repro.analysis`, CI job `static-analysis`):
               (`repro.analysis.locks`)
   * SRC001-2  single-source algorithm rules (`.single_source`)
   * PUR001-4  core purity + EngineState immutability (`.purity`)
+  * TEL001    single-source timing: raw clock calls outside `repro.obs`
+              (`.telemetry`)
 
 Runtime witness (`repro.analysis.witness`, `REPRO_LOCK_WITNESS=1`):
 asserts the same gate < wal_commit < pool order live, per thread, with
@@ -21,13 +23,14 @@ from typing import List, Optional, Sequence
 
 
 def run(files: Optional[Sequence] = None,
-        rules: Sequence[str] = ("LCK", "SRC", "PUR")) -> List:
+        rules: Sequence[str] = ("LCK", "SRC", "PUR", "TEL")) -> List:
     """Run the selected pass families; returns sorted `Finding`s."""
     from repro.analysis.callgraph import CallGraph
     from repro.analysis.common import ModuleSet, default_files
     from repro.analysis.locks import check_locks
     from repro.analysis.purity import check_purity
     from repro.analysis.single_source import check_single_source
+    from repro.analysis.telemetry import check_telemetry
 
     modules = ModuleSet(default_files() if files is None else files)
     findings = []
@@ -37,4 +40,6 @@ def run(files: Optional[Sequence] = None,
         findings += check_single_source(modules)
     if "PUR" in rules:
         findings += check_purity(modules)
+    if "TEL" in rules:
+        findings += check_telemetry(modules)
     return sorted(findings)

@@ -18,11 +18,12 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.analysis",
         description="repro invariant checks: lock order (LCK), "
-                    "single-source rules (SRC), core purity (PUR)")
+                    "single-source rules (SRC), core purity (PUR), "
+                    "single-source timing (TEL)")
     ap.add_argument("paths", nargs="*", type=Path,
                     help="files or directories to scan (default: the "
                          "installed repro tree)")
-    ap.add_argument("--rules", default="LCK,SRC,PUR",
+    ap.add_argument("--rules", default="LCK,SRC,PUR,TEL",
                     help="comma-separated rule families to run")
     args = ap.parse_args(argv)
 

@@ -127,6 +127,39 @@ class EngineFacade:
         fully in RAM. `SHOW STORAGE` renders this."""
         return None
 
+    def prefetcher_stats(self) -> Optional[dict]:
+        """Background prefetcher counters (queue depth, enqueued, dropped),
+        or None when the view has no storage tier / prefetcher."""
+        eng = getattr(self, "engine", None)
+        pre = getattr(getattr(eng, "store", None), "prefetcher", None)
+        return pre.stats() if pre is not None else None
+
+    def cost_stats(self) -> Optional[List[dict]]:
+        """Per-view modeled-vs-measured SKIING cost rows (`SHOW COST ON`),
+        or None when the engine records no cost telemetry."""
+        return None
+
+    def telemetry_snapshot(self) -> dict:
+        """Collector payload for the metrics registry (`view.<name>` key):
+        tier hits + storage + prefetcher + per-view cost, one locked read
+        per component so the counters reconcile within themselves."""
+        out = {
+            "policy": self.policy,
+            "num_views": int(self.num_views),
+            "tier_hits": dict(self.tier_hits),
+            "disk_touches": int(self.disk_touches),
+        }
+        st = self.storage_stats()
+        if st is not None:
+            out["storage"] = st
+        pre = self.prefetcher_stats()
+        if pre is not None:
+            out["prefetcher"] = pre
+        cost = self.cost_stats()
+        if cost is not None:
+            out["cost"] = cost
+        return out
+
     def prefetch_band(self, view: int = 0) -> int:
         """Hand the view's PROSPECTIVE band — the entities a label scan is
         about to classify against the current model — to the storage
@@ -292,6 +325,15 @@ class SingleViewFacade(EngineFacade):
             eng.eps_sorted, eng.perm, lw, hw, limit, descending,
             lambda ids: np.asarray(self.view.F[ids] @ m.w - m.b, np.float64))
 
+    def cost_stats(self):
+        eng = self.view.engine
+        row = eng.cost.snapshot(0)
+        row.update(view=0, policy=self.policy, cost_mode=eng.cost_mode,
+                   S_model=float(eng.skiing.S), alpha=float(eng.skiing.alpha),
+                   acc=float(eng.skiing.a),
+                   reorgs_modeled=int(eng.skiing.reorgs))
+        return [row]
+
 
 class MultiViewFacade(EngineFacade):
     """k one-vs-all views: `MulticlassView` over `MultiViewEngine`."""
@@ -421,6 +463,19 @@ class MultiViewFacade(EngineFacade):
             eng.eps_sorted[v], eng.perm[v], lw, hw, limit, descending,
             lambda ids: np.asarray(
                 self.mc.F[ids] @ eng.W[v] - eng.b[v], np.float64))
+
+    def cost_stats(self):
+        eng = self.mc.engine
+        out = []
+        for v in range(self.num_views):
+            row = eng.cost.snapshot(v)
+            row.update(view=v, policy=self.policy, cost_mode=eng.cost_mode,
+                       S_model=float(eng.S[v]), alpha=float(eng.alpha),
+                       acc=float(eng.acc[v]),
+                       reorgs_modeled=int(eng.reorg_counts[v]),
+                       lazy_waste=float(eng.lazy_waste[v]))
+            out.append(row)
+        return out
 
 
 class ShardedFacade(EngineFacade):

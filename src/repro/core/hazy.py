@@ -47,6 +47,8 @@ from repro.core.engine import (band_partition, classify, hot_buffer_window,
 from repro.core.linear_model import LinearModel, zero_model
 from repro.core.skiing import Skiing, alpha_star
 from repro.core.waters import Waters, holder_M
+from repro.obs import clock
+from repro.obs.cost import ViewCostRecorder
 
 
 @dataclasses.dataclass
@@ -92,14 +94,18 @@ class HazyEngine:
         self.disk_touches = 0      # probes that paid a COLD feature-row read
         self._eps_order = None     # boundary-outward eps order (readahead)
         self._eps_pos = None       # entity id -> position in _eps_order
+        # measured-cost telemetry: wall-clock reorg/step timings recorded
+        # ALONGSIDE the modeled charges, never fed back into them (the
+        # modeled trajectory stays bitwise deterministic).
+        self.cost = ViewCostRecorder(1)
         # initial organization (free S estimate)
-        t0 = time.perf_counter()
+        t0 = clock()
         self._do_reorganize()
-        S0 = max(time.perf_counter() - t0, 1e-9)
+        S0 = max(clock() - t0, 1e-9)
         # sigma = scan/S; estimate scan as a single pass over eps
-        t0 = time.perf_counter()
+        t0 = clock()
         float(np.sum(self.eps_sorted))
-        scan = max(time.perf_counter() - t0, 1e-12)
+        scan = max(clock() - t0, 1e-12)
         self.sigma = min(1.0, scan / S0)
         # modeled mode is the deterministic test contract: charges are
         # S-invariant dimensionless fractions (S pinned to 1.0, exactly
@@ -168,14 +174,15 @@ class HazyEngine:
             pre.enqueue(nxt, evict=True)
 
     def reorganize(self):
-        t0 = time.perf_counter()
+        t0 = clock()
         self._do_reorganize()
-        S = time.perf_counter() - t0 + self.touch_ns * 1e-9 * self.n
+        S = clock() - t0 + self.touch_ns * 1e-9 * self.n
         # modeled mode keeps S pinned (dimensionless charges); measured
         # mode re-estimates the reorg cost from this wall time
         self.skiing.record_reorg(None if self.cost_mode == "modeled" else S)
         self.stats.reorgs += 1
         self.stats.reorg_seconds += S
+        self.cost.record_reorg(0, S)
 
     # ------------------------------------------------------------------
     # Incremental step (paper Fig. 2): reclassify only the water band
@@ -190,7 +197,7 @@ class HazyEngine:
 
     def _incremental_step(self) -> float:
         """Reclassify the band under the *current* model. Returns cost."""
-        t0 = time.perf_counter()
+        t0 = clock()
         lo, hi = self._band()
         width = hi - lo
         if width > 0:
@@ -199,13 +206,14 @@ class HazyEngine:
             old = self.labels_sorted[lo:hi]
             self.pos_count += int(np.count_nonzero(new_lab == 1)) - int(np.count_nonzero(old == 1))
             self.labels_sorted[lo:hi] = new_lab
-        wall = time.perf_counter() - t0 + self.touch_ns * 1e-9 * width
+        wall = clock() - t0 + self.touch_ns * 1e-9 * width
         self.stats.tuples_reclassified += width
         self.stats.tuples_total_possible += self.n
         self.stats.band_fraction_last = width / max(1, self.n)
-        if self.cost_mode == "modeled":
-            return self.skiing.S * (width / max(1, self.n))
-        return wall
+        c = (self.skiing.S * (width / max(1, self.n))
+             if self.cost_mode == "modeled" else wall)
+        self.cost.record_step(0, wall, c)
+        return c
 
     def apply_model(self, model: LinearModel):
         """One round: the view must reflect `model` (eager) or remember it
@@ -241,7 +249,7 @@ class HazyEngine:
         self.waters.update(self.model, self.stored)
         lo, hi = self._band()
         width = hi - lo
-        t0 = time.perf_counter()
+        t0 = clock()
         if width:
             z = self.F_sorted[lo:hi] @ self.model.w - self.model.b
             new_lab = classify(z)
@@ -252,8 +260,10 @@ class HazyEngine:
         # lazy cost accounting (paper §3.4): waste = (N_R − N_+)/N_R · S
         n_read = self.n - lo
         waste = (n_read - self.pos_count) / max(1, n_read)
-        c = (time.perf_counter() - t0 + self.touch_ns * 1e-9 * width
-             if self.cost_mode == "measured" else self.skiing.S * max(0.0, waste))
+        wall = clock() - t0 + self.touch_ns * 1e-9 * width
+        c = (wall if self.cost_mode == "measured"
+             else self.skiing.S * max(0.0, waste))
+        self.cost.record_step(0, wall, max(0.0, c))
         self.stats.tuples_reclassified += width
         self.stats.tuples_total_possible += self.n
         self.stats.incremental_seconds += max(0.0, c)

@@ -57,7 +57,6 @@ behaviour; the property tests assert the two trajectories are identical.
 """
 from __future__ import annotations
 
-import time
 from typing import Optional, Tuple
 
 import numpy as np
@@ -68,6 +67,8 @@ from repro.core.engine import (PROBE_TIERS, TIER_BUFFER,
                                probe_partition, skiing_charge,
                                skiing_due, waters_update)
 from repro.core.hazy import Stats
+from repro.obs import clock
+from repro.obs.cost import ViewCostRecorder
 from repro.core.skiing import alpha_star
 from repro.core.waters import holder_M
 
@@ -132,12 +133,16 @@ class MultiViewEngine:
         # the per-view SKIING S (one view's share of the batched reorg).
         # stats/S/acc are created only afterwards (guarded by hasattr below)
         # so the free init round is never charged.
-        t0 = time.perf_counter()
+        # measured-cost telemetry, created BEFORE the free init round but
+        # only fed once S exists (same hasattr guard as the stats): wall
+        # timings recorded alongside modeled charges, never altering them.
+        self.cost = ViewCostRecorder(k)
+        t0 = clock()
         self._reorganize_views(np.ones(k, bool))
-        S0 = max(time.perf_counter() - t0, 1e-9) / k
-        t0 = time.perf_counter()
+        S0 = max(clock() - t0, 1e-9) / k
+        t0 = clock()
         float(np.sum(self.eps_sorted[0]))
-        scan = max(time.perf_counter() - t0, 1e-12)
+        scan = max(clock() - t0, 1e-12)
         self.sigma = min(1.0, scan / S0)
         self.alpha = alpha if alpha else alpha_star(self.sigma)
         # modeled mode pins S to 1.0 (S-invariant dimensionless charges,
@@ -159,7 +164,7 @@ class MultiViewEngine:
         views = np.flatnonzero(mask)
         if views.size == 0:
             return
-        t0 = time.perf_counter()
+        t0 = clock()
         Z = self.F @ self.W[views].T - self.b[views].astype(np.float32)
         for j, v in enumerate(views):
             e = Z[:, j]
@@ -183,7 +188,7 @@ class MultiViewEngine:
         self.hw[views] = 0.0
         self._waters_stale[views] = False
         self.pending[views] = False
-        wall = (time.perf_counter() - t0
+        wall = (clock() - t0
                 + self.touch_ns * 1e-9 * self.n * views.size)
         if hasattr(self, "S"):   # absent only during the free init round
             if self.cost_mode != "modeled":   # modeled: S stays pinned at 1.0
@@ -192,6 +197,8 @@ class MultiViewEngine:
             self.stats.reorgs += int(views.size)
             self.reorg_counts[views] += 1
             self.stats.reorg_seconds += wall
+            for v in views:   # one view's share of the batched reorg
+                self.cost.record_reorg(int(v), wall / views.size)
 
     def _rewarm_store(self):
         """Re-warm the pool along the new clustering order: pin the pages
@@ -288,7 +295,7 @@ class MultiViewEngine:
         (Eq. 2), per-view band location, ONE gather of the union band's
         feature rows and ONE matmul that classifies every view's band.
         Returns (lo, widths, total, wall) for the caller's cost model."""
-        t0 = time.perf_counter()
+        t0 = clock()
         self._update_waters(views)
         lo, hi = self._bands(views)
         widths = hi - lo
@@ -307,7 +314,7 @@ class MultiViewEngine:
                 self.pos_count[v] += (int(np.count_nonzero(new == 1))
                                       - int(np.count_nonzero(old == 1)))
                 self.labels_sorted[v, lo[j]:hi[j]] = new
-        wall = time.perf_counter() - t0 + self.touch_ns * 1e-9 * total
+        wall = clock() - t0 + self.touch_ns * 1e-9 * total
         self.stats.tuples_reclassified += total
         self.stats.tuples_total_possible += self.n * views.size
         return lo, widths, total, wall
@@ -317,10 +324,13 @@ class MultiViewEngine:
         if views.size == 0:
             return
         lo, widths, total, wall = self._relabel_bands(views)
+        measured = wall * (widths / max(1, total))   # per-view wall share
         if self.cost_mode == "modeled":
             costs = self.S[views] * (widths / max(1, self.n))
         else:
-            costs = wall * (widths / max(1, total))
+            costs = measured
+        for j, v in enumerate(views):
+            self.cost.record_step(int(v), float(measured[j]), float(costs[j]))
         self.acc[views] = skiing_charge(self.acc[views], costs)
         self.stats.band_fraction_last = float(widths.mean()) / max(1, self.n)
         self.stats.incremental_seconds += wall
@@ -344,10 +354,13 @@ class MultiViewEngine:
         n_read = np.maximum(1, self.n - lo)
         waste = np.maximum(0.0, (n_read - self.pos_count[todo]) / n_read)
         self.lazy_waste[todo] += waste
+        measured = wall * (widths / max(1, total))   # per-view wall share
         if self.cost_mode == "modeled":
             costs = self.S[todo] * waste
         else:
-            costs = wall * (widths / max(1, total))
+            costs = measured
+        for j, v in enumerate(todo):
+            self.cost.record_step(int(v), float(measured[j]), float(costs[j]))
         self.acc[todo] = skiing_charge(self.acc[todo], costs)
         self.stats.incremental_seconds += wall
         due = np.zeros(self.k, bool)

@@ -18,12 +18,13 @@ an LM step.
 """
 import argparse
 import json
-import time
 from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.obs import clock
 
 
 HAZY_SHAPES = {
@@ -58,22 +59,22 @@ def lower_lm_cell(arch: str, shape_name: str, mesh, donate: bool = True):
             batch = batch_specs(cfg, shape, mesh)
             fn = jax.jit(make_train_step(mdl),
                          donate_argnums=(0,) if donate else ())
-            t0 = time.time()
-            out["train_step"] = (fn.lower(state, batch), time.time() - t0)
+            t0 = clock()
+            out["train_step"] = (fn.lower(state, batch), clock() - t0)
         elif shape.kind == "prefill":
             params = abstract_tree(mdl.param_tree, mesh)
             batch = batch_specs(cfg, shape, mesh)
             fn = jax.jit(make_prefill_step(mdl))
-            t0 = time.time()
-            out["prefill_step"] = (fn.lower(params, batch), time.time() - t0)
+            t0 = clock()
+            out["prefill_step"] = (fn.lower(params, batch), clock() - t0)
         else:  # decode
             params = abstract_tree(mdl.param_tree, mesh)
             cache, token, index = decode_input_specs(mdl, shape, mesh)
             fn = jax.jit(make_decode_step(mdl),
                          donate_argnums=(1,) if donate else ())
-            t0 = time.time()
+            t0 = clock()
             out["decode_step"] = (fn.lower(params, cache, token, index),
-                                  time.time() - t0)
+                                  clock() - t0)
     return out, cfg, shape
 
 
@@ -90,22 +91,22 @@ def lower_hazy_cell(shape_name: str, mesh):
         b = jax.ShapeDtypeStruct((), jnp.float32,
                                  sharding=NamedSharding(mesh, P()))
         naive = jax.jit(make_naive_update_step(mesh))
-        t0 = time.time()
-        out["hazy_naive_step"] = (naive.lower(st, w, b), time.time() - t0)
+        t0 = clock()
+        out["hazy_naive_step"] = (naive.lower(st, w, b), clock() - t0)
         banded, cap = make_hazy_update_step(mesh, n)
-        t0 = time.time()
-        out["hazy_banded_step"] = (jax.jit(banded).lower(st, w, b), time.time() - t0)
+        t0 = clock()
+        out["hazy_banded_step"] = (jax.jit(banded).lower(st, w, b), clock() - t0)
         reorg = jax.jit(make_reorganize_step(mesh))
-        t0 = time.time()
-        out["hazy_reorg_step"] = (reorg.lower(st, w, b), time.time() - t0)
+        t0 = clock()
+        out["hazy_reorg_step"] = (reorg.lower(st, w, b), clock() - t0)
     return out, n, d
 
 
 def analyze(name: str, lowered, lower_s: float) -> Dict[str, Any]:
     from repro.launch.hlo_stats import collective_bytes
-    t0 = time.time()
+    t0 = clock()
     compiled = lowered.compile()
-    compile_s = time.time() - t0
+    compile_s = clock() - t0
     ca = compiled.cost_analysis() or {}
     ma = compiled.memory_analysis()
     txt = compiled.as_text()
@@ -141,7 +142,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
     mesh = _mesh(multi_pod)
     mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
     print(f"[dryrun] {arch} × {shape_name} × {mesh_name}")
-    t_start = time.time()
+    t_start = clock()
     if analysis is None:
         analysis = not multi_pod  # roofline corrections: single-pod only
     cfg = None
@@ -170,7 +171,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
         "arch": arch, "shape": shape_name, "mesh": mesh_name,
         "num_devices": int(np.prod(mesh.devices.shape)),
         "meta": meta, "steps": steps,
-        "total_s": round(time.time() - t_start, 1),
+        "total_s": round(clock() - t_start, 1),
         "ok": True,
     }
     if out_dir:

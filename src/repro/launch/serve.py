@@ -22,7 +22,8 @@ shared with `examples/serve_view.py` — no file-path loading hacks.
 from __future__ import annotations
 
 import argparse
-import time
+
+from repro.obs import clock
 
 
 def serve_decode(arch: str, steps: int, batch: int, cache_len: int):
@@ -37,19 +38,23 @@ def serve_decode(arch: str, steps: int, batch: int, cache_len: int):
     cache = init_cache(mdl, batch, cache_len)
     dec = jax.jit(make_decode_step(mdl), donate_argnums=(1,))
     tok = jnp.zeros((batch, 1), jnp.int32)
-    t0 = time.perf_counter()
+    t0 = clock()
     for i in range(steps):
         tok, cache = dec(state["params"], cache, tok, jnp.asarray(i, jnp.int32))
     jax.block_until_ready(tok)
-    dt = time.perf_counter() - t0
+    dt = clock() - t0
     print(f"[serve] decode: {steps} steps x batch {batch} -> "
           f"{steps*batch/dt:.0f} tok/s ({dt/steps*1e3:.1f} ms/step)")
 
 
-def serve_sql(script: str = None, execute: str = None, serve: str = None):
+def serve_sql(script: str = None, execute: str = None, serve: str = None,
+              slow_ms: float = None, log_statements: bool = False):
     from repro.rdbms.executor import Executor
     from repro.rdbms.repl import repl, run_script
-    ex = Executor()
+    ex = Executor(slow_ms=slow_ms)
+    if slow_ms is not None or log_statements:
+        import logging
+        logging.basicConfig(level=logging.INFO)  # slow/access logs visible
     if serve:
         import asyncio
         from repro.rdbms.server import SqlServer
@@ -64,7 +69,8 @@ def serve_sql(script: str = None, execute: str = None, serve: str = None):
             run_script(execute, ex)
 
         async def _serve():
-            server = SqlServer(ex, host=host, port=int(port))
+            server = SqlServer(ex, host=host, port=int(port),
+                               log_statements=log_statements)
             await server.start()
             print(f"[serve] sql server on {server.host}:{server.port} "
                   f"(length-prefixed JSON; Ctrl-C to stop)")
@@ -100,11 +106,18 @@ def main():
                     help="sql mode: run the concurrent wire-protocol "
                          "server instead of the REPL (--script/--execute "
                          "bootstrap the schema first)")
+    ap.add_argument("--slow-ms", type=float, default=None,
+                    help="sql mode: log the span tree of any statement "
+                         "slower than this many milliseconds")
+    ap.add_argument("--log-statements", action="store_true",
+                    help="sql mode: access log — one structured line per "
+                         "served statement")
     args = ap.parse_args()
     if args.mode == "decode":
         serve_decode(args.arch, args.steps, args.batch, args.cache_len)
     elif args.mode == "sql":
-        serve_sql(args.script, args.execute, args.serve)
+        serve_sql(args.script, args.execute, args.serve,
+                  slow_ms=args.slow_ms, log_statements=args.log_statements)
     else:
         from repro.launch.view_driver import main as view_main
         view_main(["--requests", str(args.requests)])

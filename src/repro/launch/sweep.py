@@ -12,7 +12,8 @@ import json
 import os
 import subprocess
 import sys
-import time
+
+from repro.obs import clock
 
 
 def jobs():
@@ -37,7 +38,7 @@ def main():
     os.makedirs(args.out, exist_ok=True)
     log_path = os.path.join(args.out, "sweep_log.jsonl")
     todo = jobs()
-    t0 = time.time()
+    t0 = clock()
     n_ok = n_fail = n_skip = 0
     for i, (arch, shape, multipod) in enumerate(todo):
         mesh = "pod2x16x16" if multipod else "pod16x16"
@@ -49,7 +50,7 @@ def main():
                "--shape", shape, "--out", args.out]
         if multipod:
             cmd.append("--multipod")
-        t1 = time.time()
+        t1 = clock()
         try:
             proc = subprocess.run(cmd, capture_output=True, text=True,
                                   timeout=args.timeout)
@@ -58,7 +59,7 @@ def main():
             ok = False
             proc = None
         rec = {"arch": arch, "shape": shape, "mesh": mesh, "ok": ok,
-               "seconds": round(time.time() - t1, 1)}
+               "seconds": round(clock() - t1, 1)}
         if not ok:
             rec["tail"] = (proc.stderr[-2000:] if proc else "TIMEOUT")
         with open(log_path, "a") as f:
@@ -68,7 +69,7 @@ def main():
         print(f"[{i+1}/{len(todo)}] {arch} {shape} {mesh}: "
               f"{'ok' if ok else 'FAIL'} ({rec['seconds']}s)", flush=True)
     print(f"done: {n_ok} ok, {n_fail} fail, {n_skip} skipped, "
-          f"{(time.time()-t0)/60:.1f} min")
+          f"{(clock()-t0)/60:.1f} min")
 
 
 if __name__ == "__main__":

@@ -15,10 +15,11 @@ from __future__ import annotations
 import argparse
 import signal
 import sys
-import time
 
 import jax
 import jax.numpy as jnp
+
+from repro.obs import clock
 
 
 def main():
@@ -81,14 +82,14 @@ def main():
     detector = StragglerDetector(n_workers=max(1, jax.process_count()))
     m = None
     with mesh:
-        t_last = time.perf_counter()
+        t_last = clock()
         for i in range(start, args.steps):
             batch = {k: jnp.asarray(v) for k, v in ds.batch_at(i).items()}
             state, m = step_fn(state, batch)
             if (i + 1) % args.log_every == 0:
                 jax.block_until_ready(m["loss"])
-                dt = time.perf_counter() - t_last
-                t_last = time.perf_counter()
+                dt = clock() - t_last
+                t_last = clock()
                 tput = args.batch * args.seq * args.log_every / dt
                 print(f"[train] step {i+1} loss {float(m['loss']):.4f} "
                       f"gnorm {float(m['grad_norm']):.3f} {tput:.0f} tok/s")

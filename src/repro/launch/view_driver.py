@@ -15,12 +15,13 @@ Run:  PYTHONPATH=src python -m repro.launch.view_driver [--requests 3000]
 from __future__ import annotations
 
 import argparse
-import time
 from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.obs import clock
 
 
 def make_backbone_encoder(arch: str = "tinyllama-1.1b", batch: int = 32):
@@ -72,10 +73,10 @@ def serve_view(requests: int = 3000, docs: int = 4000, doc_len: int = 32):
     r = np.random.default_rng(0)
     encode, cfg = make_backbone_encoder()
     tokens, topic = make_topic_docs(cfg, docs, doc_len)
-    t0 = time.perf_counter()
+    t0 = clock()
     F = encode(tokens)
     print(f"encoded {docs} docs with {cfg.name} backbone "
-          f"in {time.perf_counter()-t0:.1f}s -> features {F.shape}")
+          f"in {clock()-t0:.1f}s -> features {F.shape}")
 
     view = ClassificationView(F, method="svm", policy="hybrid",
                               norm=(2.0, 2.0), lr=0.1, buffer_frac=0.01)
@@ -84,7 +85,7 @@ def serve_view(requests: int = 3000, docs: int = 4000, doc_len: int = 32):
     kinds = r.choice(["read", "members", "update"], size=requests,
                      p=[0.55, 0.05, 0.40])
     served = {"read": 0, "members": 0, "update": 0}
-    t0 = time.perf_counter()
+    t0 = clock()
     for kind in kinds:
         if kind == "read":
             view.label(int(r.integers(0, docs)))
@@ -94,7 +95,7 @@ def serve_view(requests: int = 3000, docs: int = 4000, doc_len: int = 32):
             i = int(r.integers(0, docs))
             view.insert_example(i, float(labels[i]))
         served[kind] += 1
-    dt = time.perf_counter() - t0
+    dt = clock() - t0
     print(f"served {requests} requests in {dt:.2f}s "
           f"({requests/dt:.0f} req/s): {served}")
     eng = view.engine
@@ -116,10 +117,10 @@ def serve_sql(requests: int = 3000, docs: int = 4000, doc_len: int = 32,
     r = np.random.default_rng(0)
     encode, cfg = make_backbone_encoder()
     tokens, topic = make_topic_docs(cfg, docs, doc_len)
-    t0 = time.perf_counter()
+    t0 = clock()
     F = encode(tokens)
     print(f"encoded {docs} docs with {cfg.name} backbone "
-          f"in {time.perf_counter()-t0:.1f}s -> features {F.shape}")
+          f"in {clock()-t0:.1f}s -> features {F.shape}")
 
     catalog = Catalog()
     catalog.register_table("docs", F, truth=np.where(topic, 1, -1))
@@ -132,7 +133,7 @@ def serve_sql(requests: int = 3000, docs: int = 4000, doc_len: int = 32,
     kinds = r.choice(["read", "members", "update"], size=requests,
                      p=[0.55, 0.05, 0.40])
     served = {"read": 0, "members": 0, "update": 0}
-    t0 = time.perf_counter()
+    t0 = clock()
     for kind in kinds:
         if kind == "read":
             i = int(r.integers(0, docs))
@@ -144,7 +145,7 @@ def serve_sql(requests: int = 3000, docs: int = 4000, doc_len: int = 32,
             ex.execute_one(f"INSERT INTO docs (id, label) VALUES "
                            f"({i}, {int(labels[i])})")
         served[kind] += 1
-    dt = time.perf_counter() - t0
+    dt = clock() - t0
     print(f"served {requests} SQL statements in {dt:.2f}s "
           f"({requests/dt:.0f} stmt/s): {served}")
     facade = catalog.view("topic").facade

@@ -92,12 +92,17 @@ class Select:
 
 @dataclasses.dataclass
 class Explain:
+    """EXPLAIN <stmt> plans without executing; EXPLAIN ANALYZE <stmt>
+    EXECUTES the inner statement (Postgres semantics — DML included) and
+    annotates the plan with the measured span tree and tier deltas."""
     stmt: Statement
+    analyze: bool = False
 
 
 @dataclasses.dataclass
 class Show:
-    what: str                              # "tables" | "views" | "storage"
+    what: str                  # "tables" | "views" | "storage" | "metrics" | "cost"
+    view: Optional[str] = None             # SHOW COST ON <view>
 
 
 @dataclasses.dataclass

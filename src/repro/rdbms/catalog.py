@@ -39,6 +39,7 @@ from repro.core.facade import (EngineFacade, MultiViewFacade,
                                SingleViewFacade, make_sharded_facade)
 from repro.core.multiclass import MulticlassView
 from repro.core.view import ClassificationView
+from repro.obs import MetricsRegistry
 from repro.rdbms.ast_nodes import SqlError
 
 
@@ -84,9 +85,13 @@ _VIEW_OPTIONS = {"policy", "k", "engine", "buffer_frac", "p", "q", "alpha",
 
 
 class Catalog:
-    def __init__(self):
+    def __init__(self, metrics: Optional[MetricsRegistry] = None):
         self.tables: Dict[str, BaseTable] = {}
         self.views: Dict[str, ViewDef] = {}
+        # the catalog owns the process-wide registry: views register their
+        # facade collectors here, pools record cold-read latencies into it,
+        # and the executor adopts it for gate/WAL/span instruments.
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
 
     # -- base tables ---------------------------------------------------
     def register_table(self, name: str, features: np.ndarray, *,
@@ -173,7 +178,7 @@ class Catalog:
             budget = int(mb * t.features.nbytes) if mb <= 1.0 else int(mb)
             from repro.storage import PAGE_BYTES, BufferPool
             store = BufferPool(t.entity_store(page_bytes or PAGE_BYTES),
-                               budget)
+                               budget, metrics=self.metrics)
             if prefetch:
                 from repro.storage import Prefetcher
                 Prefetcher(store)       # attaches itself as store.prefetcher
@@ -216,6 +221,8 @@ class Catalog:
                             f"got {engine!r}")
         vd = ViewDef(name, table, model, facade, dict(options or {}))
         self.views[name] = vd
+        self.metrics.register_collector(f"view.{name}",
+                                        facade.telemetry_snapshot)
         return vd
 
     # -- lookups -------------------------------------------------------

@@ -40,6 +40,8 @@ class ClientResult:
     epoch: Optional[int] = None
     plan: Optional[dict] = None
     tiers: Optional[List[str]] = None
+    elapsed_us: Optional[float] = None      # span-derived statement time
+    phases: Optional[dict] = None           # {span name: µs} top-level phases
 
     def __iter__(self):
         return iter(self.rows)
@@ -47,7 +49,8 @@ class ClientResult:
     @staticmethod
     def from_payload(p: dict) -> "ClientResult":
         return ClientResult(p.get("columns", []), p.get("rows", []),
-                            p.get("epoch"), p.get("plan"), p.get("tiers"))
+                            p.get("epoch"), p.get("plan"), p.get("tiers"),
+                            p.get("elapsed_us"), p.get("phases"))
 
 
 class SqlClient:
@@ -99,6 +102,11 @@ class SqlClient:
     def ping(self) -> int:
         """Round trip; returns the server's current epoch."""
         return self.request({"op": "ping"})["epoch"]
+
+    def metrics(self) -> dict:
+        """The server's unified telemetry snapshot (counters, gauges,
+        histograms, per-component collectors, epoch) as plain JSON."""
+        return self.request({"op": "metrics"})["metrics"]
 
     def close(self):
         if self._sock is not None:

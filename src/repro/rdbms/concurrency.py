@@ -27,16 +27,27 @@ import contextlib
 import threading
 
 from repro.analysis.witness import WITNESS
+from repro.obs import clock
 
 
 class EpochGate:
     """Shared/exclusive gate with writer preference (see module doc)."""
 
-    def __init__(self):
+    def __init__(self, metrics=None):
         self._cv = threading.Condition()
         self._readers = 0
         self._writer = False
         self._writers_waiting = 0
+        # pre-resolved instruments so the hot path never does a registry
+        # name lookup; wait time is observed AFTER the cv is released.
+        if metrics is not None:
+            self._m_shared = metrics.counter("gate.shared_acquisitions")
+            self._m_excl = metrics.counter("gate.exclusive_acquisitions")
+            self._m_shared_wait = metrics.histogram("gate.shared_wait_seconds")
+            self._m_excl_wait = metrics.histogram("gate.exclusive_wait_seconds")
+        else:
+            self._m_shared = self._m_excl = None
+            self._m_shared_wait = self._m_excl_wait = None
 
     @contextlib.contextmanager
     def read(self):
@@ -46,10 +57,14 @@ class EpochGate:
         if WITNESS.active:
             WITNESS.push("gate", self)
         try:
+            t0 = clock() if self._m_shared is not None else 0.0
             with self._cv:
                 while self._writer or self._writers_waiting:
                     self._cv.wait()
                 self._readers += 1
+            if self._m_shared is not None:
+                self._m_shared.inc()
+                self._m_shared_wait.observe(clock() - t0)
             try:
                 yield
             finally:
@@ -67,6 +82,7 @@ class EpochGate:
         if WITNESS.active:
             WITNESS.push("gate", self)
         try:
+            t0 = clock() if self._m_excl is not None else 0.0
             with self._cv:
                 self._writers_waiting += 1
                 try:
@@ -75,6 +91,9 @@ class EpochGate:
                 finally:
                     self._writers_waiting -= 1
                 self._writer = True
+            if self._m_excl is not None:
+                self._m_excl.inc()
+                self._m_excl_wait.observe(clock() - t0)
             try:
                 yield
             finally:

@@ -40,11 +40,15 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
+import logging
 import threading
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.core.facade import TIERS
+from repro.obs import trace
+from repro.obs.trace import Span, render_tree
 from repro.rdbms.ast_nodes import (Commit, CreateTable, CreateView, Delete,
                                    ExecutePrepared, Explain, Insert, Param,
                                    Prepare, Select, Show, SqlError, Statement,
@@ -55,6 +59,12 @@ from repro.rdbms.parser import parse
 from repro.rdbms.planner import Plan, _resolve_view_index, plan_statement
 from repro.rdbms.wal import UpdateLog
 
+_slow_log = logging.getLogger("repro.obs.slowlog")
+
+# AST class -> lowercase statement kind ("select", "insert", ...), cached so
+# the per-statement hot path skips the __name__.lower() allocation.
+_KIND_NAMES: dict = {}
+
 
 @dataclasses.dataclass
 class Result:
@@ -64,6 +74,8 @@ class Result:
     tiers_used: Optional[List[str]] = None
     epoch: Optional[int] = None     # committed WAL batch index pinned by
                                     # the statement (None: pre-gate paths)
+    trace: Optional[Span] = None    # the statement's finished span tree
+                                    # (None on nested dispatch)
 
     def __iter__(self):
         return iter(self.rows)
@@ -123,24 +135,51 @@ def _bind(stmt: Statement, params: Sequence[float]) -> Statement:
 
 class Executor:
     def __init__(self, catalog: Optional[Catalog] = None, *,
-                 group_commit: int = 64, wal_path: Optional[str] = None):
+                 group_commit: int = 64, wal_path: Optional[str] = None,
+                 slow_ms: Optional[float] = None):
         self.catalog = catalog if catalog is not None else Catalog()
-        self.log = UpdateLog(group_size=group_commit, path=wal_path)
+        # ONE registry for the whole stack: owned by the catalog (views and
+        # pools already feed it), adopted here for gate/WAL/span instruments.
+        self.metrics = self.catalog.metrics
+        self.log = UpdateLog(group_size=group_commit, path=wal_path,
+                             metrics=self.metrics)
         self.prepared: dict[str, _Prepared] = {}
-        self.gate = EpochGate()
+        self.gate = EpochGate(metrics=self.metrics)
+        self.slow_ms = slow_ms              # slow-statement log threshold
         self._tls = threading.local()       # .depth: nested dispatch guard
+        self.metrics.register_collector("wal", self.log.telemetry_snapshot)
+        # hot-path instruments, resolved once
+        self._m_statements = self.metrics.counter("statements")
+        self._m_errors = self.metrics.counter("statements.errors")
+        self._m_stmt_seconds = self.metrics.histogram("statement.seconds")
+        self._m_kind: dict = {}             # kind -> statements.<kind> counter
 
     @property
     def epoch(self) -> int:
         """Committed WAL batch index — the snapshot version readers pin."""
         return self.log.commits
 
+    def metrics_snapshot(self) -> dict:
+        """The unified telemetry snapshot (`SHOW METRICS`, the wire
+        `metrics` op): registry instruments + per-component collectors,
+        stamped with the current epoch."""
+        snap = self.metrics.snapshot()
+        snap["epoch"] = self.log.commits
+        return snap
+
     # -- entry points --------------------------------------------------
     def execute(self, sql: str, *,
                 prepared: Optional[Dict[str, _Prepared]] = None
                 ) -> List[Result]:
-        return [self.execute_statement(s, prepared=prepared)
-                for s in parse(sql)]
+        ps = trace.start("parse")
+        try:
+            stmts = parse(sql)
+            ps.attrs["statements"] = len(stmts)
+        finally:
+            trace.finish(ps)
+        return [self.execute_statement(s, prepared=prepared,
+                                       _parse_span=ps if i == 0 else None)
+                for i, s in enumerate(stmts)]
 
     def execute_one(self, sql: str, *,
                     prepared: Optional[Dict[str, _Prepared]] = None
@@ -152,46 +191,102 @@ class Executor:
 
     # -- the concurrency wrapper ---------------------------------------
     def execute_statement(self, stmt: Statement, *,
-                          prepared: Optional[Dict[str, _Prepared]] = None
-                          ) -> Result:
-        """Gate + dispatch. Point SELECTs on eager/hybrid views run under
-        the SHARED gate (epoch-pinned snapshot); everything else runs
-        exclusively (see the module doc's concurrency contract)."""
+                          prepared: Optional[Dict[str, _Prepared]] = None,
+                          _parse_span: Optional[Span] = None) -> Result:
+        """Gate + dispatch under a root "statement" span. Point SELECTs on
+        eager/hybrid views run under the SHARED gate (epoch-pinned
+        snapshot); everything else runs exclusively (see the module doc's
+        concurrency contract). The finished span tree rides on
+        `Result.trace` — the server's elapsed_us, EXPLAIN ANALYZE and the
+        REPL footer all read the same phases from it."""
         prepared = self.prepared if prepared is None else prepared
         depth = getattr(self._tls, "depth", 0)
         if depth:                            # nested dispatch: guard held
             return self._dispatch(stmt, prepared)
         self._tls.depth = 1
+        cls = type(stmt)
+        kind = _KIND_NAMES.get(cls)
+        if kind is None:
+            kind = _KIND_NAMES[cls] = cls.__name__.lower()
+        root = trace.start("statement", kind=kind)
+        if _parse_span is not None:          # adopt execute()'s parse span
+            root.children.insert(0, _parse_span)
+        ok = True
         try:
-            table = self._read_target_table(stmt, prepared)
-            if self._shared_eligible(stmt, prepared):
-                # read-your-writes flush in its OWN exclusive section,
-                # before the shared pin
-                if table is not None and self.log.has_pending(table):
-                    with self.gate.write():
+            res = self._execute_gated(stmt, prepared)
+            res.trace = root
+            return res
+        except BaseException:
+            ok = False
+            raise
+        finally:
+            self._tls.depth = 0
+            trace.finish(root)               # also unwinds any span an
+            self._record_statement(root, kind, ok)   # exception left open
+
+    def _execute_gated(self, stmt: Statement,
+                       prepared: Dict[str, _Prepared]) -> Result:
+        table = self._read_target_table(stmt, prepared)
+        if self._shared_eligible(stmt, prepared):
+            # read-your-writes flush in its OWN exclusive section,
+            # before the shared pin
+            if table is not None and self.log.has_pending(table):
+                gw = trace.start("gate.wait", mode="exclusive")
+                with self.gate.write():
+                    trace.finish(gw)
+                    with trace.span("flush.read_your_writes", table=table):
                         self.log.flush(self.catalog, table)
-                with self.gate.read():
+            gw = trace.start("gate.wait", mode="shared")
+            with self.gate.read():
+                trace.finish(gw)
+                ex_sp = trace.start("execute")
+                try:
                     epoch = self.log.commits
                     res = self._dispatch(stmt, prepared)
                     if self.log.commits != epoch:   # must be unreachable
                         raise SqlError(
                             f"snapshot violated: epoch {epoch} -> "
                             f"{self.log.commits} mid-statement")
-                res.epoch = epoch
-                return res
-            with self.gate.write():
-                if table is not None:       # read-your-writes, already
+                finally:
+                    trace.finish(ex_sp)
+            res.epoch = epoch
+            return res
+        gw = trace.start("gate.wait", mode="exclusive")
+        with self.gate.write():
+            trace.finish(gw)
+            if table is not None:           # read-your-writes, already
+                with trace.span("flush.read_your_writes", table=table):
                     self.log.flush(self.catalog, table)  # exclusive here
+            ex_sp = trace.start("execute")
+            try:
                 res = self._dispatch(stmt, prepared)
                 res.epoch = self.log.commits
-            return res
-        finally:
-            self._tls.depth = 0
+            finally:
+                trace.finish(ex_sp)
+        return res
+
+    def _record_statement(self, root: Span, kind: str, ok: bool):
+        """Per-statement registry counters + the slow-statement log."""
+        self._m_stmt_seconds.observe(root.duration_s)
+        self._m_statements.inc()
+        ck = self._m_kind.get(kind)
+        if ck is None:
+            ck = self._m_kind[kind] = self.metrics.counter(f"statements.{kind}")
+        ck.inc()
+        if not ok:
+            self._m_errors.inc()
+        if self.slow_ms is not None and root.duration_s * 1e3 >= self.slow_ms:
+            _slow_log.warning("slow statement (%.2f ms >= %.2f ms):\n%s",
+                              root.duration_s * 1e3, self.slow_ms,
+                              render_tree(root))
 
     def _read_target_table(self, stmt: Statement,
                            prepared: Dict[str, _Prepared]) -> Optional[str]:
         """The base table a SELECT/EXECUTE reads (None for non-reads or
         unresolvable targets — dispatch raises the real error then)."""
+        if isinstance(stmt, Explain) and stmt.analyze:
+            stmt = stmt.stmt       # EXPLAIN ANALYZE executes the inner read,
+                                   # so read-your-writes must flush for it too
         if isinstance(stmt, ExecutePrepared):
             ps = prepared.get(stmt.name)
             if ps is None:
@@ -229,7 +324,7 @@ class Executor:
     def _dispatch(self, stmt: Statement,
                   prepared: Dict[str, _Prepared]) -> Result:
         if isinstance(stmt, Explain):
-            return self._explain(stmt.stmt)
+            return self._explain(stmt.stmt, prepared, analyze=stmt.analyze)
         if isinstance(stmt, CreateTable):
             t = self.catalog.create_table_from_corpus(
                 stmt.name, stmt.corpus, stmt.options)
@@ -245,9 +340,13 @@ class Executor:
         if isinstance(stmt, Insert):
             self.catalog.table(stmt.table)
             commits = 0
-            for i, y in stmt.rows:
-                commits += self.log.append("insert", stmt.table, i, y,
-                                           self.catalog)
+            wa = trace.start("wal.append", rows=len(stmt.rows))
+            try:
+                for i, y in stmt.rows:
+                    commits += self.log.append("insert", stmt.table, i, y,
+                                               self.catalog)
+            finally:
+                trace.finish(wa)
             return Result(("queued", "commits"), [(len(stmt.rows), commits)])
         if isinstance(stmt, Update):
             self.catalog.table(stmt.table)
@@ -277,6 +376,10 @@ class Executor:
                                for t in self.catalog.tables.values()])
             if stmt.what == "storage":
                 return self._show_storage()
+            if stmt.what == "metrics":
+                return self._show_metrics()
+            if stmt.what == "cost":
+                return self._show_cost(stmt.view)
             return Result(("view", "table", "k", "policy"),
                           [(v.name, v.table, v.facade.num_views,
                             v.facade.policy)
@@ -362,7 +465,9 @@ class Executor:
         vd = self.catalog.view(sel.view)
         # (read-your-writes flush happens in the gate wrapper, before the
         # shared pin — never here, where it would commit mid-snapshot)
-        plan = plan_statement(sel, self.catalog, self.log)
+        with trace.span("plan") as pl:
+            plan = plan_statement(sel, self.catalog, self.log)
+            pl.attrs["tier"] = plan.tier
         f = vd.facade
         w = sel.where or Where()
 
@@ -433,35 +538,41 @@ class Executor:
         ids = w.ids if sel.limit is None else w.ids[:max(1, sel.limit)]
         rows: List[tuple] = []
         tiers: List[str] = []
-        for i in ids:
-            if "class" in cols:
-                cls = f.predict(int(i))
-                rows.append(self._row(cols, f, int(i), cls=cls))
-                tiers.append("probe" if f.policy == "hybrid" else "map")
-            elif "margin" in cols:
-                v = _resolve_view_index(w, f, cols)
-                z = f.margin(int(i), v)
-                if w.label is not None and (1 if z >= 0 else -1) != w.label:
-                    continue           # conjoined label predicate filters
-                rows.append(self._row(cols, f, int(i), view=v,
-                                      label=(1 if z >= 0 else -1),
-                                      margin=z))
-                tiers.append("disk")
-            elif all_views:
-                labels, hows = f.point_labels_of(int(i))
-                tiers.extend(hows)
-                for v in range(f.num_views):
-                    if w.label is not None and int(labels[v]) != w.label:
-                        continue
+        pr = trace.start("probe", ids=len(ids))
+        try:
+            for i in ids:
+                if "class" in cols:
+                    cls = f.predict(int(i))
+                    rows.append(self._row(cols, f, int(i), cls=cls))
+                    tiers.append("probe" if f.policy == "hybrid" else "map")
+                elif "margin" in cols:
+                    v = _resolve_view_index(w, f, cols)
+                    z = f.margin(int(i), v)
+                    if w.label is not None \
+                            and (1 if z >= 0 else -1) != w.label:
+                        continue       # conjoined label predicate filters
                     rows.append(self._row(cols, f, int(i), view=v,
-                                          label=int(labels[v])))
-            else:
-                v = _resolve_view_index(w, f, cols)
-                lab, how = f.point_label(int(i), v)
-                tiers.append(how)
-                if w.label is not None and lab != w.label:
-                    continue           # conjoined label predicate filters
-                rows.append(self._row(cols, f, int(i), view=v, label=lab))
+                                          label=(1 if z >= 0 else -1),
+                                          margin=z))
+                    tiers.append("disk")
+                elif all_views:
+                    labels, hows = f.point_labels_of(int(i))
+                    tiers.extend(hows)
+                    for v in range(f.num_views):
+                        if w.label is not None and int(labels[v]) != w.label:
+                            continue
+                        rows.append(self._row(cols, f, int(i), view=v,
+                                              label=int(labels[v])))
+                else:
+                    v = _resolve_view_index(w, f, cols)
+                    lab, how = f.point_label(int(i), v)
+                    tiers.append(how)
+                    if w.label is not None and lab != w.label:
+                        continue       # conjoined label predicate filters
+                    rows.append(self._row(cols, f, int(i), view=v, label=lab))
+            pr.attrs["tiers"] = ",".join(tiers)
+        finally:
+            trace.finish(pr)
         if sel.limit is not None:
             rows = rows[:sel.limit]
         return Result(tuple(cols), rows, plan=plan, tiers_used=tiers)
@@ -489,8 +600,12 @@ class Executor:
         return tuple(out)
 
     # -- EXPLAIN -------------------------------------------------------
-    def _explain(self, stmt: Statement) -> Result:
-        plan = plan_statement(stmt, self.catalog, self.log)
+    def _explain(self, stmt: Statement, prepared: Dict[str, _Prepared],
+                 analyze: bool = False) -> Result:
+        with trace.span("plan"):
+            plan = plan_statement(stmt, self.catalog, self.log)
+        if analyze:
+            return self._explain_analyze(stmt, prepared, plan)
         cols = ("step", "tier", "est_touched_tuples", "detail")
         rows = [plan.row()]
         if isinstance(stmt, Select) and stmt.where is not None \
@@ -520,6 +635,110 @@ class Executor:
                          sum(h == "disk" for h in used),
                          "tiers actually used by the dry-run probe"))
         return Result(cols, rows, plan=plan)
+
+    def _explain_analyze(self, stmt: Statement,
+                         prepared: Dict[str, _Prepared],
+                         plan: Plan) -> Result:
+        """EXPLAIN ANALYZE: EXECUTE the inner statement (Postgres
+        semantics — DML commits!) and annotate the plan with the measured
+        span tree plus the EXACT per-tier counter deltas it caused. The
+        tier row is computed from the facade's `tier_hits` (and the pool's
+        counters) sampled before/after, so it reconciles with the registry
+        by construction."""
+        target = stmt
+        if isinstance(target, ExecutePrepared):
+            ps = prepared.get(target.name)
+            if ps is not None:
+                target = ps.stmt
+        f = None
+        if isinstance(target, Select):
+            try:
+                f = self.catalog.view(target.view).facade
+            except PlanError:
+                f = None               # dispatch raises the real error
+        tiers0 = dict(f.tier_hits) if f is not None else None
+        st0 = f.storage_stats() if f is not None else None
+        sp = trace.start("analyze")
+        try:
+            inner = self._dispatch(stmt, prepared)
+        finally:
+            trace.finish(sp)
+        cols = ("phase", "actual_us", "detail")
+        rows: List[tuple] = [("plan", "-", ";".join(
+            str(x) for x in plan.row()))]
+        def emit(s: Span, depth: int):
+            attrs = ";".join(f"{k}={v}" for k, v in s.attrs.items())
+            rows.append(("  " * depth + s.name, f"{s.duration_us:.1f}",
+                         attrs))
+            for c in s.children:
+                emit(c, depth + 1)
+
+        emit(sp, 0)
+        if tiers0 is not None:
+            delta = {t: f.tier_hits[t] - tiers0.get(t, 0) for t in TIERS}
+            rows.append(("tiers", "-",
+                         ";".join(f"{t}={delta[t]}" for t in TIERS)))
+        st1 = f.storage_stats() if f is not None else None
+        if st0 is not None and st1 is not None:
+            rows.append(("pool", "-",
+                         f"hits={st1['hits'] - st0['hits']};"
+                         f"misses={st1['misses'] - st0['misses']};"
+                         f"coalesced={st1['coalesced'] - st0['coalesced']}"))
+        rows.append(("epoch", "-", str(self.log.commits)))
+        rows.append(("rows", "-", str(len(inner.rows))))
+        return Result(cols, rows, plan=plan, tiers_used=inner.tiers_used)
+
+    # -- SHOW METRICS / SHOW COST --------------------------------------
+    def _show_metrics(self) -> Result:
+        """The registry snapshot flattened to sorted dotted keys (nested
+        collector dicts included; list-valued entries — e.g. per-view cost
+        rows, histogram bucket arrays — are summarized, not exploded)."""
+        flat: Dict[str, object] = {}
+
+        def add(prefix: str, obj):
+            if isinstance(obj, dict):
+                for k in obj:
+                    add(f"{prefix}.{k}" if prefix else str(k), obj[k])
+            elif isinstance(obj, (list, tuple)):
+                flat[prefix] = f"<{len(obj)} entries>"
+            elif isinstance(obj, float):
+                flat[prefix] = f"{obj:.6g}"
+            else:
+                flat[prefix] = obj
+
+        add("", self.metrics_snapshot())
+        return Result(("metric", "value"),
+                      [(k, flat[k]) for k in sorted(flat)])
+
+    def _show_cost(self, name: Optional[str]) -> Result:
+        """SHOW COST ON <view>: per-view modeled-vs-measured SKIING rows —
+        the modeled S / accumulated charges next to the wall-clock
+        reorganize and step timings the engine recorded alongside them."""
+        vd = self.catalog.view(name)
+        stats = vd.facade.cost_stats()
+        if stats is None:
+            raise SqlError(f"view {name!r} records no cost telemetry "
+                           f"(engine=sharded keeps its state on-device)")
+        cols = ("view", "v", "policy", "cost_mode", "S_model",
+                "S_measured_mean_s", "reorgs", "steps", "charge_modeled",
+                "seconds_measured", "seconds_per_charge", "acc",
+                "lazy_waste")
+
+        def fmt(x):
+            if x is None:
+                return "-"
+            if isinstance(x, float):
+                return f"{x:.6g}"
+            return x
+
+        rows = [(name, r["view"], r["policy"], r["cost_mode"],
+                 fmt(r["S_model"]), fmt(r["S_measured_mean_s"]),
+                 r["reorgs_modeled"], r["steps_measured"],
+                 fmt(r["charge_modeled"]), fmt(r["seconds_measured"]),
+                 fmt(r["seconds_per_charge"]), fmt(r["acc"]),
+                 fmt(r.get("lazy_waste")))
+                for r in stats]
+        return Result(cols, rows)
 
 
 class Session:

@@ -22,9 +22,9 @@ class LexError(SqlError):
 KEYWORDS = {
     "create", "table", "classification", "view", "on", "using", "model",
     "with", "from", "corpus", "insert", "into", "values", "update", "set",
-    "where", "delete", "commit", "select", "explain", "order", "by",
-    "limit", "asc", "desc", "and", "in", "count", "show", "tables", "views",
-    "storage", "prepare", "execute", "as",
+    "where", "delete", "commit", "select", "explain", "analyze", "order",
+    "by", "limit", "asc", "desc", "and", "in", "count", "show", "tables",
+    "views", "storage", "metrics", "cost", "prepare", "execute", "as",
 }
 
 _TOKEN_RE = re.compile(r"""

@@ -11,8 +11,8 @@ Grammar (keywords case-insensitive, statements `;`-separated):
   COMMIT
   SELECT cols | COUNT(*) FROM v [WHERE pred [AND pred ...]]
          [ORDER BY margin [ASC|DESC]] [LIMIT n]
-  EXPLAIN <any statement>
-  SHOW TABLES | SHOW VIEWS | SHOW STORAGE
+  EXPLAIN [ANALYZE] <any statement>
+  SHOW TABLES | SHOW VIEWS | SHOW STORAGE | SHOW METRICS | SHOW COST ON v
   PREPARE p AS <statement with ? placeholders>
   EXECUTE p [(v1, v2, ...)]
 
@@ -143,12 +143,20 @@ class _Parser:
             return self.select()
         if t.value == "explain":
             self.next()
-            return Explain(self.statement())
+            analyze = False
+            if self.at_kw("analyze"):
+                self.next()
+                analyze = True
+            return Explain(self.statement(), analyze=analyze)
         if t.value == "show":
             self.next()
             what = self.next()
-            if what.value not in ("tables", "views", "storage"):
-                raise ParseError(f"SHOW TABLES, SHOW VIEWS or SHOW STORAGE, "
+            if what.value == "cost":
+                self.expect_kw("on")
+                return Show("cost", view=self.expect_name())
+            if what.value not in ("tables", "views", "storage", "metrics"):
+                raise ParseError(f"SHOW TABLES, SHOW VIEWS, SHOW STORAGE, "
+                                 f"SHOW METRICS or SHOW COST ON <view>, "
                                  f"got {what.value!r}")
             return Show(what.value)
         if t.value == "prepare":

@@ -6,7 +6,6 @@ Used by `python -m repro.launch.serve --mode sql` (interactive), with
 from __future__ import annotations
 
 import sys
-import time
 from typing import Optional
 
 from repro.rdbms.ast_nodes import SqlError
@@ -27,8 +26,9 @@ Ctrl-D to exit."""
 
 
 def run_script(sql: str, executor: Optional[Executor] = None, *,
-               echo: bool = True, out=sys.stdout) -> Executor:
+               echo: bool = True, out=None) -> Executor:
     """Execute a `;`-separated script, printing each result table."""
+    out = sys.stdout if out is None else out   # resolve at call time
     ex = executor or Executor()
     for result in ex.execute(sql):
         if echo:
@@ -36,8 +36,10 @@ def run_script(sql: str, executor: Optional[Executor] = None, *,
     return ex
 
 
-def repl(executor: Optional[Executor] = None, *, stdin=sys.stdin,
-         out=sys.stdout) -> Executor:
+def repl(executor: Optional[Executor] = None, *, stdin=None,
+         out=None) -> Executor:
+    stdin = sys.stdin if stdin is None else stdin
+    out = sys.stdout if out is None else out
     ex = executor or Executor()
     print(BANNER, file=out)
     buf = ""
@@ -57,16 +59,28 @@ def repl(executor: Optional[Executor] = None, *, stdin=sys.stdin,
             if buf.strip().lower() in ("quit", "exit"):
                 break
             continue
-        t0 = time.perf_counter()
         try:
-            for result in ex.execute(buf):
+            results = ex.execute(buf)
+            for result in results:
                 print(result.pretty(), file=out)
                 if result.plan is not None:
                     p = result.plan
                     print(f"-- plan: {p.kind} via {p.tier} "
                           f"(est {p.est_touched} tuples)", file=out)
-            print(f"-- {1e3 * (time.perf_counter() - t0):.2f} ms", file=out)
+            print(_timing_footer(results), file=out)
         except SqlError as e:
             print(f"error: {e}", file=out)
         buf = ""
     return ex
+
+
+def _timing_footer(results) -> str:
+    """`-- N ms (gate-wait g ms, execute e ms)` from the statements' span
+    trees — the SAME per-phase numbers the server's elapsed_us and EXPLAIN
+    ANALYZE report (no second clock in the REPL)."""
+    traces = [r.trace for r in results if r.trace is not None]
+    total = sum(t.duration_us for t in traces) / 1e3
+    gate = sum(t.sum_us("gate.wait") for t in traces) / 1e3
+    execute = sum(t.sum_us("execute") for t in traces) / 1e3
+    return (f"-- {total:.2f} ms (gate-wait {gate:.2f} ms, "
+            f"execute {execute:.2f} ms)")

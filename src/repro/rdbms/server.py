@@ -28,9 +28,9 @@ import concurrent.futures
 import logging
 import os
 import threading
-import time
 from typing import Optional
 
+from repro.obs import trace
 from repro.rdbms.ast_nodes import SqlError
 from repro.rdbms.executor import Executor, Result, Session
 from repro.rdbms.wire import (WireError, decode_payload, encode_frame,
@@ -48,6 +48,12 @@ def _result_payload(res: Result) -> dict:
                        "est_touched": res.plan.est_touched}
     if res.tiers_used is not None:
         out["tiers"] = list(res.tiers_used)
+    if res.trace is not None:
+        # span-derived timing: the SAME tree EXPLAIN ANALYZE and the REPL
+        # footer render, so every surface reports one per-phase breakdown
+        out["elapsed_us"] = round(res.trace.duration_us, 1)
+        out["phases"] = {c.name: round(c.duration_us, 1)
+                         for c in res.trace.children}
     return out
 
 
@@ -57,10 +63,13 @@ class SqlServer:
 
     def __init__(self, executor: Optional[Executor] = None, *,
                  host: str = "127.0.0.1", port: int = 0,
-                 max_workers: Optional[int] = None):
+                 max_workers: Optional[int] = None,
+                 log_statements: bool = False):
         self.executor = executor if executor is not None else Executor()
         self.host = host
         self.port = port                    # 0 -> ephemeral; set by start()
+        self.log_statements = log_statements    # access log (one INFO line
+                                                # per statement) on/off
         self._pool = concurrent.futures.ThreadPoolExecutor(
             max_workers=max_workers or min(32, (os.cpu_count() or 4) * 4),
             thread_name_prefix="sql-session")
@@ -125,33 +134,57 @@ class SqlServer:
 
     # -- worker-thread side --------------------------------------------
     def _serve_request(self, session: Session, request: dict) -> dict:
-        t0 = time.perf_counter()
+        op = request.get("op")
         try:
-            op = request.get("op")
             if op == "ping":
                 return {"ok": True, "pong": True,
                         "session": session.session_id,
                         "epoch": self.executor.epoch}
-            if op == "query":
-                results = session.execute(request["sql"])
-            elif op == "execute":
-                results = [session.execute_prepared(
-                    request["name"], request.get("params", ()))]
-            else:
-                raise SqlError(f"unknown op {op!r}")
+            if op == "metrics":
+                # the unified telemetry snapshot over the wire — what the
+                # CI serve-smoke reconciles and dashboards would scrape
+                return {"ok": True,
+                        "metrics": self.executor.metrics_snapshot(),
+                        "session": session.session_id}
+            with trace.span("request", metrics=self.executor.metrics,
+                            op=op):
+                if op == "query":
+                    results = session.execute(request["sql"])
+                elif op == "execute":
+                    results = [session.execute_prepared(
+                        request["name"], request.get("params", ()))]
+                else:
+                    raise SqlError(f"unknown op {op!r}")
             self.statements_served += len(results)
+            if self.log_statements:
+                for r in results:
+                    self._access_log(session, r)
             return {"ok": True,
                     "results": [_result_payload(r) for r in results],
                     "session": session.session_id,
-                    "elapsed_us": (time.perf_counter() - t0) * 1e6}
+                    "elapsed_us": sum(r.trace.duration_us for r in results
+                                      if r.trace is not None)}
         except Exception as e:              # statement errors keep the
             # session alive; the class name crosses the wire (the client
             # re-raises typed) and the server keeps its own trace
             logger.warning("session %s statement failed: %s: %s",
                            session.session_id, type(e).__name__, e)
+            if self.log_statements:
+                logger.info(
+                    "session=%s op=%s kind=- epoch=%s elapsed_us=- error=%s",
+                    session.session_id, op, self.executor.epoch,
+                    type(e).__name__)
             return {"ok": False, "error": str(e),
                     "error_type": type(e).__name__,
                     "session": session.session_id}
+
+    def _access_log(self, session: Session, res: Result):
+        """One structured line per statement (satellite of the telemetry
+        layer): session, statement kind, pinned epoch, span-derived µs."""
+        kind = res.trace.attrs.get("kind", "?") if res.trace else "?"
+        us = f"{res.trace.duration_us:.1f}" if res.trace else "-"
+        logger.info("session=%s op=query kind=%s epoch=%s elapsed_us=%s "
+                    "error=-", session.session_id, kind, res.epoch, us)
 
 
 class ServerHandle:
@@ -187,11 +220,13 @@ class ServerHandle:
 def start_server_thread(executor: Optional[Executor] = None, *,
                         host: str = "127.0.0.1", port: int = 0,
                         max_workers: Optional[int] = None,
+                        log_statements: bool = False,
                         bind_timeout: float = 10.0) -> ServerHandle:
     """Start a SqlServer on its own event loop + daemon thread; returns
     once the socket is bound (raises if binding fails)."""
     server = SqlServer(executor, host=host, port=port,
-                       max_workers=max_workers)
+                       max_workers=max_workers,
+                       log_statements=log_statements)
     loop = asyncio.new_event_loop()
     bound = threading.Event()
     failure: list = []

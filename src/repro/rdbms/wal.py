@@ -35,6 +35,8 @@ import threading
 from typing import Dict, List, Optional
 
 from repro.analysis.witness import wrap
+from repro.obs.metrics import DEFAULT_COUNT_BUCKETS
+from repro.obs.trace import span as _span
 from repro.rdbms.ast_nodes import SqlError
 
 
@@ -55,7 +57,8 @@ class WalRecord:
 
 
 class UpdateLog:
-    def __init__(self, group_size: int = 64, path: Optional[str] = None):
+    def __init__(self, group_size: int = 64, path: Optional[str] = None,
+                 metrics=None):
         assert group_size >= 1
         self.group_size = int(group_size)
         self.path = path
@@ -65,6 +68,14 @@ class UpdateLog:
         self.pending: Dict[str, List[WalRecord]] = {}
         self.lsn = 0
         self.commits = 0
+        self._metrics = metrics
+        if metrics is not None:
+            self._m_appends = metrics.counter("wal.appends")
+            self._m_commits = metrics.counter("wal.commits")
+            self._m_group = metrics.histogram("wal.group_size",
+                                              DEFAULT_COUNT_BUCKETS)
+        else:
+            self._m_appends = self._m_commits = self._m_group = None
 
     # -- append --------------------------------------------------------
     def _record(self, op: str, table: str, entity_id: int = -1,
@@ -86,6 +97,8 @@ class UpdateLog:
         with self._commit_lock:
             self.pending.setdefault(table, []).append(
                 self._record(op, table, entity_id, label))
+            if self._m_appends is not None:
+                self._m_appends.inc()
             if len(self.pending[table]) >= self.group_size:
                 return self.flush(catalog, table)
             return 0
@@ -104,7 +117,10 @@ class UpdateLog:
         batched engine round per view; DELETEs preserve statement order by
         splitting the batch around the retrain."""
         with self._commit_lock:
-            return self._flush_locked(catalog, table)
+            with _span("wal.commit", metrics=self._metrics) as sp:
+                n = self._flush_locked(catalog, table)
+                sp.attrs["commits"] = n
+            return n
 
     def _flush_locked(self, catalog, table: Optional[str] = None) -> int:
         tables = [table] if table is not None else list(self.pending)
@@ -136,7 +152,22 @@ class UpdateLog:
             self._record("commit", t)
             self.commits += 1
             commits += 1
+            if self._m_commits is not None:
+                self._m_commits.inc()
+                self._m_group.observe(len(group))
         return commits
+
+    # -- telemetry -----------------------------------------------------
+    def telemetry_snapshot(self) -> Dict[str, object]:
+        """Collector payload for the metrics registry (`wal` key)."""
+        with self._commit_lock:
+            return {
+                "commits": self.commits,
+                "lsn": self.lsn,
+                "group_size": self.group_size,
+                "pending_tables": sum(1 for g in self.pending.values() if g),
+                "pending_records": sum(len(g) for g in self.pending.values()),
+            }
 
     # -- recovery ------------------------------------------------------
     @staticmethod

@@ -11,17 +11,25 @@ Requests (client -> server), one object per frame:
   {"op": "query",   "sql": "<';'-separated statements>"}
   {"op": "execute", "name": "<prepared name>", "params": [..]}
   {"op": "ping"}
+  {"op": "metrics"}
   {"op": "close"}
 
 Responses (server -> client), one object per frame:
 
   {"ok": true,  "results": [{"columns": [...], "rows": [[...], ...],
-                             "epoch": E, "plan": "...", "tiers": [...]}],
+                             "epoch": E, "plan": "...", "tiers": [...],
+                             "elapsed_us": T, "phases": {"parse": ..}}],
    "session": S, "elapsed_us": T}
+  {"ok": true,  "metrics": {"counters": .., "gauges": .., "histograms": ..,
+                            "collectors": .., "epoch": E}, "session": S}
   {"ok": false, "error": "...", "error_type": "SqlError|..."}
 
 `epoch` is the committed WAL batch index the statement was pinned at —
 the snapshot version a reader observed, the post-commit index for DML.
+`metrics` is the executor's unified telemetry snapshot (the same payload
+`SHOW METRICS` flattens); per-result `elapsed_us`/`phases` come from the
+statement's span tree, so the wire, EXPLAIN ANALYZE, and the REPL footer
+all report one per-phase breakdown.
 """
 from __future__ import annotations
 

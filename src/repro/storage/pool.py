@@ -66,6 +66,7 @@ from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.analysis.witness import wrap
+from repro.obs.trace import span as _span
 from repro.storage.store import EntityStore
 
 #: placeholder frames installed per lock hold by the batched prefetch
@@ -86,10 +87,13 @@ class Frame:
 
 
 class BufferPool:
-    def __init__(self, store: EntityStore, budget_bytes: int):
+    def __init__(self, store: EntityStore, budget_bytes: int, *, metrics=None):
         self.store = store
         # the pool must be able to hold at least one page
         self.budget_bytes = max(int(budget_bytes), store.page_bytes)
+        # optional MetricsRegistry: cold-read spans record into
+        # span.pool.read.seconds; counters stay local (see stats()).
+        self._metrics = metrics
         # reentrant: repin_rows -> pin_rows -> install helpers all hold it
         self._lock = wrap(threading.RLock(), "pool")
         self.frames: Dict[int, Frame] = {}
@@ -151,7 +155,8 @@ class BufferPool:
                 return fr.data, "disk"             # any eviction race
             # loader dropped the frame without data or error: retry
         try:
-            data = self.store.read_page(pid)       # THE cold read, unlocked
+            with _span("pool.read", metrics=self._metrics, pages=1):
+                data = self.store.read_page(pid)   # THE cold read, unlocked
         except BaseException as e:
             with self._lock:
                 fr.error = e
@@ -224,7 +229,8 @@ class BufferPool:
         copies), NO lock held during the I/O."""
         latches = [fr.latch for _, fr in loads]
         try:
-            datas = self.store.read_pages([pid for pid, _ in loads])
+            with _span("pool.read", metrics=self._metrics, pages=len(loads)):
+                datas = self.store.read_pages([pid for pid, _ in loads])
         except BaseException as e:
             with self._lock:
                 for pid, fr in loads:

@@ -1,0 +1,25 @@
+"""Deliberately-broken fixture: raw wall-clock calls outside repro.obs
+(TEL001). Line numbers are pinned by tests/test_analysis.py."""
+import time
+from time import perf_counter
+
+
+def measure_step(fn):
+    t0 = time.perf_counter()                       # TEL001 (line 8)
+    fn()
+    elapsed = time.time() - t0                     # TEL001 (line 10)
+    return elapsed
+
+
+def measure_bare(fn):                              # bare imported name
+    t0 = perf_counter()                            # TEL001 (line 15)
+    fn()
+    return perf_counter() - t0                     # TEL001 (line 17)
+
+
+def fine(fn):
+    clock = time.perf_counter                      # alias, not a call: OK
+    time.sleep(0.0)                                # not a measurement: OK
+    t0 = clock()
+    fn()
+    return clock() - t0

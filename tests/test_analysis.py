@@ -82,6 +82,15 @@ def test_state_mutation_in_shell():
                                                   (6, "PUR004")]
 
 
+def test_raw_timing():
+    """TEL001: every raw clock call — attribute form AND bare imported
+    name — and ONLY those (the `clock = time.perf_counter` alias and
+    `time.sleep` in the same fixture stay quiet)."""
+    assert _findings("bad_raw_timing.py") == [(8, "TEL001"), (10, "TEL001"),
+                                              (15, "TEL001"),
+                                              (17, "TEL001")]
+
+
 def test_good_fixture_is_quiet():
     assert _findings("good_clean.py") == []
 
