@@ -114,6 +114,11 @@ CHECKS = [
     ("BENCH_serve.json", "latency_ms.p50", "latency_smoke"),
     ("BENCH_serve.json", "latency_ms.p99", "latency_serve"),
     ("BENCH_serve.json", "qps", "throughput"),
+    # freshness fleet (ISSUE 10): the staleness <= lag contract is a HARD
+    # assert inside the bench itself (workload-pinned, so no tolerance
+    # games here); the gate watches the refresh machinery's speed.
+    ("BENCH_fleet.json", "refresh.slices_per_sec", "throughput"),
+    ("BENCH_fleet.json", "refresh.p99_slice_ms", "latency_smoke"),
 ]
 
 BASELINE_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)),

@@ -1,0 +1,200 @@
+"""Freshness-scheduler fleet: N views with mixed TARGET_LAGs on one
+table, refreshed by the background scheduler while a live insert stream
+commits (ISSUE 10 — the delayed-view-semantics shape: Snowflake dynamic
+tables' lag-driven refresh over the paper's incremental maintenance).
+
+Fleet (one base table, five views):
+
+  * ``chain_a -> chain_b -> chain_c`` — a derived cascade: ``chain_a``
+    declares ``target_lag = downstream`` (as fresh as its consumers
+    need), ``chain_b`` a numeric mid lag, ``chain_c`` the leaf lag; the
+    scheduler must refresh the chain in topological order;
+  * ``solo`` — an independent root view at the tightest lag (the
+    scheduler's priority term must keep it fresh even while the cascade
+    is catching up);
+  * ``ctrl`` — an immediate control view (maintained at commit time,
+    exactly the pre-scheduler path).
+
+The stream is paced so several lag windows elapse; a sampler thread
+records per-view staleness from ``schedule_snapshot`` (the same ledger
+``SHOW SCHEDULE`` renders) while a ticker drives refresh slices.
+
+Acceptance (raises -> run.py exits non-zero -> CI goes red):
+  * every scheduled view's MEASURED max staleness stays <= its effective
+    lag (the delayed-view contract);
+  * after a final freshness barrier every scheduled view's labels are
+    bit-identical to an immediate replay of the same stream at the same
+    commit boundaries (scheduling moves work in time, never changes it).
+
+Reported into ``BENCH_fleet.json`` and gated by ``check_regress.py``:
+refresh slices/sec (throughput) and the p99 refresh-slice latency
+(latency_smoke); per-view compliance ratios ride along unguarded (the
+hard <= 1.0 assert lives here, where the workload is pinned).
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+import time
+
+import numpy as np
+
+from benchmarks.common import BENCH_SCALE, emit
+from repro.data import synthetic_corpus
+from repro.rdbms import Catalog, Executor
+from repro.scheduler import FreshnessScheduler
+from repro.scheduler import refresh as fr
+
+DURATION = float(os.environ.get("BENCH_FLEET_SECONDS", "2.5"))
+GROUP = int(os.environ.get("BENCH_FLEET_GROUP", "8"))
+LAGS = {"chain_a": "downstream", "chain_b": "1 s", "chain_c": "2 s",
+        "solo": "500 ms", "ctrl": None}
+
+
+def _build(corpus) -> Catalog:
+    catalog = Catalog()
+    catalog.register_table("t", corpus.features, truth=corpus.labels)
+    base = {"policy": "eager", "cost_mode": "modeled"}
+    for name, parent in (("chain_a", "t"), ("chain_b", "chain_a"),
+                         ("chain_c", "chain_b"), ("solo", "t"),
+                         ("ctrl", "t")):
+        opts = dict(base)
+        if LAGS[name]:
+            opts["target_lag"] = LAGS[name]
+        catalog.create_view(name, parent, "svm", opts)
+    return catalog
+
+
+def _stream_plan(corpus, seed=17):
+    """The full insert stream, pre-drawn: the paced loop is pure serving."""
+    n = corpus.features.shape[0]
+    rng = np.random.default_rng(seed)
+    ids = rng.integers(0, n, size=4096)
+    return [(int(i), int(corpus.labels[i])) for i in ids]
+
+
+def _labels(catalog, name):
+    vd = catalog.view(name)
+    n = vd.facade.view.F.shape[0]
+    return np.array([vd.facade.label(i) for i in range(n)], np.int8)
+
+
+def main() -> None:
+    corpus = synthetic_corpus("fleet", max(240, int(24000 * BENCH_SCALE)),
+                              24, seed=13)
+    catalog = _build(corpus)
+    ex = Executor(catalog, group_commit=GROUP)
+    plan = _stream_plan(corpus)
+
+    slice_s: list = []
+    peaks: dict = {}
+    errors: list = []
+    done = threading.Event()
+
+    def ticker():
+        sched = FreshnessScheduler(ex, interval=0.005)
+        try:
+            while not done.is_set():
+                t0 = time.perf_counter()
+                refreshed = sched.tick()
+                if refreshed:
+                    slice_s.append(time.perf_counter() - t0)
+                else:
+                    done.wait(0.005)
+        except Exception as e:               # noqa: BLE001 — re-raised below
+            errors.append(e)
+
+    worker = threading.Thread(target=ticker, daemon=True)
+    worker.start()
+
+    # a FIXED update count paced over ~DURATION: the workload signature
+    # (and the replay below) must not depend on wall-clock jitter
+    plan = plan[:400]
+    sent = len(plan)
+    pace = DURATION / len(plan)
+    t_wall = time.perf_counter()
+    for i, y in plan:
+        ex.execute_one(f"INSERT INTO t (id, label) VALUES ({i}, {y})")
+        for row in fr.schedule_snapshot(catalog):
+            if row["effective_lag"] is not None:
+                peaks[row["view"]] = max(peaks.get(row["view"], 0.0),
+                                         row["staleness_s"])
+        time.sleep(pace)
+    wall = time.perf_counter() - t_wall
+    done.set()
+    worker.join(timeout=60)
+    if errors:
+        raise RuntimeError(f"refresher thread failed: {errors[0]!r}") \
+            from errors[0]
+    ex.execute_one("COMMIT")
+    ex.refresh_views()                       # final freshness barrier
+
+    # -- acceptance 1: measured staleness <= effective lag, per view -----
+    ratios = {}
+    for row in fr.schedule_snapshot(catalog):
+        lag = row["effective_lag"]
+        if lag is None:
+            continue
+        ratio = peaks.get(row["view"], 0.0) / lag
+        ratios[row["view"]] = ratio
+        assert ratio <= 1.0, (
+            f"view {row['view']!r} blew its lag: peak staleness "
+            f"{peaks.get(row['view'], 0.0):.3f}s vs lag {lag:.3f}s")
+
+    # -- acceptance 2: the scheduler only moved work in time -------------
+    replay_cat = _build(corpus)
+    for vd in replay_cat.topo_order():       # same DAG, all immediate
+        if vd.options.target_lag is not None:
+            replay_cat.alter_view_options(vd.name, {"target_lag": None})
+    replay = Executor(replay_cat, group_commit=GROUP)
+    for i, y in plan[:sent]:
+        replay.execute_one(f"INSERT INTO t (id, label) VALUES ({i}, {y})")
+    replay.execute_one("COMMIT")
+    replay.refresh_views()                   # same barrier (feature pulls)
+    for name in LAGS:
+        a, b = _labels(catalog, name), _labels(replay_cat, name)
+        assert np.array_equal(a, b), f"view {name!r} diverged from replay"
+
+    snap = {r["view"]: r for r in fr.schedule_snapshot(catalog)}
+    slices = len(slice_s)
+    payload = {
+        "workload": {"corpus": corpus.name, "n": corpus.features.shape[0],
+                     "d": int(corpus.features.shape[1]),
+                     "k": len(LAGS), "updates": sent, "reads": 0,
+                     "duration_s": round(wall, 3), "group_commit": GROUP},
+        "scale": BENCH_SCALE,
+        "views": {
+            name: {
+                "target_lag": LAGS[name],
+                "effective_lag_s": snap[name]["effective_lag"],
+                "max_staleness_s": round(peaks.get(name, 0.0), 4),
+                "staleness_over_lag": round(ratios.get(name, 0.0), 4),
+                "refreshes": snap[name]["refreshes"],
+                "rows_applied": snap[name]["rows_applied"],
+            } for name in LAGS},
+        "compliance": {"worst_ratio": round(max(ratios.values()), 4),
+                       "views_within_lag": len(ratios)},
+        "refresh": {
+            "slices": slices,
+            "slices_per_sec": round(slices / wall, 3) if wall else 0.0,
+            "p50_slice_ms": round(float(np.percentile(
+                np.asarray(slice_s) * 1e3, 50)), 3) if slice_s else 0.0,
+            "p99_slice_ms": round(float(np.percentile(
+                np.asarray(slice_s) * 1e3, 99)), 3) if slice_s else 0.0,
+        },
+    }
+    with open("BENCH_fleet.json", "w") as fh:
+        json.dump(payload, fh, indent=2, sort_keys=True)
+
+    for name in sorted(ratios):
+        emit(f"fleet_staleness_over_lag_{name}",
+             ratios[name] * 100.0, "ratio x100")
+    emit("fleet_refresh_slices_per_sec",
+         payload["refresh"]["slices_per_sec"], "slices/s")
+    emit("fleet_refresh_p99_slice_ms",
+         payload["refresh"]["p99_slice_ms"], "ms")
+
+
+if __name__ == "__main__":
+    main()

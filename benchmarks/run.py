@@ -31,6 +31,7 @@ MODULES = [
     "benchmarks.scale",             # paper-scale CS/FC on the multi-view engine
     "benchmarks.sql_serve",         # relational front-end overhead vs direct
     "benchmarks.serve_concurrent",  # concurrent wire-protocol serving swarm
+    "benchmarks.fleet_lag",         # freshness scheduler: TARGET_LAG fleet
     "benchmarks.kernel_bench",      # framework kernels
 ]
 

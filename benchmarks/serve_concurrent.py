@@ -40,11 +40,13 @@ import numpy as np
 from benchmarks.common import BENCH_SCALE, emit
 from repro.data import cora_like
 from repro.rdbms import Catalog, Executor, SqlClient, start_server_thread
+from repro.scheduler import FreshnessScheduler
 
 SESSIONS = int(os.environ.get("BENCH_SERVE_SESSIONS", "64"))
 OPS = int(os.environ.get("BENCH_SERVE_OPS", "100"))          # per session
 READ_FRAC = float(os.environ.get("BENCH_SERVE_READ_FRAC", "0.95"))
 GROUP = int(os.environ.get("BENCH_SERVE_GROUP", "32"))
+LAG = os.environ.get("BENCH_SERVE_LAG", "2 s")   # the secondary view's lag
 
 
 def _build_catalog(corpus) -> Catalog:
@@ -57,6 +59,13 @@ def _build_catalog(corpus) -> Catalog:
                         {"k": corpus.num_classes, "policy": "hybrid",
                          "buffer_frac": 0.02, "cost_mode": "modeled",
                          "memory_budget": 0.25})
+    # a second, LAGGED view on the same table (ISSUE 10): its batches
+    # queue in the freshness inbox and the background refresher drains
+    # them mid-swarm under the exclusive gate — the p99 gate below now
+    # also certifies serving stays healthy WITH the refresher running.
+    catalog.create_view("audit", "papers", "svm",
+                        {"k": corpus.num_classes, "policy": "eager",
+                         "cost_mode": "modeled", "target_lag": LAG})
     return catalog
 
 
@@ -78,12 +87,12 @@ def _session_worker(idx: int, host: str, port: int, corpus,
             i = int(ids[j])
             if kinds[j]:
                 t0 = time.perf_counter()
-                client.execute("pt", [i, int(views[j])])
+                client.run_prepared("pt", [i, int(views[j])])
                 reads.append(time.perf_counter() - t0)
             else:
                 c = int(corpus.classes[i])
                 t0 = time.perf_counter()
-                client.query(
+                client.run(
                     f"INSERT INTO papers (id, class) VALUES ({i}, {c})")
                 writes.append(time.perf_counter() - t0)
         client.close()
@@ -122,6 +131,8 @@ def main() -> None:
     ex = Executor(_build_catalog(corpus), group_commit=GROUP)
     handle = start_server_thread(ex, max_workers=min(32, SESSIONS))
     host, port = handle.address
+    refresher = FreshnessScheduler(ex, interval=0.01)
+    refresher.start()
 
     lat: list = []
     errors: list = []
@@ -152,8 +163,9 @@ def main() -> None:
         raise RuntimeError("serve swarm hung: sessions still alive after "
                            "600s join")
 
-    # flush the uncommitted tail so the WAL history is commit-terminated,
-    # then freeze it for the serial replay
+    # quiesce the refresher, then flush the uncommitted tail so the WAL
+    # history is commit-terminated, and freeze it for the serial replay
+    refresher.stop()
     ex.execute_one("COMMIT")
 
     # -- telemetry reconciliation over the wire (CI serve-smoke gate) ----
@@ -191,16 +203,24 @@ def main() -> None:
     qps = total_ops / wall if wall > 0 else 0.0
 
     # -- acceptance: concurrent == serial replay at the same boundaries --
+    # one freshness barrier on each side first: whatever the refresher
+    # already drained mid-swarm plus this catch-up must land the LAGGED
+    # view on the same state as the serial replay's barrier (scheduling
+    # moves maintenance in time, never changes what it computes).
+    ex.refresh_views()
     serial = _replay_serial(history, corpus)
-    f_conc = ex.catalog.view("topics").facade
-    f_ser = serial.catalog.view("topics").facade
+    serial.refresh_views()
     assert serial.log.commits == ex.log.commits, \
         (serial.log.commits, ex.log.commits)
-    assert np.array_equal(f_conc.counts(), f_ser.counts()), \
-        (f_conc.counts(), f_ser.counts())
-    for v in range(k):
-        assert np.array_equal(np.sort(f_conc.members(v)),
-                              np.sort(f_ser.members(v))), f"view {v}"
+    for name in ("topics", "audit"):
+        f_conc = ex.catalog.view(name).facade
+        f_ser = serial.catalog.view(name).facade
+        assert np.array_equal(f_conc.counts(), f_ser.counts()), \
+            (name, f_conc.counts(), f_ser.counts())
+        for v in range(k):
+            assert np.array_equal(np.sort(f_conc.members(v)),
+                                  np.sort(f_ser.members(v))), (name, v)
+    f_conc = ex.catalog.view("topics").facade
 
     payload = {
         "workload": {"corpus": corpus.name, "n": n,
@@ -220,6 +240,12 @@ def main() -> None:
         "epoch": ex.epoch,
         "server": {"sessions": handle.server.sessions_opened,
                    "statements": handle.server.statements_served},
+        "refresher": {
+            "lag": LAG,
+            "ticks": refresher.ticks,
+            "refreshes": ex.catalog.view("audit").runtime.refreshes,
+            "rows_applied": ex.catalog.view("audit").runtime.rows_applied,
+        },
         "hybrid_tier_hits": dict(f_conc.tier_hits),
         "storage": f_conc.storage_stats(),
         "telemetry": {

@@ -127,6 +127,47 @@ def main():
     assert facade.engine.check_consistent()
     print("view exact w.r.t. current model ✓")
 
+    # Freshness scheduler: a two-level cascade under TARGET_LAG ------------
+    # `base` classifies the raw stream; `triage` is a view OVER the view
+    # (its single input feature is base's margin column — a DAG edge in
+    # the catalog). `base` declares lag 'downstream': it is exactly as
+    # fresh as its consumers need, so triage's 2 s lag governs both.
+    print("\n-- freshness: a lagged two-level cascade (views over views):")
+    for r in ex.execute("""
+        CREATE TABLE stream FROM CORPUS synthetic WITH (scale = 0.1);
+        CREATE CLASSIFICATION VIEW base ON stream USING MODEL svm
+            WITH (cost_mode = modeled, target_lag = downstream);
+        CREATE CLASSIFICATION VIEW triage ON base USING MODEL svm
+            WITH (cost_mode = modeled, target_lag = '2 s');
+        SHOW VIEWS;
+    """):
+        print(r.pretty())
+
+    st = ex.catalog.table("stream")
+    for i in range(0, 48):                # committed, but NOT applied yet:
+        ex.execute_one(f"INSERT INTO stream (id, label) VALUES "
+                       f"({i}, {int(st.truth[i])})")
+    ex.execute_one("COMMIT")
+    print("-- SHOW SCHEDULE (the batches queue in the freshness inbox):")
+    print(ex.execute_one("SHOW SCHEDULE").pretty())
+
+    # SUSPEND freezes labels; committed updates keep queueing. RESUME
+    # catches up exactly once — bit-identical to never having suspended.
+    ex.execute_one("ALTER VIEW base SUSPEND")
+    for i in range(48, 64):
+        ex.execute_one(f"INSERT INTO stream (id, label) VALUES "
+                       f"({i}, {int(st.truth[i])})")
+    ex.execute_one("COMMIT")
+    print("-- suspended:")
+    print(ex.execute_one("ALTER VIEW base RESUME").pretty())
+
+    # the refresh barrier: drain every inbox in topological order (in
+    # `--serve` mode a background thread does this continuously, picking
+    # the most-stale-per-modeled-cost view each slice)
+    refreshed = ex.refresh_views()
+    print(f"refresh barrier drained (topo order): {refreshed}")
+    print(ex.execute_one("SHOW VIEWS").pretty())
+
 
 if __name__ == "__main__":
     main()

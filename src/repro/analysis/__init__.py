@@ -8,6 +8,9 @@ Static suite (CLI: `python -m repro.analysis`, CI job `static-analysis`):
   * PUR001-4  core purity + EngineState immutability (`.purity`)
   * TEL001    single-source timing: raw clock calls outside `repro.obs`
               (`.telemetry`)
+  * FRS001    single-source freshness: DAG order from the catalog's
+              topological sort only; view freshness state mutated only
+              inside `repro.scheduler` (`.freshness`)
 
 Runtime witness (`repro.analysis.witness`, `REPRO_LOCK_WITNESS=1`):
 asserts the same gate < wal_commit < pool order live, per thread, with
@@ -23,10 +26,11 @@ from typing import List, Optional, Sequence
 
 
 def run(files: Optional[Sequence] = None,
-        rules: Sequence[str] = ("LCK", "SRC", "PUR", "TEL")) -> List:
+        rules: Sequence[str] = ("LCK", "SRC", "PUR", "TEL", "FRS")) -> List:
     """Run the selected pass families; returns sorted `Finding`s."""
     from repro.analysis.callgraph import CallGraph
     from repro.analysis.common import ModuleSet, default_files
+    from repro.analysis.freshness import check_freshness
     from repro.analysis.locks import check_locks
     from repro.analysis.purity import check_purity
     from repro.analysis.single_source import check_single_source
@@ -42,4 +46,6 @@ def run(files: Optional[Sequence] = None,
         findings += check_purity(modules)
     if "TEL" in rules:
         findings += check_telemetry(modules)
+    if "FRS" in rules:
+        findings += check_freshness(modules)
     return sorted(findings)

@@ -19,11 +19,12 @@ def main(argv=None) -> int:
         prog="python -m repro.analysis",
         description="repro invariant checks: lock order (LCK), "
                     "single-source rules (SRC), core purity (PUR), "
-                    "single-source timing (TEL)")
+                    "single-source timing (TEL), single-source "
+                    "freshness (FRS)")
     ap.add_argument("paths", nargs="*", type=Path,
                     help="files or directories to scan (default: the "
                          "installed repro tree)")
-    ap.add_argument("--rules", default="LCK,SRC,PUR,TEL",
+    ap.add_argument("--rules", default="LCK,SRC,PUR,TEL,FRS",
                     help="comma-separated rule families to run")
     args = ap.parse_args(argv)
 

@@ -12,7 +12,7 @@ from repro.core.hazy import HazyEngine, NaiveEngine
 from repro.core.multiview import MultiViewEngine
 from repro.core.view import ClassificationView
 from repro.core.multiclass import MulticlassView
-from repro.core.facade import (EngineFacade, SingleViewFacade,
-                               MultiViewFacade, ShardedFacade,
-                               make_sharded_facade)
+from repro.core.facade import (DerivedViewFacade, EngineFacade,
+                               SingleViewFacade, MultiViewFacade,
+                               ShardedFacade, make_sharded_facade)
 from repro.core.random_features import RandomFeatures

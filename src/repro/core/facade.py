@@ -105,6 +105,16 @@ class EngineFacade:
         """Current-model margin of one entity (touches its feature row)."""
         raise NotImplementedError
 
+    def margins_of(self, ids: Sequence[int],
+                   rows: Optional[np.ndarray] = None,
+                   view: int = 0) -> np.ndarray:
+        """Current-model margins of `ids`, as a float32 `(len(ids), 1)`
+        column — the feature rows a derived view trains/labels on. `rows`
+        overrides the facade's own feature lookup: the freshness scheduler
+        passes the PINNED inputs of an in-flight batch so emitted features
+        don't depend on when downstream consumption happens."""
+        raise NotImplementedError
+
     # -- state the planner reads --------------------------------------
     def waters(self) -> Tuple[np.ndarray, np.ndarray]:
         raise NotImplementedError
@@ -266,6 +276,14 @@ class SingleViewFacade(EngineFacade):
         m = self.view.model
         return float(self.view.F[int(entity_id)] @ m.w - m.b)
 
+    def margins_of(self, ids, rows=None, view=0):
+        m = self.view.model
+        if rows is None:
+            X = self.view.F[np.asarray(ids, np.int64)]
+        else:
+            X = np.asarray(rows, np.float32)
+        return (X @ m.w - m.b).astype(np.float32).reshape(len(X), 1)
+
     def waters(self):
         w = self.view.engine.waters
         return (np.array([w.lw], np.float64), np.array([w.hw], np.float64))
@@ -333,6 +351,39 @@ class SingleViewFacade(EngineFacade):
                    acc=float(eng.skiing.a),
                    reorgs_modeled=int(eng.skiing.reorgs))
         return [row]
+
+
+class DerivedViewFacade(SingleViewFacade):
+    """A classification view whose feature table is another view's margin
+    column (views-over-views). The wrapped `ClassificationView` is an
+    ordinary hazy k=1 view over an `(n, 1)` float32 matrix; this subclass
+    adds the two hooks the freshness scheduler drives:
+
+      * `insert_examples(..., features=)` trains on inputs PINNED at the
+        parent's emission time, so the model trajectory is independent of
+        when the refresh runs (it also skips the footnote-2 example log —
+        DELETE cannot replay through a derived chain and is rejected
+        upstream);
+      * `refresh_features(F_new)` re-points the view at the parent's
+        current margin column (a full pull — cheap at `(n, 1)`)."""
+
+    supports_delete = False
+
+    def __init__(self, view: ClassificationView, source: str):
+        super().__init__(view)
+        self.source = source               # the parent view's name
+
+    def insert_examples(self, ids, labels, features=None):
+        self.view.insert_examples(list(ids), list(labels), batched=True,
+                                  features=features)
+
+    def delete_examples(self, entity_id: int) -> int:
+        raise NotImplementedError(
+            "DELETE cannot replay through a derived view")
+
+    def refresh_features(self, F_new: np.ndarray) -> None:
+        self.view.refresh_features(np.asarray(F_new, np.float32))
+        self.n, self.d = self.view.F.shape
 
 
 class MultiViewFacade(EngineFacade):

@@ -77,7 +77,8 @@ class ClassificationView:
         self.engine.apply_model(self.model)
 
     def insert_examples(self, ids: Sequence[int], labels: Sequence[float], *,
-                        batched: bool = True):
+                        batched: bool = True,
+                        features: Optional[np.ndarray] = None):
         """Insert a batch of training examples.
 
         `batched=True` is the fast path: SGD still runs example-by-example
@@ -85,13 +86,19 @@ class ClassificationView:
         maintenance is amortized to ONE `apply_model` round at the end —
         reads after the batch observe only the batch-final model, and the
         view stays exact w.r.t. it. `batched=False` reproduces the seed's
-        per-example maintenance (one HAZY round per insert)."""
+        per-example maintenance (one HAZY round per insert).
+
+        `features` (a `(len(ids), d)` matrix) overrides the row lookup in
+        `self.F` — the freshness scheduler uses this to train derived
+        views on inputs pinned at emission time."""
         if not batched:
-            for i, y in zip(ids, labels):
-                self.insert_example(i, y)
+            for j, (i, y) in enumerate(zip(ids, labels)):
+                self.insert_example(
+                    i, y, None if features is None else features[j])
             return
-        for i, y in zip(ids, labels):
-            f = self.F[i]
+        for j, (i, y) in enumerate(zip(ids, labels)):
+            f = self.F[i] if features is None else np.asarray(features[j],
+                                                             np.float32)
             self.examples.append((f, float(y)))
             self.model = sgd_step(self.model, f, float(y), lr=self.lr,
                                   l2=self.l2, method=self.method)

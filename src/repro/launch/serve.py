@@ -67,14 +67,23 @@ def serve_sql(script: str = None, execute: str = None, serve: str = None,
                 run_script(fh.read(), ex)
         elif execute:
             run_script(execute, ex)
+        # the freshness scheduler runs for the server's whole lifetime:
+        # views with a target_lag are refreshed in the background while
+        # sessions are served (idle ticks are one catalog scan)
+        from repro.scheduler import FreshnessScheduler
+        refresher = FreshnessScheduler(ex).start()
 
         async def _serve():
             server = SqlServer(ex, host=host, port=int(port),
                                log_statements=log_statements)
             await server.start()
             print(f"[serve] sql server on {server.host}:{server.port} "
-                  f"(length-prefixed JSON; Ctrl-C to stop)")
-            await server.serve_forever()
+                  f"(length-prefixed JSON; freshness scheduler on; "
+                  f"Ctrl-C to stop)")
+            try:
+                await server.serve_forever()
+            finally:
+                refresher.stop()
 
         try:
             asyncio.run(_serve())

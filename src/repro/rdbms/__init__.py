@@ -24,15 +24,17 @@ surface for our engines:
   * `repl`     — interactive / scripted entry point
                  (`python -m repro.launch.serve --mode sql`)
 """
-from repro.rdbms.ast_nodes import (Commit, CreateTable, CreateView, Delete,
-                                   ExecutePrepared, Explain, Insert, Param,
-                                   Prepare, Select, Show, Update, UpdateModel,
-                                   Where)
-from repro.rdbms.catalog import Catalog, PlanError, SqlError
+from repro.rdbms.ast_nodes import (AlterView, Commit, CreateTable,
+                                   CreateView, Delete, ExecutePrepared,
+                                   Explain, Insert, Param, Prepare, Select,
+                                   Show, Update, UpdateModel, Where)
+from repro.rdbms.catalog import Catalog, PlanError, SqlError, ViewDef
 from repro.rdbms.client import ClientResult, ServerError, SqlClient
 from repro.rdbms.concurrency import EpochGate
 from repro.rdbms.executor import Executor, Result, Session
 from repro.rdbms.lexer import LexError
+from repro.rdbms.options import (DOWNSTREAM, TableOptions, ViewOptions,
+                                 format_lag, parse_lag)
 from repro.rdbms.parser import ParseError, parse
 from repro.rdbms.planner import Plan, plan_statement
 from repro.rdbms.server import ServerHandle, SqlServer, start_server_thread

@@ -16,6 +16,12 @@ class SqlError(Exception):
     """Base of every front-end error (lex, parse, plan, execution)."""
 
 
+class PlanError(SqlError):
+    """Catalog / planner / option-validation errors (defined here, at the
+    bottom of the import graph, so the typed option schemas can raise it;
+    `repro.rdbms.catalog` re-exports it for its historical import path)."""
+
+
 @dataclasses.dataclass(frozen=True)
 class Param:
     """A `?` placeholder inside a PREPAREd statement, numbered in parse
@@ -100,8 +106,16 @@ class Explain:
 
 
 @dataclasses.dataclass
+class AlterView:
+    """ALTER VIEW v SUSPEND | RESUME | REFRESH | SET (opt = val, ...)."""
+    view: str
+    action: str                            # "suspend"|"resume"|"refresh"|"set"
+    options: dict = dataclasses.field(default_factory=dict)  # SET only
+
+
+@dataclasses.dataclass
 class Show:
-    what: str                  # "tables" | "views" | "storage" | "metrics" | "cost"
+    what: str      # "tables" | "views" | "storage" | "metrics" | "cost" | "schedule"
     view: Optional[str] = None             # SHOW COST ON <view>
 
 
@@ -121,6 +135,6 @@ class ExecutePrepared:
     params: List[float] = dataclasses.field(default_factory=list)
 
 
-Statement = Union[CreateTable, CreateView, Insert, Update, Delete,
-                  UpdateModel, Commit, Select, Explain, Show, Prepare,
-                  ExecutePrepared]
+Statement = Union[CreateTable, CreateView, AlterView, Insert, Update,
+                  Delete, UpdateModel, Commit, Select, Explain, Show,
+                  Prepare, ExecutePrepared]

@@ -1,4 +1,4 @@
-"""Catalog: base entity tables + registered classification views.
+"""Catalog: base entity tables + the DAG of classification views.
 
 A *base table* is an entity relation — the (n, d) feature rows plus the
 ground-truth labels/classes a corpus carries (used only by examples and
@@ -12,21 +12,27 @@ builds one of the three engine shells behind an `EngineFacade` —
   engine=sharded    `ShardedMultiViewHazy` (device-resident shared order,
                     Pallas band kernel; eager only)
 
-WITH-options map straight onto the engine ctor knobs: policy (eager/lazy/
-hybrid), k, buffer_frac, p, q, alpha, lr, l2, cost_mode (measured/modeled),
-touch_ns. Unknown options raise instead of being silently dropped.
+`CREATE CLASSIFICATION VIEW child ON parent` where `parent` is itself a
+view registers a *derived* view: its feature table is the parent's margin
+column (a `(n, 1)` float32 matrix), the edge lives in the catalog
+(`ViewDef.upstreams` / `.downstreams` — this module is the only one that
+touches those attributes directly; everyone else goes through
+`topo_order` / `parents_of` / `children_of`, rule FRS001), and the
+freshness scheduler refreshes the DAG in topological order.
 
-`memory_budget` attaches the real storage tier (§3.5.2/Fig. 8 economics):
-the base table's feature rows live in an on-disk `EntityStore` (one
-memory-mapped file per table, SHARED by every budgeted view on it) and
-the view gets its own `BufferPool` over those pages — values in (0, 1]
-are a fraction of the entity table's bytes, values > 1 are bytes.
-`page_bytes` picks the page geometry (default 8 KiB). `prefetch = on`
-attaches a background `Prefetcher` to the pool: reorganize warm-ups and
-band-scan readahead run on its worker thread, overlapping serving (cold
-reads already run off the pool lock either way). `SHOW STORAGE` renders
-each view's pool residency and hit/miss/eviction/coalescing/readahead
-counters.
+WITH-options are parsed by the typed `ViewOptions` / `TableOptions`
+schemas (`repro.rdbms.options`) — one spec per option, one coercion per
+value type, unknown options raise listing the valid set. `memory_budget`
+attaches the real storage tier (§3.5.2/Fig. 8 economics): the base
+table's feature rows live in an on-disk `EntityStore` (one memory-mapped
+file per table, SHARED by every budgeted view on it) and the view gets
+its own `BufferPool` over those pages — values in (0, 1] are a fraction
+of the entity table's bytes, values > 1 are bytes. `page_bytes` picks the
+page geometry (default 8 KiB). `prefetch = on` attaches a background
+`Prefetcher` to the pool. `target_lag` hands the view to the freshness
+scheduler (`repro.scheduler`): commits queue in the view's inbox instead
+of training synchronously, and the daemon refreshes it before staleness
+exceeds the lag.
 """
 from __future__ import annotations
 
@@ -35,16 +41,17 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
-from repro.core.facade import (EngineFacade, MultiViewFacade,
-                               SingleViewFacade, make_sharded_facade)
+from repro.core.facade import (DerivedViewFacade, EngineFacade,
+                               MultiViewFacade, SingleViewFacade,
+                               make_sharded_facade)
 from repro.core.multiclass import MulticlassView
 from repro.core.view import ClassificationView
-from repro.obs import MetricsRegistry
-from repro.rdbms.ast_nodes import SqlError
+from repro.obs import MetricsRegistry, clock as obs_clock
+from repro.rdbms.ast_nodes import PlanError, SqlError
+from repro.rdbms.options import DOWNSTREAM, TableOptions, ViewOptions
+from repro.scheduler.state import ViewRuntime
 
-
-class PlanError(SqlError):
-    pass
+__all__ = ["BaseTable", "Catalog", "PlanError", "SqlError", "ViewDef"]
 
 
 @dataclasses.dataclass
@@ -73,15 +80,17 @@ class BaseTable:
 @dataclasses.dataclass
 class ViewDef:
     name: str
-    table: str
+    table: str          # ROOT base table (derived views resolve through)
     model: str
     facade: EngineFacade
-    options: dict
-
-
-_VIEW_OPTIONS = {"policy", "k", "engine", "buffer_frac", "p", "q", "alpha",
-                 "lr", "l2", "cost_mode", "touch_ns", "cap_frac",
-                 "memory_budget", "page_bytes", "prefetch"}
+    options: ViewOptions
+    source: Optional[str] = None   # parent VIEW name (derived views only)
+    # DAG edges — only this module reads/writes these attributes (FRS001);
+    # other modules use topo_order / parents_of / children_of / subtree_of
+    upstreams: List[str] = dataclasses.field(default_factory=list)
+    downstreams: List[str] = dataclasses.field(default_factory=list)
+    # freshness ledger, mutated only inside repro.scheduler (FRS001)
+    runtime: ViewRuntime = dataclasses.field(default_factory=ViewRuntime)
 
 
 class Catalog:
@@ -92,6 +101,10 @@ class Catalog:
         # facade collectors here, pools record cold-read latencies into it,
         # and the executor adopts it for gate/WAL/span instruments.
         self.metrics = metrics if metrics is not None else MetricsRegistry()
+        # freshness clock: staleness stamps and lag deadlines read THIS,
+        # so tests (and the scheduler determinism suite) can swap in a
+        # modeled clock. Measured-cost recording stays on the obs clock.
+        self.clock = obs_clock
 
     # -- base tables ---------------------------------------------------
     def register_table(self, name: str, features: np.ndarray, *,
@@ -108,21 +121,19 @@ class Catalog:
                                  options: Optional[dict] = None) -> BaseTable:
         """`CREATE TABLE t FROM CORPUS c` — c is a repro.data factory."""
         import repro.data as data
-        opts = dict(options or {})
-        scale = float(opts.pop("scale", 0.1))
-        seed = int(opts.pop("seed", 0))
-        if opts:
-            raise PlanError(f"unknown CREATE TABLE options: {sorted(opts)}")
+        opts = (options if isinstance(options, TableOptions)
+                else TableOptions.parse(options))
         if corpus in ("forest_like", "dblife_like", "citeseer_like"):
-            c = getattr(data, corpus)(scale=scale)
+            c = getattr(data, corpus)(scale=opts.scale)
             return self.register_table(name, c.features, truth=c.labels)
         if corpus == "cora_like":
-            c = data.cora_like(scale=scale)
+            c = data.cora_like(scale=opts.scale)
             return self.register_table(name, c.features, truth=c.classes,
                                        num_classes=c.num_classes)
         if corpus == "synthetic":
-            c = data.synthetic_corpus("synthetic", max(256, int(4000 * scale)),
-                                      64, seed=seed)
+            c = data.synthetic_corpus("synthetic",
+                                      max(256, int(4000 * opts.scale)),
+                                      64, seed=opts.seed)
             return self.register_table(name, c.features, truth=c.labels)
         raise PlanError(f"unknown corpus {corpus!r}; have forest_like, "
                         f"dblife_like, citeseer_like, cora_like, synthetic")
@@ -132,59 +143,44 @@ class Catalog:
                     options: Optional[dict] = None) -> ViewDef:
         if name in self.views:
             raise PlanError(f"view {name!r} already exists")
-        if table not in self.tables:
-            raise PlanError(f"unknown table {table!r}")
         if model not in ("svm", "logistic"):
             raise PlanError(f"USING MODEL must be svm or logistic, "
                             f"got {model!r}")
+        opts = (options if isinstance(options, ViewOptions)
+                else ViewOptions.parse(options))
+        if table == name or (table in self.views
+                             and name in self._ancestors(table)):
+            raise PlanError(f"view {name!r} ON {table!r} would create a "
+                            f"cycle; classification views form a DAG")
+        if table in self.views:
+            return self._create_derived(name, table, model, opts)
+        if table not in self.tables:
+            raise PlanError(f"unknown table {table!r}")
         t = self.tables[table]
-        opts = dict(options or {})
-        unknown = set(opts) - _VIEW_OPTIONS
-        if unknown:
-            raise PlanError(f"unknown view options: {sorted(unknown)}")
-        k = int(opts.pop("k", t.num_classes if t.num_classes > 2 else 1))
-        engine = opts.pop("engine", "multiview" if k > 1 else "hazy")
-        policy = opts.pop("policy", "eager")
-        if policy not in ("eager", "lazy", "hybrid"):
-            raise PlanError(f"policy must be eager/lazy/hybrid, got "
-                            f"{policy!r}")
-        p = float(opts.pop("p", 2.0))
-        q = float(opts.pop("q", 2.0))
-        alpha = float(opts.pop("alpha", 1.0))
-        lr = float(opts.pop("lr", 0.1))
-        l2 = float(opts.pop("l2", 1e-4))
-        buffer_frac = float(opts.pop("buffer_frac",
-                                     0.01 if policy == "hybrid" else 0.0))
-        cost_mode = opts.pop("cost_mode", "measured")
-        touch_ns = float(opts.pop("touch_ns", 0.0))
-        cap_frac = float(opts.pop("cap_frac", 0.5))
-        memory_budget = opts.pop("memory_budget", None)
-        page_bytes = int(opts.pop("page_bytes", 0)) or None
-        # parser delivers numbers as floats ("1" -> "1.0") and bare
-        # identifiers as strings ("on")
-        prefetch = str(opts.pop("prefetch", "off")).lower() in (
-            "on", "true", "1", "1.0")
+
+        k = opts.k if opts.k is not None else (
+            t.num_classes if t.num_classes > 2 else 1)
+        engine = opts.engine or ("multiview" if k > 1 else "hazy")
+        buffer_frac = (opts.buffer_frac if opts.buffer_frac is not None
+                       else (0.01 if opts.policy == "hybrid" else 0.0))
 
         store = None
-        if memory_budget is not None:
+        if opts.memory_budget is not None:
             if engine == "sharded":
                 raise PlanError("memory_budget requires engine=hazy or "
                                 "engine=multiview (the sharded engine keeps "
                                 "its scratch table device-resident)")
-            mb = float(memory_budget)
-            if mb <= 0:
-                raise PlanError("memory_budget must be positive (a fraction "
-                                "in (0, 1] of the entity table, or bytes)")
+            mb = float(opts.memory_budget)
             budget = int(mb * t.features.nbytes) if mb <= 1.0 else int(mb)
             from repro.storage import PAGE_BYTES, BufferPool
-            store = BufferPool(t.entity_store(page_bytes or PAGE_BYTES),
+            store = BufferPool(t.entity_store(opts.page_bytes or PAGE_BYTES),
                                budget, metrics=self.metrics)
-            if prefetch:
+            if opts.prefetch:
                 from repro.storage import Prefetcher
                 Prefetcher(store)       # attaches itself as store.prefetcher
-        elif page_bytes is not None:
+        elif opts.page_bytes is not None:
             raise PlanError("page_bytes only applies with memory_budget")
-        elif prefetch:
+        elif opts.prefetch:
             raise PlanError("prefetch = on requires memory_budget (the "
                             "readahead worker feeds a buffer pool)")
 
@@ -199,30 +195,77 @@ class Catalog:
                 raise PlanError("engine=hazy is single-view; use "
                                 "engine=multiview for k > 1")
             cv = ClassificationView(
-                t.features, method=model, policy=policy, norm=(p, q),
-                lr=lr, l2=l2, alpha=alpha, buffer_frac=buffer_frac,
-                cost_mode=cost_mode, touch_ns=touch_ns, store=store)
+                t.features, method=model, policy=opts.policy,
+                norm=(opts.p, opts.q), lr=opts.lr, l2=opts.l2,
+                alpha=opts.alpha, buffer_frac=buffer_frac,
+                cost_mode=opts.cost_mode, touch_ns=opts.touch_ns,
+                store=store)
             facade: EngineFacade = SingleViewFacade(cv)
         elif engine == "multiview":
             mc = MulticlassView(
-                t.features, k, policy=policy, lr=lr, l2=l2, alpha=alpha,
-                p=p, q=q, cost_mode=cost_mode, touch_ns=touch_ns,
+                t.features, k, policy=opts.policy, lr=opts.lr, l2=opts.l2,
+                alpha=opts.alpha, p=opts.p, q=opts.q,
+                cost_mode=opts.cost_mode, touch_ns=opts.touch_ns,
                 buffer_frac=buffer_frac, vectorized=True, store=store)
             facade = MultiViewFacade(mc)
-        elif engine == "sharded":
-            if policy != "eager":
+        else:                                   # engine == "sharded"
+            if opts.policy != "eager":
                 raise PlanError("engine=sharded maintains eagerly; "
                                 "policy must be eager")
-            facade = make_sharded_facade(t.features, k, p=p, q=q, lr=lr,
-                                         l2=l2, alpha=alpha,
-                                         cap_frac=cap_frac)
-        else:
-            raise PlanError(f"engine must be hazy/multiview/sharded, "
-                            f"got {engine!r}")
-        vd = ViewDef(name, table, model, facade, dict(options or {}))
-        self.views[name] = vd
-        self.metrics.register_collector(f"view.{name}",
-                                        facade.telemetry_snapshot)
+            facade = make_sharded_facade(t.features, k, p=opts.p, q=opts.q,
+                                         lr=opts.lr, l2=opts.l2,
+                                         alpha=opts.alpha,
+                                         cap_frac=opts.cap_frac)
+        return self._register_view(ViewDef(name, table, model, facade, opts))
+
+    def _create_derived(self, name: str, parent_name: str, model: str,
+                        opts: ViewOptions) -> ViewDef:
+        """`CREATE CLASSIFICATION VIEW child ON parent` — a view whose
+        feature table is the parent view's margin column."""
+        parent = self.views[parent_name]
+        if parent.facade.num_views != 1:
+            raise PlanError(
+                f"view {parent_name!r} has {parent.facade.num_views} "
+                f"one-vs-all views; a derived view consumes a single "
+                f"margin column — its parent must be a k = 1 view")
+        if opts.k not in (None, 1):
+            raise PlanError("derived views are single-view (k = 1): their "
+                            "input is the parent's one margin column")
+        if opts.engine not in (None, "hazy"):
+            raise PlanError("derived views require engine=hazy (k = 1 over "
+                            "the parent's margin column)")
+        if (opts.memory_budget is not None or opts.page_bytes is not None
+                or opts.prefetch):
+            raise PlanError("derived views keep their (n, 1) margin column "
+                            "in RAM; memory_budget/page_bytes/prefetch "
+                            "apply to views ON a base table")
+        buffer_frac = (opts.buffer_frac if opts.buffer_frac is not None
+                       else (0.01 if opts.policy == "hybrid" else 0.0))
+        feats = parent.facade.margins_of(np.arange(parent.facade.n))
+        cv = ClassificationView(
+            feats, method=model, policy=opts.policy, norm=(opts.p, opts.q),
+            lr=opts.lr, l2=opts.l2, alpha=opts.alpha,
+            buffer_frac=buffer_frac, cost_mode=opts.cost_mode,
+            touch_ns=opts.touch_ns)
+        facade = DerivedViewFacade(cv, parent_name)
+        vd = ViewDef(name, parent.table, model, facade, opts,
+                     source=parent_name, upstreams=[parent_name],
+                     runtime=ViewRuntime(
+                         upstream_version_seen=parent.runtime.version))
+        parent.downstreams.append(name)
+        return self._register_view(vd)
+
+    def _register_view(self, vd: ViewDef) -> ViewDef:
+        self.views[vd.name] = vd
+        self.metrics.register_collector(f"view.{vd.name}",
+                                        vd.facade.telemetry_snapshot)
+        return vd
+
+    def alter_view_options(self, name: str, options: dict) -> ViewDef:
+        """`ALTER VIEW v SET (...)` — typed-schema validated; only options
+        marked alterable (today: target_lag) may change post-CREATE."""
+        vd = self.view(name)
+        vd.options = vd.options.alter(options)
         return vd
 
     # -- lookups -------------------------------------------------------
@@ -238,3 +281,83 @@ class Catalog:
 
     def views_on(self, table: str) -> List[ViewDef]:
         return [v for v in self.views.values() if v.table == table]
+
+    # -- the view DAG (sole owner of the edge attributes — FRS001) -----
+    def parents_of(self, name: str) -> List[ViewDef]:
+        return [self.views[u] for u in self.view(name).upstreams]
+
+    def children_of(self, name: str) -> List[ViewDef]:
+        return [self.views[d] for d in self.view(name).downstreams]
+
+    def _ancestors(self, name: str) -> List[str]:
+        out: List[str] = []
+        vd = self.views.get(name)
+        while vd is not None and vd.source is not None:
+            out.append(vd.source)
+            vd = self.views.get(vd.source)
+        return out
+
+    def topo_order(self) -> List[ViewDef]:
+        """Every view, parents before children; deterministic (catalog
+        insertion order among independents). THE refresh order — modules
+        that need one consume this instead of re-deriving it (FRS001)."""
+        out: List[ViewDef] = []
+        seen: set = set()
+
+        def visit(vd: ViewDef) -> None:
+            if vd.name in seen:
+                return
+            seen.add(vd.name)
+            for u in vd.upstreams:
+                visit(self.views[u])
+            out.append(vd)
+
+        for vd in self.views.values():
+            visit(vd)
+        # children can be visited before unrelated roots; re-sort stably
+        # by dependency depth to keep parents strictly first
+        rank: Dict[str, int] = {}
+
+        def depth(vd: ViewDef) -> int:
+            if vd.name not in rank:
+                rank[vd.name] = 1 + max(
+                    (depth(self.views[u]) for u in vd.upstreams), default=-1)
+            return rank[vd.name]
+
+        return sorted(out, key=depth)
+
+    def subtree_of(self, roots: List[ViewDef]) -> List[ViewDef]:
+        """`roots` plus every (transitive) derived consumer, topo order."""
+        want: set = set()
+
+        def walk(vd: ViewDef) -> None:
+            if vd.name in want:
+                return
+            want.add(vd.name)
+            for d in vd.downstreams:
+                walk(self.views[d])
+
+        for vd in roots:
+            walk(vd)
+        return [vd for vd in self.topo_order() if vd.name in want]
+
+    def effective_lag(self, name: str) -> Optional[float]:
+        """Resolve a view's freshness target: a declared number of seconds
+        stands; `downstream` takes the tightest effective lag among the
+        view's consumers; None (or `downstream` with no numeric consumer)
+        means the view is maintained at commit time — immediate."""
+        vd = self.view(name)
+        lag = vd.options.target_lag
+        if lag is None:
+            return None
+        if lag != DOWNSTREAM:
+            return float(lag)
+        lags = [self.effective_lag(d) for d in vd.downstreams]
+        lags = [v for v in lags if v is not None]
+        return min(lags) if lags else None
+
+    def deliver_group(self, table: str, group) -> None:
+        """One committed WAL group -> the table's view DAG (the scheduler
+        package owns delivery semantics; the WAL just hands over)."""
+        from repro.scheduler import refresh as _refresh
+        _refresh.deliver_group(self, table, group)

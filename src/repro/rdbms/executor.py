@@ -49,15 +49,18 @@ import numpy as np
 from repro.core.facade import TIERS
 from repro.obs import trace
 from repro.obs.trace import Span, render_tree
-from repro.rdbms.ast_nodes import (Commit, CreateTable, CreateView, Delete,
-                                   ExecutePrepared, Explain, Insert, Param,
-                                   Prepare, Select, Show, SqlError, Statement,
-                                   Update, UpdateModel, Where)
+from repro.rdbms.ast_nodes import (AlterView, Commit, CreateTable,
+                                   CreateView, Delete, ExecutePrepared,
+                                   Explain, Insert, Param, Prepare, Select,
+                                   Show, SqlError, Statement, Update,
+                                   UpdateModel, Where)
 from repro.rdbms.catalog import Catalog, PlanError
 from repro.rdbms.concurrency import EpochGate
+from repro.rdbms.options import format_lag
 from repro.rdbms.parser import parse
 from repro.rdbms.planner import Plan, _resolve_view_index, plan_statement
 from repro.rdbms.wal import UpdateLog
+from repro.scheduler import refresh as freshness
 
 _slow_log = logging.getLogger("repro.obs.slowlog")
 
@@ -148,6 +151,10 @@ class Executor:
         self.slow_ms = slow_ms              # slow-statement log threshold
         self._tls = threading.local()       # .depth: nested dispatch guard
         self.metrics.register_collector("wal", self.log.telemetry_snapshot)
+        # the freshness ledger rides the unified snapshot (`SHOW METRICS`,
+        # the wire `metrics` op) under the "schedule" key
+        self.metrics.register_collector(
+            "schedule", lambda: freshness.schedule_snapshot(self.catalog))
         # hot-path instruments, resolved once
         self._m_statements = self.metrics.counter("statements")
         self._m_errors = self.metrics.counter("statements.errors")
@@ -366,6 +373,8 @@ class Executor:
             self.log.flush(self.catalog, vd.table)
             vd.facade.force_round()
             return Result(("view", "round"), [(stmt.view, "applied")])
+        if isinstance(stmt, AlterView):
+            return self._alter_view(stmt)
         if isinstance(stmt, Commit):
             n = self.log.flush(self.catalog)
             return Result(("commits",), [(n,)])
@@ -380,10 +389,9 @@ class Executor:
                 return self._show_metrics()
             if stmt.what == "cost":
                 return self._show_cost(stmt.view)
-            return Result(("view", "table", "k", "policy"),
-                          [(v.name, v.table, v.facade.num_views,
-                            v.facade.policy)
-                           for v in self.catalog.views.values()])
+            if stmt.what == "schedule":
+                return self._show_schedule()
+            return self._show_views()
         if isinstance(stmt, Prepare):
             if stmt.name in prepared:
                 raise SqlError(f"prepared statement {stmt.name!r} already "
@@ -396,6 +404,86 @@ class Executor:
         if isinstance(stmt, Select):
             return self._select(stmt)
         raise SqlError(f"cannot execute {type(stmt).__name__}")
+
+    def _alter_view(self, stmt: AlterView) -> Result:
+        """ALTER VIEW — lifecycle verbs route to the scheduler package
+        (the only module allowed to mutate freshness state, FRS001);
+        SET goes through the typed option schema's alter path."""
+        vd = self.catalog.view(stmt.view)
+        if stmt.action == "suspend":
+            with trace.span("view.suspend", view=vd.name):
+                freshness.suspend_view(self.catalog, vd)
+        elif stmt.action == "resume":
+            # catch up EXACTLY once, right here: queued batches replay
+            # with their original commit boundaries
+            with trace.span("view.resume", view=vd.name):
+                freshness.resume_view(self.catalog, vd)
+        elif stmt.action == "refresh":
+            with trace.span("view.refresh", view=vd.name):
+                self.log.flush(self.catalog, vd.table)
+                freshness.refresh_view(self.catalog, vd)
+        else:                                   # "set"
+            vd = self.catalog.alter_view_options(stmt.view, stmt.options)
+        return self._freshness_result(vd)
+
+    def refresh_views(self, view: Optional[str] = None) -> List[str]:
+        """The wire `refresh` op — a freshness BARRIER: commit all pending
+        DML and bring every view (or `view` + its ancestors) up to date in
+        topological order, under one exclusive gate slice. Runs outside
+        `execute_statement` so a barrier does not perturb the per-
+        statement telemetry the serve benchmarks assert on."""
+        gw = trace.start("gate.wait", mode="exclusive")
+        with self.gate.write():
+            trace.finish(gw)
+            with trace.span("refresh.barrier", view=view or "*"):
+                self.log.flush(self.catalog)
+                return freshness.refresh_all(self.catalog, only=view)
+
+    def _freshness_result(self, vd) -> Result:
+        row = next(r for r in freshness.schedule_snapshot(self.catalog)
+                   if r["view"] == vd.name)
+        return Result(
+            ("view", "state", "target_lag", "staleness_s", "inbox_rows"),
+            [(vd.name, row["state"], format_lag(row["target_lag"]),
+              round(row["staleness_s"], 6), row["inbox_rows"])])
+
+    def _show_views(self) -> Result:
+        """SHOW VIEWS — the catalog plus each view's freshness face:
+        state (immediate/scheduled/suspended), declared + effective lag,
+        measured staleness, last refresh."""
+        snap = {r["view"]: r for r in
+                freshness.schedule_snapshot(self.catalog)}
+        cols = ("view", "on", "k", "policy", "state", "target_lag",
+                "effective_lag", "staleness_s", "last_refresh_s")
+        rows = []
+        for v in self.catalog.views.values():
+            r = snap[v.name]
+            rows.append((v.name, r["on"], v.facade.num_views,
+                         v.facade.policy, r["state"],
+                         format_lag(r["target_lag"]),
+                         format_lag(r["effective_lag"]),
+                         round(r["staleness_s"], 6),
+                         ("-" if r["last_refresh_age_s"] is None
+                          else round(r["last_refresh_age_s"], 6))))
+        return Result(cols, rows)
+
+    def _show_schedule(self) -> Result:
+        """SHOW SCHEDULE — the scheduler's full ledger: what's queued,
+        what it would cost (SKIING-modeled), who goes next (priority)."""
+        cols = ("view", "on", "state", "target_lag", "effective_lag",
+                "staleness_s", "inbox_batches", "inbox_rows",
+                "modeled_cost", "priority", "refreshes", "rows_applied")
+        rows = []
+        for r in freshness.schedule_snapshot(self.catalog):
+            rows.append((r["view"], r["on"], r["state"],
+                         format_lag(r["target_lag"]),
+                         format_lag(r["effective_lag"]),
+                         round(r["staleness_s"], 6), r["inbox_batches"],
+                         r["inbox_rows"], int(r["modeled_cost"]),
+                         ("-" if r["priority"] is None
+                          else round(r["priority"], 4)),
+                         r["refreshes"], r["rows_applied"]))
+        return Result(cols, rows)
 
     def _show_storage(self) -> Result:
         """One row per view: the storage tier's residency and counters

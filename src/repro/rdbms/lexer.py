@@ -25,6 +25,7 @@ KEYWORDS = {
     "where", "delete", "commit", "select", "explain", "analyze", "order",
     "by", "limit", "asc", "desc", "and", "in", "count", "show", "tables",
     "views", "storage", "metrics", "cost", "prepare", "execute", "as",
+    "alter", "suspend", "resume", "refresh", "schedule",
 }
 
 _TOKEN_RE = re.compile(r"""

@@ -4,6 +4,9 @@ Grammar (keywords case-insensitive, statements `;`-separated):
 
   CREATE TABLE t FROM CORPUS name [WITH (opt = val, ...)]
   CREATE CLASSIFICATION VIEW v ON t USING MODEL svm [WITH (opt = val, ...)]
+        (ON may name another classification view: a derived view over its
+         margin column — the freshness DAG edge)
+  ALTER VIEW v SUSPEND | RESUME | REFRESH | SET (opt = val, ...)
   INSERT INTO t [(id, label)] VALUES (i, y) [, (i, y) ...]
   UPDATE t SET label = y WHERE id = i
   UPDATE MODEL ON v
@@ -12,7 +15,8 @@ Grammar (keywords case-insensitive, statements `;`-separated):
   SELECT cols | COUNT(*) FROM v [WHERE pred [AND pred ...]]
          [ORDER BY margin [ASC|DESC]] [LIMIT n]
   EXPLAIN [ANALYZE] <any statement>
-  SHOW TABLES | SHOW VIEWS | SHOW STORAGE | SHOW METRICS | SHOW COST ON v
+  SHOW TABLES | SHOW VIEWS | SHOW STORAGE | SHOW METRICS | SHOW SCHEDULE
+       | SHOW COST ON v
   PREPARE p AS <statement with ? placeholders>
   EXECUTE p [(v1, v2, ...)]
 
@@ -23,14 +27,15 @@ Grammar (keywords case-insensitive, statements `;`-separated):
 """
 from __future__ import annotations
 
-from math import isfinite
 from typing import List, Optional
 
-from repro.rdbms.ast_nodes import (Commit, CreateTable, CreateView, Delete,
-                                   ExecutePrepared, Explain, Insert, Param,
-                                   Prepare, Select, Show, SqlError, Statement,
-                                   Update, UpdateModel, Where)
+from repro.rdbms.ast_nodes import (AlterView, Commit, CreateTable,
+                                   CreateView, Delete, ExecutePrepared,
+                                   Explain, Insert, Param, Prepare, Select,
+                                   Show, SqlError, Statement, Update,
+                                   UpdateModel, Where)
 from repro.rdbms.lexer import Token, tokenize
+from repro.rdbms.options import coerce_number
 
 COLUMNS = ("id", "view", "label", "margin", "class")
 
@@ -130,6 +135,8 @@ class _Parser:
                              f"{t.value!r}")
         if t.value == "create":
             return self.create()
+        if t.value == "alter":
+            return self.alter()
         if t.value == "insert":
             return self.insert()
         if t.value == "update":
@@ -154,16 +161,29 @@ class _Parser:
             if what.value == "cost":
                 self.expect_kw("on")
                 return Show("cost", view=self.expect_name())
-            if what.value not in ("tables", "views", "storage", "metrics"):
+            if what.value not in ("tables", "views", "storage", "metrics",
+                                  "schedule"):
                 raise ParseError(f"SHOW TABLES, SHOW VIEWS, SHOW STORAGE, "
-                                 f"SHOW METRICS or SHOW COST ON <view>, "
-                                 f"got {what.value!r}")
+                                 f"SHOW METRICS, SHOW SCHEDULE or "
+                                 f"SHOW COST ON <view>, got {what.value!r}")
             return Show(what.value)
         if t.value == "prepare":
             return self.prepare()
         if t.value == "execute":
             return self.execute_prepared()
         raise ParseError(f"unknown statement {t.value!r} at {t.pos}")
+
+    def alter(self) -> AlterView:
+        self.expect_kw("alter")
+        self.expect_kw("view")
+        name = self.expect_name()
+        t = self.next()
+        if t.kind == "KW" and t.value in ("suspend", "resume", "refresh"):
+            return AlterView(name, t.value)
+        if t.kind == "KW" and t.value == "set":
+            return AlterView(name, "set", self.options_body())
+        raise ParseError(f"ALTER VIEW wants SUSPEND, RESUME, REFRESH or "
+                         f"SET (...) at {t.pos}, got {t.value!r}")
 
     def prepare(self) -> Prepare:
         self.expect_kw("prepare")
@@ -191,20 +211,24 @@ class _Parser:
         return ExecutePrepared(name, params)
 
     def with_options(self) -> dict:
-        opts: dict = {}
         if not self.at_kw("with"):
-            return opts
+            return {}
         self.next()
+        return self.options_body()
+
+    def options_body(self) -> dict:
+        """`(key = value, ...)` — shared by WITH and ALTER ... SET. Values
+        stay RAW here (number/identifier/string); the typed schemas in
+        `repro.rdbms.options` own all per-option validation, the parser
+        only applies the dialect-wide number coercion."""
+        opts: dict = {}
         self.expect_punct("(")
         while True:
             key = self.expect_name()
             self.expect_punct("=")
             t = self.next()
             if t.kind == "NUMBER":
-                v = _num(t.value)
-                if isfinite(v) and v == int(v):
-                    v = int(v)
-                opts[key] = v
+                opts[key] = coerce_number(_num(t.value))
             elif t.kind in ("IDENT", "KW", "STRING"):
                 opts[key] = t.value
             else:

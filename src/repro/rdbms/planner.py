@@ -27,9 +27,10 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional
 
-from repro.rdbms.ast_nodes import (Commit, CreateTable, CreateView, Delete,
-                                   ExecutePrepared, Explain, Insert, Prepare,
-                                   Select, Show, Update, UpdateModel, Where)
+from repro.rdbms.ast_nodes import (AlterView, Commit, CreateTable,
+                                   CreateView, Delete, ExecutePrepared,
+                                   Explain, Insert, Prepare, Select, Show,
+                                   Update, UpdateModel, Where)
 from repro.rdbms.catalog import Catalog, PlanError
 
 
@@ -185,9 +186,27 @@ def plan_statement(stmt, catalog: Catalog, log=None) -> Plan:
     if isinstance(stmt, CreateTable):
         return Plan("ddl", "create-table", 0, stmt.corpus)
     if isinstance(stmt, CreateView):
+        if stmt.table in catalog.views:          # derived: ON another view
+            parent = catalog.view(stmt.table)
+            return Plan("ddl", "create-view(derived, margin-column pull)",
+                        parent.facade.n,
+                        f"{stmt.options.get('policy', 'eager')};"
+                        f"on={stmt.table}")
         t = catalog.table(stmt.table)
         return Plan("ddl", "create-view(initial clustering)", t.n,
                     stmt.options.get("policy", "eager"))
+    if isinstance(stmt, AlterView):
+        vd = catalog.view(stmt.view)
+        if stmt.action == "refresh":
+            # catch-up: queued rows + the band a round relabels (SKIING
+            # units, same as the scheduler's modeled cost)
+            from repro.scheduler import refresh as _refresh
+            est = int(_refresh.modeled_catchup_cost(catalog, vd))
+            return Plan("refresh", "scheduler(topo catch-up)", est,
+                        view=stmt.view)
+        return Plan("ddl", f"alter-view({stmt.action})", 0,
+                    ",".join(sorted(stmt.options)) or stmt.action,
+                    view=stmt.view)
     if isinstance(stmt, Show):
         return Plan("show", "catalog", 0, stmt.what)
     if isinstance(stmt, Prepare):

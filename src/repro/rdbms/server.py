@@ -146,6 +146,15 @@ class SqlServer:
                 return {"ok": True,
                         "metrics": self.executor.metrics_snapshot(),
                         "session": session.session_id}
+            if op == "refresh":
+                # freshness barrier: commit pending DML + refresh every
+                # view (or request["view"] + ancestors) in topo order.
+                # NOT a statement — it must not skew per-statement
+                # telemetry the serve benchmarks reconcile.
+                refreshed = self.executor.refresh_views(request.get("view"))
+                return {"ok": True, "refreshed": refreshed,
+                        "epoch": self.executor.epoch,
+                        "session": session.session_id}
             with trace.span("request", metrics=self.executor.metrics,
                             op=op):
                 if op == "query":

@@ -129,26 +129,11 @@ class UpdateLog:
             group = self.pending.pop(t, [])
             if not group:
                 continue
-            views = catalog.views_on(t)
-            batch: List[WalRecord] = []
-
-            def feed(batch: List[WalRecord]):
-                if not batch:
-                    return
-                ids = [r.entity_id for r in batch]
-                ys = [r.label for r in batch]
-                for vd in views:
-                    vd.facade.insert_examples(ids, ys)
-
-            for rec in group:
-                if rec.op == "delete":
-                    feed(batch)
-                    batch = []
-                    for vd in views:
-                        vd.facade.delete_examples(rec.entity_id)
-                else:                        # insert/update: one example
-                    batch.append(rec)
-            feed(batch)
+            # the catalog's view DAG decides per-view what "apply" means:
+            # immediate views train right here (one batched engine round,
+            # exactly the old inline feed); scheduled views queue the
+            # batch in their inbox for the freshness scheduler
+            catalog.deliver_group(t, group)
             self._record("commit", t)
             self.commits += 1
             commits += 1

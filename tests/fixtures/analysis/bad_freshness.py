@@ -1,0 +1,14 @@
+"""A module forking freshness semantics on its own (FRS001): it
+re-derives refresh order from the raw DAG edges and flips view runtime
+state without going through the scheduler's gate section."""
+
+
+def sneak_refresh(catalog, vd, batch):
+    order = [up for up in vd.upstreams]            # raw edge access
+    for child in catalog.views[vd.name].downstreams:
+        order.append(child)
+    vd.runtime.inbox.append(batch)                 # hand-delivered batch
+    vd.runtime.stale_since = None                  # forged freshness stamp
+    vd.runtime.suspended = True                    # suspend, no scheduler
+    vd.runtime.rows_applied += len(batch)
+    return order

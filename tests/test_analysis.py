@@ -91,6 +91,15 @@ def test_raw_timing():
                                               (17, "TEL001")]
 
 
+def test_freshness_forked_semantics():
+    """FRS001: raw DAG-edge walks (lines 7-8), a hand-delivered inbox
+    batch (10), and forged freshness stamps / out-of-band SUSPEND
+    (11-13) — each pinned, nothing else in the fixture."""
+    assert _findings("bad_freshness.py") == [
+        (7, "FRS001"), (8, "FRS001"), (10, "FRS001"),
+        (11, "FRS001"), (12, "FRS001"), (13, "FRS001")]
+
+
 def test_good_fixture_is_quiet():
     assert _findings("good_clean.py") == []
 

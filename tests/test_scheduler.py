@@ -1,0 +1,461 @@
+"""Freshness scheduler: TARGET_LAG views, SUSPEND/RESUME, views-over-views.
+
+The load-bearing property (ISSUE 10): freshness scheduling changes WHEN
+maintenance happens, never WHAT it computes. A lagged view, a suspended-
+then-resumed view, and a whole derived cascade must all land on labels
+and models bit-identical to an immediate (on-commit) replay of the same
+stream at the same commit boundaries — the scheduler only moves the work
+in time. Everything runs with cost_mode=modeled so engine reorganization
+is deterministic; freshness time runs on an injected modeled clock.
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.data import synthetic_corpus
+from repro.rdbms import Catalog, Executor, PlanError
+from repro.rdbms.options import DOWNSTREAM, parse_lag
+from repro.scheduler import FreshnessScheduler
+from repro.scheduler import refresh as fr
+
+
+class FakeClock:
+    """Deterministic freshness time: advances only when told."""
+
+    def __init__(self, t=0.0):
+        self.t = float(t)
+
+    def __call__(self):
+        return self.t
+
+    def advance(self, dt):
+        self.t += float(dt)
+        return self.t
+
+
+def _cascade(seed=7, *, lags=("2 s", "downstream", None), group=8,
+             n=240, d=12):
+    """table t -> root view a -> derived b -> derived c, with the given
+    target lags (None = immediate), on a modeled freshness clock."""
+    c = synthetic_corpus("sched", n, d, seed=seed)
+    catalog = Catalog()
+    clock = FakeClock()
+    catalog.clock = clock
+    catalog.register_table("t", c.features, truth=c.labels)
+    opts = {"policy": "eager", "cost_mode": "modeled"}
+    for name, parent, lag in (("a", "t", lags[0]), ("b", "a", lags[1]),
+                              ("c", "b", lags[2])):
+        o = dict(opts)
+        if lag is not None:
+            o["target_lag"] = lag
+        catalog.create_view(name, parent, "svm", o)
+    ex = Executor(catalog, group_commit=group)
+    return c, catalog, clock, ex
+
+
+def _stream(ex, corpus, count, *, start=0):
+    for j in range(start, start + count):
+        i = j % corpus.features.shape[0]
+        ex.execute_one(f"INSERT INTO t (id, label) VALUES "
+                       f"({i}, {int(corpus.labels[i])})")
+
+
+def _state(catalog, name):
+    """Bit-comparable state of one view: labels, model, waters, counts."""
+    vd = catalog.view(name)
+    v = vd.facade.view
+    n = v.F.shape[0]
+    return (np.array([vd.facade.label(i) for i in range(n)], np.int8),
+            v.model.w.copy(), float(v.model.b),
+            tuple(float(x) for w in vd.facade.waters() for x in w),
+            vd.facade.counts().copy(), v.engine.stats.rounds)
+
+
+def _assert_same_state(catalog_a, catalog_b, names=("a", "b", "c")):
+    for name in names:
+        sa, sb = _state(catalog_a, name), _state(catalog_b, name)
+        np.testing.assert_array_equal(sa[0], sb[0], err_msg=f"{name} labels")
+        np.testing.assert_array_equal(sa[1], sb[1], err_msg=f"{name} w")
+        assert sa[2] == sb[2], f"{name} bias"
+        assert sa[3] == sb[3], f"{name} waters"
+        np.testing.assert_array_equal(sa[4], sb[4], err_msg=f"{name} counts")
+        assert sa[5] == sb[5], f"{name} rounds"
+
+
+# ---------------------------------------------------------------------------
+# DDL surface: typed options, lag parsing, DAG registration, cycles
+# ---------------------------------------------------------------------------
+
+def test_parse_lag_units_and_errors():
+    assert parse_lag("5 s") == 5.0
+    assert parse_lag("500 ms") == 0.5
+    assert parse_lag("2 m") == 120.0
+    assert parse_lag(3) == 3.0
+    assert parse_lag("downstream") is DOWNSTREAM
+    assert parse_lag(None) is None
+    with pytest.raises(PlanError):
+        parse_lag("fortnight")
+    with pytest.raises(PlanError):
+        parse_lag("-2 s")
+    with pytest.raises(PlanError):
+        parse_lag(0)
+
+
+def test_create_derived_view_registers_dag_edge():
+    _c, catalog, _clock, _ex = _cascade()
+    b = catalog.view("b")
+    assert b.source == "a" and b.table == "t"     # resolves to the ROOT
+    assert [v.name for v in catalog.parents_of("b")] == ["a"]
+    assert [v.name for v in catalog.children_of("a")] == ["b"]
+    assert [v.name for v in catalog.topo_order()] == ["a", "b", "c"]
+    assert b.facade.d == 1                        # the margin column
+    assert not b.facade.supports_delete
+
+
+def test_cycle_rejected_at_create():
+    c = synthetic_corpus("cyc", 64, 8, seed=3)
+    catalog = Catalog()
+    catalog.register_table("t", c.features, truth=c.labels)
+    with pytest.raises(PlanError, match="cycle"):
+        catalog.create_view("self", "self", "svm", {})
+    catalog.create_view("root", "t", "svm", {"cost_mode": "modeled"})
+    ex = Executor(catalog)
+    with pytest.raises(PlanError, match="cycle"):
+        ex.execute_one("CREATE CLASSIFICATION VIEW loop ON loop "
+                       "USING MODEL svm")
+    # a straight chain is NOT a cycle
+    catalog.create_view("kid", "root", "svm", {"cost_mode": "modeled"})
+    assert [v.name for v in catalog.topo_order()] == ["root", "kid"]
+
+
+def test_derived_view_restrictions():
+    _c, catalog, _clock, _ex = _cascade()
+    with pytest.raises(PlanError, match="margin column"):
+        catalog.create_view("d1", "a", "svm", {"k": 3})
+    with pytest.raises(PlanError, match="engine=hazy"):
+        catalog.create_view("d2", "a", "svm", {"engine": "sharded"})
+    with pytest.raises(PlanError, match="in RAM"):
+        catalog.create_view("d3", "a", "svm", {"memory_budget": 0.5})
+
+
+def test_alter_set_is_schema_checked():
+    _c, catalog, _clock, ex = _cascade()
+    ex.execute_one("ALTER VIEW c SET (target_lag = '3 s')")
+    assert catalog.view("c").options.target_lag == 3.0
+    with pytest.raises(PlanError, match="alterable"):
+        ex.execute_one("ALTER VIEW c SET (policy = lazy)")   # CREATE-only
+    with pytest.raises(PlanError, match="valid view option"):
+        ex.execute_one("ALTER VIEW c SET (bogus = 1)")
+    with pytest.raises(PlanError):
+        ex.execute_one("ALTER VIEW c SET (target_lag = 'soon')")
+
+
+def test_downstream_lag_propagation():
+    _c, catalog, _clock, ex = _cascade(lags=("downstream", "downstream",
+                                             "2 s"))
+    assert catalog.effective_lag("c") == 2.0
+    assert catalog.effective_lag("b") == 2.0      # derived from consumer
+    assert catalog.effective_lag("a") == 2.0
+    ex.execute_one("ALTER VIEW c SET (target_lag = '500 ms')")
+    assert catalog.effective_lag("a") == 0.5      # tightens transitively
+    # no numeric consumer anywhere -> the chain degrades to immediate
+    _c2, catalog2, _cl2, _ex2 = _cascade(lags=("downstream", "downstream",
+                                               None))
+    assert catalog2.effective_lag("a") is None
+    assert not fr.is_scheduled(catalog2, catalog2.view("a"))
+
+
+# ---------------------------------------------------------------------------
+# semantics: lagged == immediate at the same commit boundaries
+# ---------------------------------------------------------------------------
+
+def test_lagged_cascade_bit_identical_to_immediate_replay():
+    """The acceptance property: a 3-view cascade under target_lag, with
+    refreshes happening whenever the scheduler decides, lands bit-
+    identical (labels, model, waters, counts, ROUNDS) to the same stream
+    into an identical immediate cascade — after one freshness barrier on
+    each side."""
+    c, lagged, clock, ex_l = _cascade(lags=("2 s", "downstream", "500 ms"))
+    _c2, immediate, _clk, ex_i = _cascade(lags=(None, None, None))
+    sched = FreshnessScheduler(ex_l, clock=clock)
+    for round_no in range(6):
+        _stream(ex_l, c, 24, start=24 * round_no)
+        _stream(ex_i, c, 24, start=24 * round_no)
+        clock.advance(0.4)
+        sched.tick()                    # refreshes only what is due
+    ex_l.execute_one("COMMIT")
+    ex_i.execute_one("COMMIT")
+    ex_l.refresh_views()                # freshness barrier on both sides
+    ex_i.refresh_views()
+    _assert_same_state(lagged, immediate)
+
+
+def test_scheduler_is_deterministic_under_modeled_clock():
+    """Same stream + same lags + same clock advances => the same tick-by-
+    tick refresh schedule and the same final state, run-to-run."""
+    def run():
+        c, catalog, clock, ex = _cascade(lags=("2 s", "downstream", "1 s"))
+        sched = FreshnessScheduler(ex, clock=clock)
+        rng = np.random.default_rng(11)
+        for step in range(40):
+            _stream(ex, c, int(rng.integers(1, 7)), start=step * 7)
+            clock.advance(float(rng.uniform(0.05, 0.6)))
+            sched.tick()
+        ex.execute_one("COMMIT")
+        ex.refresh_views()
+        return sched.schedule_log, catalog
+
+    log1, cat1 = run()
+    log2, cat2 = run()
+    assert log1 == log2
+    assert any(names for _, names in log1)        # it actually refreshed
+    _assert_same_state(cat1, cat2)
+
+
+def test_refresh_runs_in_topological_order():
+    c, catalog, clock, ex = _cascade(lags=("2 s", "2 s", "2 s"))
+    _stream(ex, c, 16)
+    ex.execute_one("COMMIT")
+    clock.advance(5.0)
+    names = ex.refresh_views()
+    order = {n: i for i, n in enumerate(names)}
+    assert order["a"] < order["b"] < order["c"]
+    # a single leaf refresh drains its ancestors first, in order
+    _stream(ex, c, 16, start=16)
+    ex.execute_one("COMMIT")
+    clock.advance(5.0)
+    assert ex.refresh_views("c") == ["a", "b", "c"]
+
+
+def test_suspend_freezes_resume_catches_up_exactly_once():
+    """SUSPEND freezes labels while base updates queue; RESUME replays
+    the queued batches once, bit-identical to never having suspended."""
+    c, suspended, clock, ex_s = _cascade(lags=("2 s", None, None))
+    _c2, straight, _clk, ex_n = _cascade(lags=("2 s", None, None))
+    _stream(ex_s, c, 24)
+    _stream(ex_n, c, 24)
+    ex_s.execute_one("COMMIT")
+    ex_n.execute_one("COMMIT")
+    ex_s.refresh_views()
+    ex_n.refresh_views()
+
+    ex_s.execute_one("ALTER VIEW a SUSPEND")
+    frozen = _state(suspended, "a")
+    _stream(ex_s, c, 40, start=24)
+    _stream(ex_n, c, 40, start=24)
+    ex_s.execute_one("COMMIT")
+    ex_n.execute_one("COMMIT")
+    assert "a" not in ex_s.refresh_views()        # suspended: stays frozen
+    after_commits = _state(suspended, "a")
+    np.testing.assert_array_equal(frozen[0], after_commits[0])
+    assert frozen[5] == after_commits[5]          # no hidden rounds
+    rt = suspended.view("a").runtime
+    clock.advance(3.0)
+    assert rt.inbox_rows() == 40 and rt.staleness(clock()) > 0
+
+    ex_s.execute_one("ALTER VIEW a RESUME")       # catches up EXACTLY once
+    assert suspended.view("a").runtime.inbox_rows() == 0
+    ex_s.refresh_views()                          # barrier on both sides
+    ex_n.refresh_views()
+    _assert_same_state(suspended, straight)
+    # resuming again is a no-op round-wise (nothing queued)
+    rounds = _state(suspended, "a")[5]
+    ex_s.execute_one("ALTER VIEW a RESUME")
+    assert _state(suspended, "a")[5] == rounds
+
+
+def test_suspended_ancestor_blocks_descendants():
+    c, catalog, clock, ex = _cascade(lags=("2 s", "2 s", "2 s"))
+    ex.execute_one("ALTER VIEW b SUSPEND")
+    _stream(ex, c, 16)
+    ex.execute_one("COMMIT")
+    clock.advance(10.0)
+    names = ex.refresh_views()
+    assert "a" in names and "b" not in names
+    # c cannot become fresh while b dams the stream: staleness sticks
+    assert catalog.view("c").runtime.stale_since is not None
+    assert fr.upstream_blocked(catalog, catalog.view("c"))
+    sched = FreshnessScheduler(ex, clock=clock)
+    assert catalog.view("c") not in sched.due(clock())
+    ex.execute_one("ALTER VIEW b RESUME")
+    ex.refresh_views()
+    assert catalog.view("c").runtime.stale_since is None
+
+
+def test_delete_rejected_on_scheduled_or_derived_views():
+    # derived views downstream: rejected at plan time (supports_delete)
+    c, _catalog, _clock, ex = _cascade(lags=("2 s", None, None))
+    _stream(ex, c, 8)
+    with pytest.raises(Exception, match="cannot"):
+        ex.execute_one("DELETE FROM t WHERE id = 3")
+    # no derived views, but the one view is LAGGED: the footnote-2 retrain
+    # cannot replay through an inbox, so the flush itself refuses
+    catalog = Catalog()
+    catalog.register_table("t", c.features, truth=c.labels)
+    catalog.create_view("solo", "t", "svm",
+                        {"cost_mode": "modeled", "target_lag": "2 s"})
+    ex2 = Executor(catalog, group_commit=4)
+    _stream(ex2, c, 4)
+    with pytest.raises(Exception, match="immediate"):
+        ex2.execute_one("DELETE FROM t WHERE id = 3")
+        ex2.execute_one("COMMIT")      # the flush carries the rejection
+
+
+# ---------------------------------------------------------------------------
+# surfaces: SHOW VIEWS / SHOW SCHEDULE / metrics / wire barrier
+# ---------------------------------------------------------------------------
+
+def test_show_views_and_schedule_surfaces():
+    c, catalog, clock, ex = _cascade(lags=("2 s", "downstream", None))
+    res = ex.execute_one("SHOW VIEWS")
+    rows = {r[0]: r for r in res.rows}
+    assert res.columns[:2] == ("view", "on")
+    assert rows["a"][1] == "t" and rows["b"][1] == "a"
+    assert rows["a"][4] == "scheduled" and rows["c"][4] == "immediate"
+    # b declares 'downstream' but its only consumer is immediate, so the
+    # chain degrades: declared lag shown verbatim, effective lag '-'
+    assert rows["b"][5] == "downstream" and rows["b"][6] == "-"
+    assert rows["b"][4] == "immediate"
+    _stream(ex, c, 8)
+    ex.execute_one("COMMIT")
+    clock.advance(1.0)
+    sched_rows = {r[0]: r for r in ex.execute_one("SHOW SCHEDULE").rows}
+    cols = ex.execute_one("SHOW SCHEDULE").columns
+    staleness = dict(zip(cols, sched_rows["a"]))
+    assert staleness["staleness_s"] == pytest.approx(1.0)
+    assert staleness["inbox_rows"] == 8
+    assert staleness["priority"] != "-"
+    ex.execute_one("ALTER VIEW a SUSPEND")
+    rows = {r[0]: r for r in ex.execute_one("SHOW VIEWS").rows}
+    assert rows["a"][4] == "suspended"
+    # the freshness ledger also rides the unified metrics snapshot
+    snap = ex.metrics_snapshot()
+    assert {r["view"] for r in snap["schedule"]} == {"a", "b", "c"}
+
+
+def test_daemon_thread_keeps_staleness_under_lag():
+    """Live mode: a real daemon thread + real clock on a small cascade —
+    observed staleness stays under the effective lag while a stream
+    commits, and the refresher honors gate < wal_commit < pool under the
+    runtime lock witness (exercised via a memory-budgeted root view)."""
+    from repro.analysis import witness
+
+    with witness.enabled():
+        c = synthetic_corpus("live", 240, 12, seed=5)
+        catalog = Catalog()
+        catalog.register_table("t", c.features, truth=c.labels)
+        catalog.create_view("a", "t", "svm",
+                            {"policy": "eager", "cost_mode": "modeled",
+                             "memory_budget": 0.5, "target_lag": "2 s"})
+        catalog.create_view("b", "a", "svm",
+                            {"cost_mode": "modeled",
+                             "target_lag": "downstream"})
+        ex = Executor(catalog, group_commit=8)
+        errors = []
+        done = threading.Event()
+
+        def ticker(sched):
+            try:
+                while not done.is_set():
+                    sched.tick()
+                    done.wait(0.005)
+            except Exception as e:      # LockOrderError included
+                errors.append(e)
+
+        sched = FreshnessScheduler(ex, interval=0.01)
+        worker = threading.Thread(target=ticker, args=(sched,))
+        worker.start()
+        peak = 0.0
+        for j in range(120):
+            i = j % 240
+            ex.execute_one(f"INSERT INTO t (id, label) VALUES "
+                           f"({i}, {int(c.labels[i])})")
+            time.sleep(0.012)           # ~1.5 s of stream: past headroom
+            now = catalog.clock()
+            for vd in catalog.topo_order():
+                if catalog.effective_lag(vd.name) is not None:
+                    peak = max(peak, vd.runtime.staleness(now))
+        done.set()
+        worker.join(timeout=30)
+        assert not worker.is_alive()
+        assert errors == []
+        assert peak <= 2.0, f"staleness {peak:.3f}s blew the 2 s lag"
+        assert ex.metrics.counter("scheduler.refreshes").value > 0
+        ex.refresh_views()
+
+
+def test_wire_refresh_barrier_and_typed_client():
+    """The wire `refresh` op is a freshness barrier; the redesigned
+    client surface (alter_view/suspend/resume/refresh/show) drives the
+    whole lifecycle; legacy query()/execute() emit identical frames."""
+    from repro.rdbms import start_server_thread
+    from repro.rdbms.client import SqlClient
+
+    c = synthetic_corpus("wire", 200, 10, seed=9)
+    catalog = Catalog()
+    catalog.register_table("t", c.features, truth=c.labels)
+    ex = Executor(catalog, group_commit=4)
+    handle = start_server_thread(ex)
+    try:
+        with SqlClient.connect(*handle.address) as cl:
+            cl.run("CREATE CLASSIFICATION VIEW a ON t USING MODEL svm "
+                   "WITH (cost_mode = modeled, target_lag = '60 s');"
+                   "CREATE CLASSIFICATION VIEW b ON a USING MODEL svm "
+                   "WITH (cost_mode = modeled, target_lag = 'downstream')")
+            for j in range(12):
+                cl.run(f"INSERT INTO t (id, label) VALUES "
+                       f"({j}, {int(c.labels[j])})")
+            rows = {r.view: r for r in cl.show("schedule")}
+            assert rows["a"].inbox_rows == 12     # queued, lag is 60 s
+            assert cl.refresh() == ["a", "b"]     # the barrier drains it
+            rows = {r.view: r for r in cl.show("schedule")}
+            assert rows["a"].inbox_rows == 0
+            assert rows["a"].staleness_s == 0.0
+            cl.suspend("a")
+            assert {r.view: r.state for r in cl.show("views")}["a"] \
+                == "suspended"
+            cl.resume("a")
+            # lag 'downstream' resolves UP the DAG from consumers: give b
+            # a numeric lag and point a at its consumers
+            cl.alter_view("a", target_lag="downstream")
+            cl.alter_view("b", target_lag="1 s")
+            rows = {r.view: r for r in cl.show("views")}
+            assert rows["a"].target_lag == "downstream"
+            assert rows["a"].effective_lag == "1 s"
+            assert rows["b"].target_lag == "1 s"
+            # legacy wrappers: same wire frames, same results, deprecated
+            with pytest.deprecated_call():
+                legacy = cl.query_one("SHOW SCHEDULE")
+            assert legacy.rows == cl.run_one("SHOW SCHEDULE").rows
+    finally:
+        handle.stop()
+
+
+def test_legacy_client_wrappers_pin_wire_format():
+    """query()/query_one()/execute() must emit byte-identical request
+    frames to run()/run_one()/run_prepared() — embedders speaking the old
+    surface stay protocol-compatible."""
+    from repro.rdbms.client import SqlClient
+
+    sent = []
+
+    class Probe(SqlClient):
+        def __init__(self):
+            super().__init__(sock=None)
+
+        def request(self, obj):
+            sent.append(obj)
+            return {"ok": True, "results": [{"columns": [], "rows": []}]}
+
+    p = Probe()
+    p.run("SHOW TABLES")
+    with pytest.deprecated_call():
+        p.query("SHOW TABLES")
+    p.run_prepared("pt", [1, 2])
+    with pytest.deprecated_call():
+        p.execute("pt", [1, 2])
+    assert sent[0] == sent[1] == {"op": "query", "sql": "SHOW TABLES"}
+    assert sent[2] == sent[3] == {"op": "execute", "name": "pt",
+                                  "params": [1, 2]}

@@ -193,13 +193,13 @@ def test_server_ddl_dml_select_roundtrip():
     host, port = handle.address
     try:
         with SqlClient.connect(host, port) as c:
-            c.query("CREATE TABLE papers FROM CORPUS synthetic "
+            c.run("CREATE TABLE papers FROM CORPUS synthetic "
                     "WITH (scale = 0.08); "
                     "CREATE CLASSIFICATION VIEW topics ON papers "
                     "USING MODEL svm WITH (policy = hybrid)")
             epoch0 = c.ping()
-            c.query("INSERT INTO papers (id, label) VALUES (3, 1)")
-            res = c.query_one("SELECT id, label FROM topics WHERE id = 3")
+            c.run("INSERT INTO papers (id, label) VALUES (3, 1)")
+            res = c.run_one("SELECT id, label FROM topics WHERE id = 3")
             assert res.rows and res.rows[0][0] == 3
             assert res.epoch == epoch0 + 1  # read-your-writes flushed
             assert c.ping() == epoch0 + 1
@@ -213,9 +213,9 @@ def test_statement_error_keeps_the_session_alive():
     try:
         with SqlClient.connect(host, port) as c:
             with pytest.raises(ServerError):
-                c.query("SELECT label FROM nope WHERE id = 1")
+                c.run("SELECT label FROM nope WHERE id = 1")
             sid = c.session_id
-            res = c.query_one("SELECT label FROM v WHERE id = 1 AND view = 0")
+            res = c.run_one("SELECT label FROM v WHERE id = 1 AND view = 0")
             assert res.rows and c.session_id == sid   # same session survived
     finally:
         handle.stop()
@@ -232,7 +232,7 @@ def test_statement_error_carries_type_and_logs_server_side(caplog):
             with caplog.at_level(logging.WARNING,
                                  logger="repro.rdbms.server"):
                 with pytest.raises(ServerError) as ei:
-                    c.query("SELECT label FROM nope WHERE id = 1")
+                    c.run("SELECT label FROM nope WHERE id = 1")
             assert ei.value.error_type == "PlanError"
             assert str(ei.value).startswith("PlanError: ")
             logged = [r for r in caplog.records
@@ -252,10 +252,10 @@ def test_wire_sessions_have_private_prepared_namespaces():
                 SqlClient.connect(host, port) as c2:
             c1.prepare("pt", "SELECT label FROM v WHERE id = ? AND view = ?")
             c2.prepare("pt", "SELECT id FROM v WHERE class = ?")
-            assert c1.execute("pt", [3, 1]).columns == ["label"]
-            assert c2.execute("pt", [2]).columns == ["id"]
+            assert c1.run_prepared("pt", [3, 1]).columns == ["label"]
+            assert c2.run_prepared("pt", [2]).columns == ["id"]
             with pytest.raises(ServerError):
-                c1.execute("pt", [2])       # c2's arity never leaked into c1
+                c1.run_prepared("pt", [2])       # c2's arity never leaked into c1
     finally:
         handle.stop()
 
@@ -292,9 +292,9 @@ def test_concurrent_swarm_equals_serial_replay():
                 for _ in range(30):
                     i = int(rng.integers(0, n))
                     if rng.random() < 0.7:
-                        c.execute("pt", [i, int(rng.integers(0, k))])
+                        c.run_prepared("pt", [i, int(rng.integers(0, k))])
                     else:
-                        c.query(f"INSERT INTO t (id, class) VALUES "
+                        c.run(f"INSERT INTO t (id, class) VALUES "
                                 f"({i}, {int(_CORPUS.classes[i])})")
         except Exception as e:              # noqa: BLE001
             errors.append((idx, e))
